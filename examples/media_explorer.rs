@@ -1,0 +1,54 @@
+//! Design-space explorer: sweep EP media x mechanisms x a workload trio
+//! and report normalized execution time — the kind of study Fig. 9c
+//! distills.
+//!
+//! ```sh
+//! cargo run --release --example media_explorer [workload ...]
+//! ```
+use cxl_gpu::coordinator::config::SystemConfig;
+use cxl_gpu::coordinator::runner::run_with;
+use cxl_gpu::media::MediaKind;
+use cxl_gpu::util::bench::Table;
+use cxl_gpu::workloads::table1b::spec;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let workloads: Vec<&str> = if args.is_empty() {
+        vec!["vadd", "sort", "bfs"]
+    } else {
+        args.iter().map(String::as_str).collect()
+    };
+    let medias =
+        [MediaKind::Ddr5, MediaKind::Optane, MediaKind::Znand, MediaKind::Nand];
+    for wl in workloads {
+        let mut base_cfg = SystemConfig::named("gpu-dram", MediaKind::Ddr5);
+        base_cfg.ssd_scale();
+        let base = run_with(spec(wl), &base_cfg);
+        let mut t = Table::new(
+            &format!("{wl}: exec time normalized to GPU-DRAM"),
+            &["media", "CXL", "CXL-SR", "CXL-DS", "best mechanism"],
+        );
+        for media in medias {
+            let mut row = Vec::new();
+            let mut best = ("CXL", f64::INFINITY);
+            for cfg_name in ["cxl", "cxl-sr", "cxl-ds"] {
+                let mut cfg = SystemConfig::named(cfg_name, media);
+                cfg.ssd_scale();
+                let r = run_with(spec(wl), &cfg);
+                let n = r.normalized_to(&base);
+                if n < best.1 {
+                    best = (cfg_name, n);
+                }
+                row.push(format!("{n:.1}x"));
+            }
+            t.rowv(vec![
+                media.name().into(),
+                row[0].clone(),
+                row[1].clone(),
+                row[2].clone(),
+                format!("{} ({:.1}x)", best.0, best.1),
+            ]);
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,51 @@
+//! Quickstart: simulate one workload on the CXL-expanded GPU and print a
+//! human-readable report.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+use cxl_gpu::coordinator::config::SystemConfig;
+use cxl_gpu::coordinator::runner::run_with;
+use cxl_gpu::media::MediaKind;
+use cxl_gpu::util::bench::Table;
+use cxl_gpu::workloads::table1b::spec;
+
+fn main() {
+    println!("CXL-GPU quickstart: vadd across the paper's five configurations\n");
+    let mut t = Table::new(
+        "vadd (Z-NAND expander where applicable)",
+        &["config", "exec (ms)", "vs ideal", "llc hit", "ep-DRAM hit", "notes"],
+    );
+    let mut ideal_time = None;
+    for name in ["gpu-dram", "uvm", "gds", "cxl", "cxl-sr", "cxl-ds"] {
+        let media = if name == "gpu-dram" || name == "uvm" {
+            MediaKind::Ddr5
+        } else {
+            MediaKind::Znand
+        };
+        let mut cfg = SystemConfig::named(name, media);
+        cfg.ssd_scale(); // one shared scale so rows are comparable
+        let r = run_with(spec("vadd"), &cfg);
+        let exec = r.metrics.exec_time as f64;
+        let ideal = *ideal_time.get_or_insert(exec);
+        let notes = match name {
+            "gpu-dram" => "ideal: all data on-device",
+            "uvm" => "page faults via host runtime",
+            "gds" => "faults + SSD reads",
+            "cxl" => "direct CXL.mem access",
+            "cxl-sr" => "+ speculative read",
+            "cxl-ds" => "+ deterministic store",
+            _ => "",
+        };
+        t.rowv(vec![
+            name.into(),
+            format!("{:.3}", r.metrics.exec_ms()),
+            format!("{:.1}x", exec / ideal),
+            format!("{:.0}%", r.metrics.llc.hit_rate() * 100.0),
+            format!("{:.0}%", r.metrics.ep_hit_rate() * 100.0),
+            notes.into(),
+        ]);
+    }
+    t.print();
+    println!("\nSee `cxl-gpu experiments` for the full figure reproductions.");
+}

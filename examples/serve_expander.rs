@@ -1,0 +1,81 @@
+//! Serve the simulated root complex over a socket: a tiny memory-request
+//! service in the style of a disaggregated-memory daemon. Requests are
+//! `R <hex-addr>` / `W <hex-addr>` lines; responses carry the simulated
+//! completion latency in nanoseconds.
+//!
+//! ```sh
+//! cargo run --release --example serve_expander &   # listens on 127.0.0.1:7999
+//! printf 'R 1000\nW 2000\nR 1000\nQ\n' | nc 127.0.0.1 7999
+//! ```
+//!
+//! (std::net + threads; the offline build has no tokio.)
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::sync::{Arc, Mutex};
+
+use cxl_gpu::cxl::ControllerKind;
+use cxl_gpu::media::{SsdModel, SsdParams};
+use cxl_gpu::rootcomplex::{EpBackend, RootComplex, RootPort, SrPolicy};
+use cxl_gpu::sim::{ps_to_ns, Time};
+use cxl_gpu::util::prng::Pcg32;
+
+fn main() {
+    let ports = (0..2)
+        .map(|i| {
+            RootPort::new(
+                i,
+                ControllerKind::Panmnesia,
+                EpBackend::Ssd(SsdModel::new(SsdParams::znand())),
+                SrPolicy::Window,
+                true,
+                1 << 20,
+            )
+        })
+        .collect();
+    let mut rc = RootComplex::new(ports);
+    rc.enumerate(64 << 20).expect("HDM enumerate");
+    let shared = Arc::new(Mutex::new((rc, Pcg32::new(7, 7), 0u64 as Time)));
+
+    let listener = TcpListener::bind("127.0.0.1:7999").expect("bind 127.0.0.1:7999");
+    println!("serve_expander: listening on 127.0.0.1:7999 (R <hex> | W <hex> | Q)");
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let shared = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            let mut out = stream.try_clone().expect("clone");
+            let reader = BufReader::new(stream);
+            for line in reader.lines() {
+                let Ok(line) = line else { break };
+                let mut parts = line.split_whitespace();
+                let (op, addr) = (parts.next(), parts.next());
+                let reply = match (op, addr.and_then(|a| u64::from_str_radix(a, 16).ok())) {
+                    (Some("R"), Some(addr)) => {
+                        let mut g = shared.lock().unwrap();
+                        let (rc, _, now) = &mut *g;
+                        let t = *now;
+                        let outp = rc.load(t, addr % (64 << 20), 64);
+                        *now = t + 1000; // 1 ns between arrivals
+                        format!("OK R {:.1}ns path={:?}\n", ps_to_ns(outp.done - t), outp.path)
+                    }
+                    (Some("W"), Some(addr)) => {
+                        let mut g = shared.lock().unwrap();
+                        let (rc, rng, now) = &mut *g;
+                        let t = *now;
+                        let outp = rc.store(t, addr % (64 << 20), 64, rng);
+                        *now = t + 1000;
+                        format!(
+                            "OK W {:.1}ns buffered={}\n",
+                            ps_to_ns(outp.ack - t),
+                            outp.buffered
+                        )
+                    }
+                    (Some("Q"), _) => break,
+                    _ => "ERR usage: R <hex-addr> | W <hex-addr> | Q\n".into(),
+                };
+                if out.write_all(reply.as_bytes()).is_err() {
+                    break;
+                }
+            }
+        });
+    }
+}

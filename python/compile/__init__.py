@@ -1,0 +1,4 @@
+"""Build-time-only package: Layer-2 JAX workload graphs + Layer-1 Pallas
+kernels + the AOT lowering driver. Never imported at simulation time —
+``make artifacts`` runs :mod:`compile.aot` once and the Rust binary loads
+the emitted HLO text via PJRT."""

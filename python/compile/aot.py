@@ -1,0 +1,107 @@
+"""AOT driver: lower every Layer-2 workload graph to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(behind the published ``xla`` rust crate) rejects (``proto.id() <=
+INT_MAX``). The HLO text parser reassigns ids, so text round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs, per workload:
+  artifacts/<name>.hlo.txt   — the lowered module
+  artifacts/manifest.json    — input shapes/dtypes + output arity, consumed
+                               by rust/src/runtime/manifest.rs
+
+``--stats`` additionally prints per-module HLO op histograms (the L2 perf
+check: one fused module per workload, no duplicated kernel bodies).
+"""
+
+import argparse
+import collections
+import hashlib
+import json
+import os
+import re
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import WORKLOADS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def op_histogram(hlo_text: str) -> dict:
+    """Count HLO instruction opcodes (cheap text-level cost analysis)."""
+    hist = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = re.match(
+            r"\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*[\w\[\],<>{}\s]*\s([a-z][\w\-]*)\(",
+            line,
+        )
+        if m:
+            hist[m.group(2)] += 1
+    return dict(hist)
+
+
+def lower_one(name: str, out_dir: str, stats: bool) -> dict:
+    fn, specs = WORKLOADS[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_avals = jax.eval_shape(fn, *specs)
+    entry = {
+        "name": name,
+        "hlo": f"{name}.hlo.txt",
+        "inputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+        ],
+        "outputs": [
+            {"shape": list(o.shape), "dtype": str(o.dtype)} for o in out_avals
+        ],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    if stats:
+        hist = op_histogram(text)
+        top = sorted(hist.items(), key=lambda kv: -kv[1])[:8]
+        print(f"  {name:8s} {len(text):>9d} chars  top-ops: "
+              + " ".join(f"{k}={v}" for k, v in top))
+    return entry
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="comma-separated workload subset")
+    ap.add_argument("--stats", action="store_true", help="print HLO op histograms")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    names = args.only.split(",") if args.only else list(WORKLOADS)
+    unknown = [n for n in names if n not in WORKLOADS]
+    if unknown:
+        print(f"unknown workloads: {unknown}", file=sys.stderr)
+        return 2
+
+    manifest = {"workloads": []}
+    for name in names:
+        print(f"lowering {name} ...", flush=True)
+        manifest["workloads"].append(lower_one(name, args.out, args.stats))
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['workloads'])} artifacts + manifest to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

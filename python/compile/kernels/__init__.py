@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for the CXL-GPU workload suite.
+
+Each kernel has a pure-jnp oracle of the same name in :mod:`ref`;
+``python/tests/test_kernels.py`` sweeps shapes/dtypes with hypothesis and
+asserts allclose. All kernels run ``interpret=True`` (CPU PJRT cannot
+execute Mosaic custom-calls); real-TPU projections are in DESIGN.md §9.
+"""
+
+from .conv import conv3
+from .elementwise import saxpy, vadd
+from .gemm import gemm
+from .reduce import rsum
+from .stencil import stencil
+
+__all__ = ["conv3", "saxpy", "vadd", "gemm", "rsum", "stencil"]

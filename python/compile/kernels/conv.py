@@ -1,0 +1,61 @@
+"""Layer-1 Pallas kernel: direct 3x3 'same' convolution (``conv3``).
+
+Compute core of the paper's ``conv3`` workload. TPU adaptation: instead
+of the CUDA halo-loaded shared-memory tile, each grid step slices a row
+strip (plus 2-row halo) out of the zero-padded input staged in VMEM and
+applies the 9 taps as shifted VPU multiply-adds — no im2col, no gather.
+
+Standard BlockSpecs cannot express overlapping (haloed) blocks, so the
+padded input is passed whole and the kernel slices its strip with
+``program_id``; on real TPU this is the pattern Mosaic double-buffers as
+consecutive row strips (DESIGN.md §9).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output rows per grid step; the kernel reads STRIP+2 input rows (halo).
+STRIP = 128
+
+
+def _conv3_kernel(xp_ref, w_ref, o_ref, *, strip: int, width: int):
+    i = pl.program_id(0)
+    # Strip + halo from the zero-padded image: rows [i*strip, i*strip+strip+2).
+    xp = jax.lax.dynamic_slice(
+        xp_ref[...], (i * strip, 0), (strip + 2, width + 2)
+    ).astype(jnp.float32)
+    acc = jnp.zeros((strip, width), dtype=jnp.float32)
+    for di in range(3):
+        for dj in range(3):
+            acc += w_ref[di, dj].astype(jnp.float32) * jax.lax.dynamic_slice(
+                xp, (di, dj), (strip, width)
+            )
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@jax.jit
+def conv3(x, w):
+    """3x3 zero-padded 'same' convolution: x (H, W), w (3, 3) -> (H, W)."""
+    hgt, width = x.shape
+    strip = min(STRIP, hgt)
+    n_i = pl.cdiv(hgt, strip)
+    # 1-px conv halo on all sides, plus bottom fill so every strip slice is
+    # in-bounds (rows written from fill never land in the output: the
+    # output BlockSpec clips the last partial strip).
+    pad_bottom = n_i * strip - hgt + 1
+    xp = jnp.pad(x, ((1, pad_bottom + 1), (1, 1)))
+    return pl.pallas_call(
+        functools.partial(_conv3_kernel, strip=strip, width=width),
+        grid=(n_i,),
+        in_specs=[
+            # Whole padded image visible to every step (sliced in-kernel).
+            pl.BlockSpec(xp.shape, lambda i: (0, 0)),
+            pl.BlockSpec((3, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((strip, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hgt, width), x.dtype),
+        interpret=True,
+    )(xp, w)

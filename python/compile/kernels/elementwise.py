@@ -1,0 +1,85 @@
+"""Layer-1 Pallas kernels: bandwidth-bound elementwise ops (vadd, saxpy).
+
+These are the compute cores of the paper's load-intensive 1D workloads
+(``vadd``, ``saxpy``) — the workloads where Speculative Read shines
+(15.6x in Fig. 9b) because their access streams are perfectly sequential.
+
+TPU adaptation: the CUDA grid-stride loop becomes a 1D Pallas grid over
+(8, 128)-lane-aligned row blocks; the VPU (not the MXU) executes the adds.
+Inputs are reshaped to 2D (rows x 128 lanes) by the wrappers so arbitrary
+1D lengths stay tile-aligned.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step of the (rows, 128) working view. 256 rows x 128 lanes
+# x 4 B x 3 operands = 384 KiB of VMEM per step — safely inside budget
+# while long enough to amortize the HBM->VMEM pipeline.
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _vadd_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def _saxpy_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0, 0] * x_ref[...] + y_ref[...]
+
+
+def _as_rows(v):
+    """View a 1D vector as (rows, LANES), padding to a lane multiple."""
+    n = v.shape[0]
+    rows = pl.cdiv(n, LANES)
+    pad = rows * LANES - n
+    if pad:
+        v = jnp.pad(v, (0, pad))
+    return v.reshape(rows, LANES), n
+
+
+@jax.jit
+def vadd(x, y):
+    """Elementwise ``x + y`` over 1D vectors of any length."""
+    xv, n = _as_rows(x)
+    yv, _ = _as_rows(y)
+    rows = xv.shape[0]
+    block = min(BLOCK_ROWS, rows)
+    out = pl.pallas_call(
+        _vadd_kernel,
+        grid=(pl.cdiv(rows, block),),
+        in_specs=[
+            pl.BlockSpec((block, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xv.shape, x.dtype),
+        interpret=True,
+    )(xv, yv)
+    return out.reshape(-1)[:n]
+
+
+@jax.jit
+def saxpy(a, x, y):
+    """``a * x + y`` with scalar ``a`` shaped (1, 1), 1D ``x``/``y``."""
+    xv, n = _as_rows(x)
+    yv, _ = _as_rows(y)
+    rows = xv.shape[0]
+    block = min(BLOCK_ROWS, rows)
+    out = pl.pallas_call(
+        _saxpy_kernel,
+        grid=(pl.cdiv(rows, block),),
+        in_specs=[
+            # Scalar broadcast tile: every grid step sees the same (1,1).
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xv.shape, x.dtype),
+        interpret=True,
+    )(a, xv, yv)
+    return out.reshape(-1)[:n]

@@ -1,0 +1,83 @@
+"""Layer-1 Pallas kernel: VMEM-tiled dense GEMM with f32 accumulation.
+
+TPU adaptation of the paper's ``gemm`` workload (Rodinia CUDA matmul):
+the CUDA threadblock tiling over shared memory becomes a BlockSpec
+HBM->VMEM schedule, and the inner product targets the MXU systolic array
+(f32 accumulate). The K dimension is walked by the innermost grid axis;
+the accumulator tile lives in a VMEM scratch buffer across K steps.
+
+``interpret=True`` is mandatory in this environment: real TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default MXU-friendly tile sizes. 128x128 matches the MXU systolic array
+# geometry; see DESIGN.md §9 for the VMEM budget (≈256 KiB per grid step).
+TILE_M = 128
+TILE_N = 128
+TILE_K = 128
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step: acc += x_tile @ y_tile.
+
+    The accumulator scratch persists across the K axis (innermost grid
+    dim); on the last K step it is flushed to the output tile.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "tile_k"))
+def gemm(x, y, *, tile_m: int = TILE_M, tile_n: int = TILE_N, tile_k: int = TILE_K):
+    """Tiled matmul ``x @ y`` via Pallas.
+
+    x: (M, K), y: (K, N) -> (M, N). M, N, K need not divide the tile
+    sizes; Pallas masks the ragged edge blocks.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    tile_m = min(tile_m, m)
+    tile_n = min(tile_n, n)
+    tile_k = min(tile_k, k)
+    n_k = pl.cdiv(k, tile_k)
+    # Zero-pad the contraction axis to a tile multiple: interpret-mode
+    # ragged blocks are padded with unspecified values, which must not
+    # enter the accumulator. (Ragged M/N are safe — clipped on write.)
+    pad_k = n_k * tile_k - k
+    if pad_k:
+        x = jnp.pad(x, ((0, 0), (0, pad_k)))
+        y = jnp.pad(y, ((0, pad_k), (0, 0)))
+
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, n_k=n_k),
+        grid=(pl.cdiv(m, tile_m), pl.cdiv(n, tile_n), n_k),
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((tile_m, tile_n), jnp.float32)],
+        interpret=True,
+    )(x, y)

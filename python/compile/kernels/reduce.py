@@ -1,0 +1,58 @@
+"""Layer-1 Pallas kernel: row-reduction sum (``rsum``).
+
+Compute core of the paper's compute-intensive ``rsum`` workload
+(Rodinia-style reduction). TPU adaptation: the CUDA tree reduction in
+shared memory becomes a two-level reduce — the VPU reduces each VMEM tile
+along the lane axis, and a f32 scratch column accumulates partial sums
+across the column-tile grid axis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE_M = 256
+TILE_N = 512
+
+
+def _rsum_kernel(x_ref, o_ref, acc_ref, *, n_j: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.sum(
+        x_ref[...].astype(jnp.float32), axis=-1, keepdims=True
+    )
+
+    @pl.when(j == n_j - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@jax.jit
+def rsum(x):
+    """Row sums of a 2D array: (M, N) -> (M, 1), f32 accumulation."""
+    m, n = x.shape
+    tile_m = min(TILE_M, m)
+    tile_n = min(TILE_N, n)
+    # Zero-pad the reduced axis to a tile multiple: interpret-mode ragged
+    # blocks are padded with unspecified values, which must not enter the
+    # accumulation. (Ragged M is safe — those rows are clipped on write.)
+    n_j = pl.cdiv(n, tile_n)
+    pad_n = n_j * tile_n - n
+    if pad_n:
+        x = jnp.pad(x, ((0, 0), (0, pad_n)))
+    return pl.pallas_call(
+        functools.partial(_rsum_kernel, n_j=n_j),
+        grid=(pl.cdiv(m, tile_m), n_j),
+        in_specs=[pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tile_m, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), x.dtype),
+        scratch_shapes=[pltpu.VMEM((tile_m, 1), jnp.float32)],
+        interpret=True,
+    )(x)

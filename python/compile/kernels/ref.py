@@ -1,0 +1,88 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal for Layer 1: pytest compares each
+Pallas kernel (run with ``interpret=True``) against the function of the
+same name here, across a hypothesis-driven sweep of shapes and dtypes.
+
+Nothing in this module may import pallas — it must stay a plain-jnp
+executable specification.
+"""
+
+import jax.numpy as jnp
+
+
+def gemm(x, y):
+    """Dense matmul with f32 accumulation: ``x @ y``.
+
+    x: (M, K), y: (K, N) -> (M, N). Accumulates in float32 regardless of
+    input dtype (mirrors the MXU's accumulate-in-f32 behaviour).
+    """
+    out = jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def vadd(x, y):
+    """Elementwise vector add: ``x + y``."""
+    return x + y
+
+
+def saxpy(a, x, y):
+    """Scaled vector add: ``a * x + y`` with scalar ``a`` shaped (1, 1)."""
+    return a * x + y
+
+
+def rsum(x):
+    """Row-reduction sum: (M, N) -> (M, 1), f32 accumulation."""
+    return jnp.sum(x.astype(jnp.float32), axis=-1, keepdims=True).astype(x.dtype)
+
+
+def conv3(x, w):
+    """3x3 'same' convolution of a single-channel 2D image.
+
+    x: (H, W), w: (3, 3) -> (H, W), zero padding. This is the compute core
+    of the paper's ``conv3`` workload (Rodinia-style convolution).
+    """
+    xp = jnp.pad(x.astype(jnp.float32), ((1, 1), (1, 1)))
+    out = jnp.zeros(x.shape, dtype=jnp.float32)
+    H, W = x.shape
+    for di in range(3):
+        for dj in range(3):
+            out = out + w[di, dj].astype(jnp.float32) * xp[di:di + H, dj:dj + W]
+    return out.astype(x.dtype)
+
+
+def stencil(x):
+    """5-point Jacobi stencil with copied boundary, one sweep.
+
+    x: (H, W) -> (H, W): out[i,j] = 0.25*(up+down+left+right) on the
+    interior; boundary rows/cols are copied through unchanged.
+    """
+    xf = jnp.asarray(x).astype(jnp.float32)
+    interior = 0.25 * (xf[:-2, 1:-1] + xf[2:, 1:-1] + xf[1:-1, :-2] + xf[1:-1, 2:])
+    out = xf.at[1:-1, 1:-1].set(interior)
+    return out.astype(x.dtype)
+
+
+def gauss_step(a, pivot_row):
+    """One Gaussian-elimination step on augmented matrix ``a`` (M, N):
+    eliminate column ``pivot_row`` in all rows below ``pivot_row``.
+
+    Compute core of the paper's ``gauss`` workload. Assumes a nonzero
+    pivot (test inputs are diagonally dominated).
+    """
+    a = a.astype(jnp.float32)
+    pivot = a[pivot_row, pivot_row]
+    factors = a[:, pivot_row] / pivot
+    rows = jnp.arange(a.shape[0])
+    mask = (rows > pivot_row).astype(jnp.float32)[:, None]
+    return a - mask * factors[:, None] * a[pivot_row][None, :]
+
+
+def spmv_gather(values, col_idx, x):
+    """Gather-multiply used by the gnn composite: ``values * x[col_idx]``.
+
+    values: (NNZ,), col_idx: (NNZ,) int32, x: (N,) -> (NNZ,).
+    Models the irregular-access multiply of sparse matrix-vector products
+    (bfs/gnn style); the segment reduction is done by the caller.
+    """
+    return values * jnp.take(x, col_idx, axis=0)

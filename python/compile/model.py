@@ -1,0 +1,229 @@
+"""Layer-2 JAX workload graphs for the CXL-GPU evaluation suite.
+
+Each function here is the *compute* of one Table-1b workload (11
+Rodinia-style programs + the two real-world composites gnn and mri),
+expressed as a jittable JAX graph that calls the Layer-1 Pallas kernels
+for its hot-spot. ``aot.py`` lowers every graph once to HLO text; the
+Rust coordinator executes the artifacts via PJRT and drives the memory-
+system timing simulator with the matching access streams
+(``rust/src/workloads/``).
+
+All graphs return tuples (lowered with ``return_tuple=True``) so the Rust
+side can unwrap uniformly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv3, gemm, rsum, saxpy, stencil, vadd
+
+# ---------------------------------------------------------------------------
+# Compute-intensive workloads
+# ---------------------------------------------------------------------------
+
+
+def rsum_graph(x):
+    """rsum: repeated row-reduction; compute ratio 31.4%, load 53.3%."""
+    s = rsum(x)
+    # Normalize rows by their sums and reduce again — keeps arithmetic
+    # intensity high relative to bytes moved, as Table 1b characterizes.
+    y = x / (s + 1.0)
+    return (rsum(y),)
+
+
+def stencil_graph(x, steps: int = 8):
+    """stencil: ``steps`` Jacobi sweeps over a 2D grid."""
+
+    def body(_, v):
+        return stencil(v)
+
+    return (jax.lax.fori_loop(0, steps, body, x),)
+
+
+def sort_graph(x):
+    """sort: full sort of a vector (binary-tree 'Around' access pattern)."""
+    s = jnp.sort(x)
+    # Rank lookup makes the graph produce both the sorted keys and an
+    # order-dependent checksum, mirroring Rodinia's key-index output pair.
+    return (s, jnp.argsort(x).astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Load-intensive workloads
+# ---------------------------------------------------------------------------
+
+
+def gemm_graph(x, y):
+    """gemm: dense matmul; load ratio 99.9%."""
+    return (gemm(x, y),)
+
+
+def vadd_graph(x, y):
+    """vadd: 1D vector add; the paper's flagship SR workload (15.6x)."""
+    return (vadd(x, y),)
+
+
+def saxpy_graph(a, x, y):
+    """saxpy: a*x + y."""
+    return (saxpy(a, x, y),)
+
+
+def conv3_graph(x, w):
+    """conv3: 3x3 'same' convolution."""
+    return (conv3(x, w),)
+
+
+def path_graph(cost):
+    """path: Rodinia pathfinder — DP min-reduction down the rows.
+
+    cost: (H, W). Row i adds min(prev[j-1], prev[j], prev[j+1]).
+    Irregular 'Rand'-leaning access in the paper's taxonomy (frontier
+    jumps), modest SR benefit.
+    """
+    cost = cost.astype(jnp.float32)
+
+    def step(prev, row):
+        left = jnp.pad(prev[:-1], (1, 0), constant_values=jnp.inf)
+        right = jnp.pad(prev[1:], (0, 1), constant_values=jnp.inf)
+        best = jnp.minimum(prev, jnp.minimum(left, right))
+        nxt = row + best
+        return nxt, nxt[0]
+
+    final, trace = jax.lax.scan(step, cost[0], cost[1:])
+    return (final, trace)
+
+
+# ---------------------------------------------------------------------------
+# Store-intensive workloads
+# ---------------------------------------------------------------------------
+
+
+def cfd_graph(rho, mom, energy, steps: int = 4):
+    """cfd: simplified explicit Euler flux update over 1D fields.
+
+    Store-intensive: every step writes all three conserved fields.
+    """
+    rho = rho.astype(jnp.float32)
+    mom = mom.astype(jnp.float32)
+    energy = energy.astype(jnp.float32)
+
+    def body(_, state):
+        r, m, e = state
+        v = m / (r + 1e-6)
+        p = 0.4 * (e - 0.5 * m * v)
+        flux_r = m
+        flux_m = m * v + p
+        flux_e = v * (e + p)
+
+        def ddx(f):
+            return 0.5 * (jnp.roll(f, -1) - jnp.roll(f, 1))
+
+        dt = 0.01
+        return (r - dt * ddx(flux_r), m - dt * ddx(flux_m), e - dt * ddx(flux_e))
+
+    r, m, e = jax.lax.fori_loop(0, steps, body, (rho, mom, energy))
+    return (r, m, e)
+
+
+def gauss_graph(a):
+    """gauss: forward Gaussian elimination of an augmented (N, N+1) system.
+
+    'Around' access pattern: runtime decides current vs previous row.
+    """
+    a = a.astype(jnp.float32)
+    n = a.shape[0]
+
+    def body(i, acc):
+        pivot = acc[i, i]
+        factors = acc[:, i] / pivot
+        rows = jnp.arange(n)
+        mask = (rows > i).astype(jnp.float32)[:, None]
+        return acc - mask * factors[:, None] * acc[i][None, :]
+
+    return (jax.lax.fori_loop(0, n - 1, body, a),)
+
+
+def bfs_graph(adj, src_onehot, steps: int = 8):
+    """bfs: frontier expansion by boolean-semiring matvec over a dense
+    adjacency matrix; store-intensive + 'Rand' access in the taxonomy.
+
+    adj: (N, N) f32 0/1, src_onehot: (N,) f32 one-hot source.
+    Returns per-node BFS level (inf where unreached within ``steps``).
+    """
+    adj = adj.astype(jnp.float32)
+    n = adj.shape[0]
+    big = jnp.float32(1e9)
+
+    def body(i, state):
+        level, frontier = state
+        # Neighbour reachability: any frontier node with an edge to v.
+        reach = jnp.minimum(adj.T @ frontier, 1.0)
+        newly = jnp.where((reach > 0) & (level >= big), 1.0, 0.0)
+        level = jnp.where(newly > 0, jnp.float32(i + 1), level)
+        return (level, newly)
+
+    level0 = jnp.where(src_onehot > 0, 0.0, big)
+    level, _ = jax.lax.fori_loop(0, steps, body, (level0, src_onehot))
+    return (level,)
+
+
+# ---------------------------------------------------------------------------
+# Real-world composites (paper: gnn = bfs + vadd + gemm; mri = sort + conv3)
+# ---------------------------------------------------------------------------
+
+
+def gnn_graph(adj, feats, weight, src_onehot):
+    """gnn: one message-passing layer — BFS reachability mask, neighbour
+    aggregation (vadd-style), then a dense feature transform (gemm).
+
+    adj: (N, N), feats: (N, D), weight: (D, D), src_onehot: (N,).
+    """
+    (level,) = bfs_graph(adj, src_onehot, steps=4)
+    reach = (level < 1e9).astype(feats.dtype)[:, None]
+    agg = gemm(adj.astype(feats.dtype), feats) + feats  # aggregate + self
+    out = gemm(agg * reach, weight)
+    return (out, level)
+
+
+def mri_graph(kspace, w):
+    """mri: gridding-style reconstruction — sort sample magnitudes, then a
+    conv3 smoothing pass over the (H, W) image plane.
+
+    kspace: (H, W) image-domain samples, w: (3, 3) smoothing taps.
+    """
+    flat = kspace.reshape(-1)
+    s = jnp.sort(flat)
+    # Median-shifted image, then conv3 smoothing (the paper composes the
+    # workload from sort + conv3).
+    med = s[s.shape[0] // 2]
+    img = kspace - med
+    return (conv3(img, w), s)
+
+
+# ---------------------------------------------------------------------------
+# Registry used by aot.py: name -> (fn, example-arg builder)
+# ---------------------------------------------------------------------------
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+#: name -> (graph_fn, tuple of ShapeDtypeStructs). Shapes are the AOT
+#: example shapes: deliberately small enough for CPU-interpret pallas but
+#: large enough to exercise multi-tile grids.
+WORKLOADS = {
+    "rsum": (rsum_graph, (_f32(512, 512),)),
+    "stencil": (stencil_graph, (_f32(256, 256),)),
+    "sort": (sort_graph, (_f32(65536),)),
+    "gemm": (gemm_graph, (_f32(256, 256), _f32(256, 256))),
+    "vadd": (vadd_graph, (_f32(262144), _f32(262144))),
+    "saxpy": (saxpy_graph, (_f32(1, 1), _f32(262144), _f32(262144))),
+    "conv3": (conv3_graph, (_f32(256, 256), _f32(3, 3))),
+    "path": (path_graph, (_f32(256, 1024),)),
+    "cfd": (cfd_graph, (_f32(65536), _f32(65536), _f32(65536))),
+    "gauss": (gauss_graph, (_f32(128, 129),)),
+    "bfs": (bfs_graph, (_f32(512, 512), _f32(512))),
+    "gnn": (gnn_graph, (_f32(256, 256), _f32(256, 64), _f32(64, 64), _f32(256))),
+    "mri": (mri_graph, (_f32(128, 128), _f32(3, 3))),
+}

@@ -1,0 +1,83 @@
+"""AOT path correctness: HLO text emission, manifest integrity, and
+round-trip stability of the interchange format."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.model import WORKLOADS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_to_hlo_text_is_deterministic():
+    spec = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    f = lambda x, y: (jnp.matmul(x, y),)
+    a = aot.to_hlo_text(jax.jit(f).lower(spec, spec))
+    b = aot.to_hlo_text(jax.jit(f).lower(spec, spec))
+    assert a == b
+
+
+def test_op_histogram_counts():
+    text = """
+HloModule m
+ENTRY e {
+  %p0 = f32[4]{0} parameter(0)
+  %p1 = f32[4]{0} parameter(1)
+  %a = f32[4]{0} add(%p0, %p1)
+  %b = f32[4]{0} add(%a, %p1)
+  ROOT %m = f32[4]{0} multiply(%a, %b)
+}
+"""
+    hist = aot.op_histogram(text)
+    assert hist["add"] == 2
+    assert hist["multiply"] == 1
+    assert hist["parameter"] == 2
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestManifest:
+    def _manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_all_workloads_present(self):
+        names = {w["name"] for w in self._manifest()["workloads"]}
+        assert names == set(WORKLOADS)
+
+    def test_hlo_files_exist_and_hash(self):
+        import hashlib
+        for w in self._manifest()["workloads"]:
+            path = os.path.join(ART, w["hlo"])
+            assert os.path.exists(path), w["hlo"]
+            with open(path) as f:
+                text = f.read()
+            assert hashlib.sha256(text.encode()).hexdigest() == w["sha256"]
+            assert "HloModule" in text
+
+    def test_manifest_shapes_match_registry(self):
+        for w in self._manifest()["workloads"]:
+            _, specs = WORKLOADS[w["name"]]
+            assert len(w["inputs"]) == len(specs)
+            for mi, spec in zip(w["inputs"], specs):
+                assert tuple(mi["shape"]) == tuple(spec.shape)
+                assert mi["dtype"] == str(spec.dtype)
+
+    def test_outputs_nonempty(self):
+        for w in self._manifest()["workloads"]:
+            assert len(w["outputs"]) >= 1

@@ -1,0 +1,136 @@
+"""Layer-2 correctness: workload graphs compute the right thing and
+shape-check at the AOT example shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.model import WORKLOADS
+
+
+def _zeros_args(specs):
+    return [jnp.zeros(s.shape, s.dtype) for s in specs]
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_graph_shapes_match_manifest_contract(name):
+    fn, specs = WORKLOADS[name]
+    outs = jax.eval_shape(fn, *specs)
+    assert isinstance(outs, tuple) and len(outs) >= 1
+    for o in outs:
+        assert all(d > 0 for d in o.shape) or o.shape == ()
+
+
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_graph_executes_finite(name):
+    fn, specs = WORKLOADS[name]
+    rng = np.random.default_rng(42)
+    args = []
+    for i, s in enumerate(specs):
+        a = rng.standard_normal(s.shape).astype(s.dtype)
+        args.append(jnp.asarray(a))
+    # Workload-specific validity fixups.
+    if name == "gauss":
+        a = np.array(args[0])  # writable copy
+        n = a.shape[0]
+        a[np.arange(n), np.arange(n)] += n  # diagonal dominance
+        args[0] = jnp.asarray(a)
+    if name in ("bfs", "gnn"):
+        adj = (np.asarray(args[0]) > 0.8).astype(np.float32)
+        args[0] = jnp.asarray(adj)
+        onehot = np.zeros(specs[-1].shape, np.float32)
+        onehot[0] = 1.0
+        args[-1] = jnp.asarray(onehot)
+    if name == "cfd":
+        args[0] = jnp.abs(args[0]) + 1.0   # positive density
+        args[2] = jnp.abs(args[2]) + 10.0  # positive energy
+    outs = jax.jit(fn)(*args)
+    for o in outs:
+        assert np.isfinite(np.asarray(o)).all(), f"{name} produced non-finite"
+
+
+def test_path_dp_small_case():
+    # 3x3 grid, hand-checked DP.
+    cost = jnp.asarray(np.array([[1, 2, 3], [4, 5, 6], [7, 8, 9]], np.float32))
+    final, _ = jax.jit(model.path_graph)(cost)
+    # row0 = [1,2,3]; row1 = [4+1, 5+1, 6+2] = [5,6,8];
+    # row2 = [7+5, 8+5, 9+6] = [12,13,15]
+    assert_allclose(np.asarray(final), [12, 13, 15])
+
+
+def test_bfs_levels_line_graph():
+    n = 8
+    adj = np.zeros((n, n), np.float32)
+    for i in range(n - 1):
+        adj[i, i + 1] = 1.0
+        adj[i + 1, i] = 1.0
+    onehot = np.zeros(n, np.float32)
+    onehot[0] = 1.0
+    (level,) = jax.jit(model.bfs_graph)(jnp.asarray(adj), jnp.asarray(onehot))
+    assert_allclose(np.asarray(level), np.arange(n, dtype=np.float32))
+
+
+def test_gauss_eliminates_lower_triangle():
+    rng = np.random.default_rng(3)
+    n = 16
+    a = rng.standard_normal((n, n + 1)).astype(np.float32)
+    a[np.arange(n), np.arange(n)] += n
+    (out,) = jax.jit(model.gauss_graph)(jnp.asarray(a))
+    out = np.asarray(out)
+    lower = np.tril(out[:, :n], k=-1)
+    assert np.abs(lower).max() < 1e-2
+
+
+def test_sort_graph_sorted_and_permutation():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(1000).astype(np.float32)
+    s, idx = jax.jit(model.sort_graph)(jnp.asarray(x))
+    s, idx = np.asarray(s), np.asarray(idx)
+    assert (np.diff(s) >= 0).all()
+    assert_allclose(np.sort(x), s)
+    assert sorted(idx.tolist()) == list(range(1000))
+
+
+def test_gnn_composition_masks_unreachable():
+    n, d = 16, 8
+    adj = np.zeros((n, n), np.float32)
+    adj[0, 1] = adj[1, 0] = 1.0  # only nodes 0,1 connected
+    feats = np.ones((n, d), np.float32)
+    w = np.eye(d, dtype=np.float32)
+    onehot = np.zeros(n, np.float32)
+    onehot[0] = 1.0
+    out, level = jax.jit(model.gnn_graph)(
+        jnp.asarray(adj), jnp.asarray(feats), jnp.asarray(w), jnp.asarray(onehot))
+    out, level = np.asarray(out), np.asarray(level)
+    assert level[0] == 0 and level[1] == 1
+    assert (level[2:] >= 1e9).all()
+    # Unreachable nodes contribute zero rows after masking.
+    assert np.abs(out[2:]).max() == 0.0
+    assert np.abs(out[:2]).max() > 0.0
+
+
+def test_mri_composition():
+    rng = np.random.default_rng(5)
+    k = rng.standard_normal((32, 32)).astype(np.float32)
+    w = np.zeros((3, 3), np.float32)
+    w[1, 1] = 1.0
+    img, s = jax.jit(model.mri_graph)(jnp.asarray(k), jnp.asarray(w))
+    img, s = np.asarray(img), np.asarray(s)
+    assert (np.diff(s) >= 0).all()
+    med = np.sort(k.reshape(-1))[k.size // 2]
+    assert_allclose(img, k - med, rtol=1e-5, atol=1e-5)
+
+
+def test_cfd_conserves_mass_periodic():
+    # Central-difference flux on a periodic domain conserves total mass.
+    rng = np.random.default_rng(6)
+    n = 512
+    rho = (np.abs(rng.standard_normal(n)) + 1.0).astype(np.float32)
+    mom = rng.standard_normal(n).astype(np.float32) * 0.1
+    e = (np.abs(rng.standard_normal(n)) + 10.0).astype(np.float32)
+    r, m, en = jax.jit(model.cfd_graph)(
+        jnp.asarray(rho), jnp.asarray(mom), jnp.asarray(e))
+    assert_allclose(np.asarray(r).sum(), rho.sum(), rtol=1e-3)

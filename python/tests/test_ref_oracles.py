@@ -1,0 +1,115 @@
+"""Self-consistency of the pure-jnp oracles themselves (the contracts the
+Pallas kernels are held to), including the composite building blocks not
+exercised by a kernel (gauss_step, spmv_gather)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+
+COMMON = dict(max_examples=25, deadline=None)
+
+
+class TestGaussStep:
+    def test_eliminates_column_below_pivot(self):
+        rng = np.random.default_rng(0)
+        n = 8
+        a = rng.standard_normal((n, n + 1)).astype(np.float32)
+        a[np.arange(n), np.arange(n)] += n
+        out = np.asarray(ref.gauss_step(jnp.asarray(a), 0))
+        assert_allclose(out[1:, 0], np.zeros(n - 1), atol=1e-5)
+        # Row 0 and rows' other structure preserved where expected.
+        assert_allclose(out[0], a[0], rtol=1e-6)
+
+    def test_is_idempotent_on_eliminated_column(self):
+        rng = np.random.default_rng(1)
+        n = 6
+        a = rng.standard_normal((n, n + 1)).astype(np.float32)
+        a[np.arange(n), np.arange(n)] += n
+        once = ref.gauss_step(jnp.asarray(a), 0)
+        twice = ref.gauss_step(once, 0)
+        assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-4)
+
+    def test_sequence_produces_upper_triangular(self):
+        rng = np.random.default_rng(2)
+        n = 10
+        a = rng.standard_normal((n, n + 1)).astype(np.float32)
+        a[np.arange(n), np.arange(n)] += 2 * n
+        cur = jnp.asarray(a)
+        for i in range(n - 1):
+            cur = ref.gauss_step(cur, i)
+        lower = np.tril(np.asarray(cur)[:, :n], k=-1)
+        assert np.abs(lower).max() < 1e-3
+
+
+class TestSpmvGather:
+    @settings(**COMMON)
+    @given(nnz=st.integers(1, 200), n=st.integers(1, 100),
+           seed=st.integers(0, 2**31))
+    def test_matches_dense_gather(self, nnz, n, seed):
+        rng = np.random.default_rng(seed)
+        values = rng.standard_normal(nnz).astype(np.float32)
+        col_idx = rng.integers(0, n, nnz).astype(np.int32)
+        x = rng.standard_normal(n).astype(np.float32)
+        got = np.asarray(ref.spmv_gather(values, col_idx, x))
+        want = values * x[col_idx]
+        assert_allclose(got, want, rtol=1e-6)
+
+    def test_segment_sum_completes_spmv(self):
+        # values/col_idx/row_ptr of a tiny CSR matrix; the caller-side
+        # reduction the docstring promises.
+        values = np.array([1.0, 2.0, 3.0, 4.0], np.float32)
+        col_idx = np.array([0, 1, 0, 2], np.int32)
+        rows = np.array([0, 0, 1, 1], np.int32)  # segment ids
+        x = np.array([10.0, 100.0, 1000.0], np.float32)
+        prod = np.asarray(ref.spmv_gather(values, col_idx, x))
+        y = jax.ops.segment_sum(jnp.asarray(prod), jnp.asarray(rows), num_segments=2)
+        assert_allclose(np.asarray(y), [210.0, 4030.0])
+
+
+class TestOracleAlgebra:
+    @settings(**COMMON)
+    @given(m=st.integers(1, 32), k=st.integers(1, 32), seed=st.integers(0, 2**31))
+    def test_gemm_identity(self, m, k, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        eye = np.eye(k, dtype=np.float32)
+        assert_allclose(np.asarray(ref.gemm(x, eye)), x, rtol=1e-5, atol=1e-5)
+
+    @settings(**COMMON)
+    @given(n=st.integers(1, 500), seed=st.integers(0, 2**31))
+    def test_vadd_commutes(self, n, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal(n).astype(np.float32)
+        y = rng.standard_normal(n).astype(np.float32)
+        assert_allclose(np.asarray(ref.vadd(x, y)), np.asarray(ref.vadd(y, x)))
+
+    def test_rsum_linearity(self):
+        rng = np.random.default_rng(5)
+        x = rng.standard_normal((16, 64)).astype(np.float32)
+        y = rng.standard_normal((16, 64)).astype(np.float32)
+        lhs = np.asarray(ref.rsum(x + y))
+        rhs = np.asarray(ref.rsum(x)) + np.asarray(ref.rsum(y))
+        assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+    def test_conv3_linearity_in_kernel(self):
+        rng = np.random.default_rng(6)
+        x = rng.standard_normal((20, 20)).astype(np.float32)
+        w1 = rng.standard_normal((3, 3)).astype(np.float32)
+        w2 = rng.standard_normal((3, 3)).astype(np.float32)
+        lhs = np.asarray(ref.conv3(x, w1 + w2))
+        rhs = np.asarray(ref.conv3(x, w1)) + np.asarray(ref.conv3(x, w2))
+        assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+    def test_stencil_preserves_mean_interior(self):
+        # The 4-neighbour average is mean-preserving on a constant field
+        # and bounded by min/max on any field (discrete maximum principle).
+        rng = np.random.default_rng(7)
+        x = rng.standard_normal((32, 32)).astype(np.float32)
+        out = np.asarray(ref.stencil(x))
+        assert out[1:-1, 1:-1].max() <= x.max() + 1e-6
+        assert out[1:-1, 1:-1].min() >= x.min() - 1e-6

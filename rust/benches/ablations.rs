@@ -1,0 +1,83 @@
+//! Design-choice ablations beyond the paper's figures (DESIGN.md §10):
+//!  A1 root-port count sweep       — how much does port fan-out matter?
+//!  A2 controller latency sweep    — ours vs PCIe-era controllers end-to-end
+//!  A3 heterogeneous expanders     — Fig. 1a's "DRAMs and/or SSDs" mixed
+//!                                   topology vs pure configurations.
+use cxl_gpu::coordinator::config::SystemConfig;
+use cxl_gpu::coordinator::runner::run_with;
+use cxl_gpu::cxl::ControllerKind;
+use cxl_gpu::media::MediaKind;
+use cxl_gpu::util::bench::Table;
+use cxl_gpu::workloads::table1b::spec;
+
+fn main() {
+    // A1: port count (vadd, DRAM EPs).
+    let mut t = Table::new("A1 — root-port fan-out (vadd, DRAM EPs)", &["ports", "exec (ms)"]);
+    let mut prev = f64::INFINITY;
+    let mut one_port = 0.0;
+    for ports in [1usize, 2, 4, 8] {
+        let mut cfg = SystemConfig::named("cxl", MediaKind::Ddr5);
+        cfg.ports = ports;
+        let r = run_with(spec("vadd"), &cfg);
+        let ms = r.metrics.exec_ms();
+        if ports == 1 {
+            one_port = ms;
+        }
+        t.rowv(vec![ports.to_string(), format!("{ms:.3}")]);
+        assert!(ms <= prev * 1.10, "more ports should not slow things down much");
+        prev = ms;
+    }
+    t.print();
+    assert!(prev < one_port, "8 ports must beat 1 port");
+
+    // A2: controller silicon end-to-end (the Fig. 3b latency gap as seen
+    // by a whole workload, not a microbenchmark).
+    let mut t = Table::new(
+        "A2 — controller silicon, end-to-end (vadd, DRAM EPs)",
+        &["controller", "exec (ms)", "vs ours"],
+    );
+    let mut ours_ms = 0.0;
+    for (name, kind) in [
+        ("panmnesia", ControllerKind::Panmnesia),
+        ("smt", ControllerKind::Smt),
+        ("tpp", ControllerKind::Tpp),
+    ] {
+        let mut cfg = SystemConfig::named("cxl", MediaKind::Ddr5);
+        cfg.controller = kind;
+        let r = run_with(spec("vadd"), &cfg);
+        let ms = r.metrics.exec_ms();
+        if kind == ControllerKind::Panmnesia {
+            ours_ms = ms;
+        }
+        t.rowv(vec![name.into(), format!("{ms:.3}"), format!("{:.2}x", ms / ours_ms)]);
+    }
+    t.print();
+
+    // A3: heterogeneous DRAM+SSD ports vs pure configurations.
+    let mut t = Table::new(
+        "A3 — heterogeneous expanders (Z-NAND class, SR+DS on)",
+        &["workload", "pure DRAM", "pure SSD (cxl-ds)", "hybrid"],
+    );
+    for wl in ["vadd", "bfs", "gnn"] {
+        let mut row = vec![wl.to_string()];
+        let mut vals = Vec::new();
+        for name in ["cxl", "cxl-ds", "cxl-hybrid"] {
+            let media = if name == "cxl" { MediaKind::Ddr5 } else { MediaKind::Znand };
+            let mut cfg = SystemConfig::named(name, media);
+            cfg.ssd_scale();
+            let r = run_with(spec(wl), &cfg);
+            vals.push(r.metrics.exec_ms());
+            row.push(format!("{:.3}", r.metrics.exec_ms()));
+        }
+        t.rowv(row);
+        // The hybrid must land between pure-DRAM and pure-SSD.
+        assert!(
+            vals[2] <= vals[1] * 1.05,
+            "{wl}: hybrid should not lose to pure SSD ({} vs {})",
+            vals[2],
+            vals[1]
+        );
+    }
+    t.print();
+    println!("ablations bench OK");
+}

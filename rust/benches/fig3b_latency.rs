@@ -1,0 +1,24 @@
+//! E1 — Fig. 3b: CXL controller round-trip latency, ours vs SMT vs TPP.
+//!
+//! Reproduces the figure's three bars plus the per-layer breakdown of
+//! Fig. 3a, and micro-benchmarks the latency-model hot path itself.
+use cxl_gpu::coordinator::experiments;
+use cxl_gpu::cxl::{ControllerKind, CxlController, Flit, MemOpcode};
+use cxl_gpu::util::bench::Bench;
+
+fn main() {
+    let r = experiments::fig3b(true);
+    // Shape assertions (the paper's qualitative claims).
+    assert!(r.ours_ns < 100.0, "ours must be two-digit ns: {}", r.ours_ns);
+    assert!(r.smt_ns / r.ours_ns > 3.0, "paper: >3x faster than SMT");
+    assert!(r.tpp_ns / r.ours_ns > 3.0, "paper: >3x faster than TPP");
+    assert!((200.0..300.0).contains(&r.smt_ns), "SMT ~250 ns");
+
+    // Hot-path micro-bench: latency computation per flit.
+    let ctrl = CxlController::new(ControllerKind::Panmnesia);
+    let flit = Flit { op: MemOpcode::MemRd, addr: 0x1000, len: 64, issued_at: 0, req_id: 1 };
+    Bench::new("controller/request_leg").iters(1000, 7, 100_000).run(|| {
+        std::hint::black_box(ctrl.request_leg(std::hint::black_box(&flit)));
+    });
+    println!("fig3b bench OK");
+}

@@ -1,0 +1,24 @@
+//! E3 — Fig. 9a: DRAM expander — UVM vs CXL vs GPU-DRAM over the full
+//! Table 1b suite. Asserts the paper's qualitative shape.
+use cxl_gpu::coordinator::experiments::{self, Scale};
+
+fn main() {
+    let r = experiments::fig9a(Scale::default(), true);
+    // Shape: UVM is one-to-three orders of magnitude slower than ideal
+    // (paper: 52.7x average); CXL sits within a small factor of ideal.
+    assert!(r.uvm_over_ideal > 20.0, "UVM must be dramatically slower: {}", r.uvm_over_ideal);
+    assert!(
+        r.cxl_gap_load.abs() < 1.0,
+        "CXL load-intensive gap should be fractional, got {}",
+        r.cxl_gap_load
+    );
+    // CXL must beat UVM on every workload (paper: 44.2x average).
+    for (c, u) in r.cxl.iter().zip(&r.uvm) {
+        assert!(
+            u.metrics.exec_time > c.metrics.exec_time,
+            "{}: UVM faster than CXL?",
+            c.workload
+        );
+    }
+    println!("fig9a bench OK");
+}

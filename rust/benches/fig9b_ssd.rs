@@ -1,0 +1,31 @@
+//! E4 — Fig. 9b: Z-NAND expander — GDS / CXL / CXL-SR / CXL-DS over the
+//! suite, normalized to GPU-DRAM (log scale in the paper).
+use cxl_gpu::coordinator::experiments::{self, Scale};
+use cxl_gpu::workloads::table1b::spec;
+use cxl_gpu::workloads::Category;
+
+fn main() {
+    let r = experiments::fig9b(Scale::default(), true);
+    // SR must help overall (paper: 7.4x).
+    assert!(r.sr_over_cxl > 1.3, "SR gain too small: {}", r.sr_over_cxl);
+    // DS must add on top of SR for store-intensive workloads (paper: +62.8%).
+    assert!(r.ds_over_sr_store > 0.2, "DS store gain: {}", r.ds_over_sr_store);
+    // Per-workload: SR strictly helps the 1D sequential workloads.
+    for (i, c) in r.cxl.iter().enumerate() {
+        if matches!(c.workload, "vadd" | "saxpy" | "rsum") {
+            assert!(
+                r.sr[i].metrics.exec_time < c.metrics.exec_time,
+                "{}: SR should win on sequential workloads",
+                c.workload
+            );
+        }
+        if spec(c.workload).category == Category::StoreIntensive {
+            assert!(
+                r.ds[i].metrics.exec_time <= r.sr[i].metrics.exec_time,
+                "{}: DS must not lose to SR on store-intensive",
+                c.workload
+            );
+        }
+    }
+    println!("fig9b bench OK");
+}

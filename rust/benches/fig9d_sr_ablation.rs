@@ -1,0 +1,19 @@
+//! E6 — Fig. 9d: SR ablation (CXL-NAIVE / CXL-DYN / CXL-SR) over the
+//! Seq / Around / Rand access classes, with EP internal-DRAM hit rates.
+use cxl_gpu::coordinator::experiments::{self, Scale};
+
+fn main() {
+    let rows = experiments::fig9d(Scale::default(), true);
+    assert_eq!(rows.len(), 3);
+    for r in &rows {
+        // Hit rate must rise monotonically from CXL through the SR
+        // variants' general trend (paper: 47.4 -> 88.4 -> 99+ for Seq).
+        assert!(r.hit_naive >= r.hit_cxl, "{}: naive should not lower hits", r.pattern);
+        assert!(r.hit_dyn > r.hit_naive, "{}: DYN must beat naive hits", r.pattern);
+    }
+    let seq = rows.iter().find(|r| r.pattern == "Seq").unwrap();
+    // Full SR must be the best (or tied) config for sequential streams.
+    assert!(seq.sr <= seq.dyn_ * 1.05, "Seq: SR {} should match/beat DYN {}", seq.sr, seq.dyn_);
+    assert!(seq.cxl / seq.sr > 1.4, "Seq: SR gain over CXL too small");
+    println!("fig9d bench OK");
+}

@@ -1,0 +1,11 @@
+//! E8 — the abstract's headline: our CXL approach outperforms UVM
+//! (paper: 2.36x aggregate) and a commercial PCIe-era EP controller
+//! (paper: 1.36x).
+use cxl_gpu::coordinator::experiments::{self, Scale};
+
+fn main() {
+    let r = experiments::headline(Scale::default(), true);
+    assert!(r.cxl_over_uvm > 2.0, "CXL over UVM: {}", r.cxl_over_uvm);
+    assert!(r.cxl_over_smt > 1.05, "CXL over commercial EP: {}", r.cxl_over_smt);
+    println!("headline bench OK");
+}

@@ -1,0 +1,42 @@
+//! §Perf — simulator throughput: events per wall-second across
+//! representative configurations (the L3 hot-path metric).
+use cxl_gpu::coordinator::config::SystemConfig;
+use cxl_gpu::coordinator::system::System;
+use cxl_gpu::media::MediaKind;
+use cxl_gpu::util::bench::Table;
+use cxl_gpu::workloads::table1b::spec;
+
+fn main() {
+    let mut t = Table::new(
+        "simulator throughput (events per wall-second)",
+        &["config", "workload", "events", "wall (ms)", "M events/s"],
+    );
+    let mut worst = f64::INFINITY;
+    for (cfg_name, media, wl) in [
+        ("gpu-dram", MediaKind::Ddr5, "vadd"),
+        ("cxl", MediaKind::Ddr5, "vadd"),
+        ("cxl", MediaKind::Ddr5, "bfs"),
+        ("uvm", MediaKind::Ddr5, "vadd"),
+        ("cxl-sr", MediaKind::Znand, "vadd"),
+        ("cxl-ds", MediaKind::Znand, "bfs"),
+    ] {
+        let mut cfg = SystemConfig::named(cfg_name, media);
+        cfg.total_ops = 300_000;
+        if media.is_ssd() {
+            cfg.ssd_scale();
+        }
+        let m = System::new(spec(wl), &cfg).run();
+        let eps = m.events_per_sec();
+        worst = worst.min(eps);
+        t.rowv(vec![
+            cfg_name.into(),
+            wl.into(),
+            m.events.to_string(),
+            format!("{:.1}", m.wall_ns as f64 / 1e6),
+            format!("{:.2}", eps / 1e6),
+        ]);
+    }
+    t.print();
+    assert!(worst > 1e6, "simulator below 1M events/s: {worst}");
+    println!("sim_throughput bench OK (worst {:.1} M events/s)", worst / 1e6);
+}

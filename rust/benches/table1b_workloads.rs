@@ -1,0 +1,21 @@
+//! E2 — Table 1b: regenerate the workload instruction mixes and check
+//! them against the paper's columns; bench trace generation throughput.
+use cxl_gpu::coordinator::experiments;
+use cxl_gpu::util::bench::Bench;
+use cxl_gpu::workloads::table1b::spec;
+use cxl_gpu::workloads::{generate, TraceParams};
+
+fn main() {
+    let rows = experiments::table1b(true);
+    assert_eq!(rows.len(), 13);
+    for (name, compute, load) in &rows {
+        let s = spec(name);
+        assert!((compute - s.compute_ratio).abs() < 0.03, "{name}: compute ratio drift");
+        assert!((load - s.load_ratio).abs() < 0.04, "{name}: load ratio drift");
+    }
+    let p = TraceParams { total_ops: 120_000, ..Default::default() };
+    Bench::new("workloads/generate(vadd,120k)").iters(1, 5, 3).run(|| {
+        std::hint::black_box(generate(spec("vadd"), &p));
+    });
+    println!("table1b bench OK");
+}

@@ -1,0 +1,84 @@
+//! GPUDirect-Storage (GDS) baseline: direct DMA between storage and GPU
+//! memory, but fault translation still transits the host runtime.
+//!
+//! As the paper notes (Background §Direct DMA), GPUDirect/NVMMU map the
+//! GPU BAR so the SSD's DMA engine can write GPU memory directly — the
+//! data path skips host DRAM — yet every on-demand fault must still be
+//! translated into storage I/O by the host runtime, so the control-path
+//! overhead is comparable to UVM's. We therefore compose the UVM
+//! resident-set machinery with an SSD backing read per fault.
+
+use crate::media::SsdModel;
+use crate::sim::Time;
+use crate::util::prng::Pcg32;
+
+use super::uvm::{FaultStats, UvmManager};
+
+/// GDS manager: UVM-style residency + SSD backing store.
+#[derive(Debug)]
+pub struct GdsManager {
+    pub inner: UvmManager,
+    pub ssd: SsdModel,
+}
+
+impl GdsManager {
+    pub fn new(block_bytes: u64, capacity: u64, ssd: SsdModel) -> GdsManager {
+        GdsManager { inner: UvmManager::new(block_bytes, capacity), ssd }
+    }
+
+    pub fn is_resident(&self, addr: u64) -> bool {
+        self.inner.is_resident(addr)
+    }
+
+    pub fn is_ready(&self, addr: u64, now: crate::sim::Time) -> bool {
+        self.inner.is_ready(addr, now)
+    }
+
+    pub fn touch(&mut self, addr: u64, is_write: bool) {
+        self.inner.touch(addr, is_write)
+    }
+
+    /// Fault service: host runtime + SSD read of the block + direct DMA.
+    pub fn fault(&mut self, now: Time, addr: u64, is_write: bool, rng: &mut Pcg32) -> Time {
+        let block_addr = addr / self.inner.block_bytes * self.inner.block_bytes;
+        // The SSD reads the whole migration block; its internal cache
+        // barely helps at this granularity (cold streaming reads).
+        let (read_done, _hit) = self.ssd.read(now, block_addr, self.inner.block_bytes);
+        let backing = read_done.saturating_sub(now);
+        let _ = rng;
+        self.inner.fault(now, addr, is_write, backing)
+    }
+
+    pub fn stats(&self) -> &FaultStats {
+        &self.inner.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::media::SsdParams;
+    use crate::sim::US;
+
+    #[test]
+    fn gds_fault_includes_storage_read() {
+        let mut g = GdsManager::new(1 << 20, 4 << 20, SsdModel::new(SsdParams::znand()));
+        let mut rng = Pcg32::new(1, 1);
+        let done = g.fault(0, 0x100, false, &mut rng);
+        // Host runtime (500µs) + media read: strictly above UVM's cost.
+        assert!(done > 500 * US);
+        assert!(g.is_resident(0x100));
+    }
+
+    #[test]
+    fn residency_machinery_shared_with_uvm() {
+        let mut g = GdsManager::new(1 << 20, 2 << 20, SsdModel::new(SsdParams::nand()));
+        let mut rng = Pcg32::new(2, 2);
+        let mut now = 0;
+        for i in 0..3u64 {
+            now = g.fault(now, i << 20, false, &mut rng);
+        }
+        assert_eq!(g.inner.resident_blocks(), 2);
+        assert_eq!(g.stats().evictions, 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Baseline GPU memory-expansion strategies the paper compares against:
+//! NVIDIA-style unified virtual memory ([`uvm`]) and GPUDirect-Storage-
+//! style direct DMA ([`gds`]). Both route expander-region misses through
+//! a host-runtime fault handler costed at ~500 µs per intervention
+//! (the paper's own figure, after Allen & Ge).
+
+pub mod gds;
+pub mod uvm;
+
+pub use gds::GdsManager;
+pub use uvm::{FaultStats, UvmManager};
+
+use crate::sim::{Time, US};
+
+/// Host runtime intervention cost per fault batch (paper: ~500 µs).
+pub const HOST_RUNTIME: Time = 500 * US;

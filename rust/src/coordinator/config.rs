@@ -1,0 +1,252 @@
+//! System configuration: the five GPU configurations of the paper's
+//! evaluation (UVM, GDS, CXL, CXL-SR, CXL-DS) plus GPU-DRAM (ideal), the
+//! Fig. 9d ablation points (CXL-NAIVE, CXL-DYN) and the Fig. 3b / headline
+//! comparator built on a PCIe-era controller (CXL-SMT).
+
+use crate::cxl::ControllerKind;
+use crate::gpu::LlcConfig;
+use crate::media::MediaKind;
+use crate::rootcomplex::SrPolicy;
+use crate::util::toml::Document;
+
+/// Top-level memory-expansion strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemStrategy {
+    /// Ideal: local GPU memory holds the whole footprint.
+    GpuDram,
+    /// Unified virtual memory (host DRAM + page faults).
+    Uvm,
+    /// GPUDirect Storage (SSD + page faults).
+    Gds,
+    /// CXL expander through the root complex.
+    Cxl,
+}
+
+/// Full system configuration for one simulation run.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    pub name: String,
+    pub strategy: MemStrategy,
+    /// Expander backend media (ignored for GpuDram/Uvm).
+    pub media: MediaKind,
+    pub controller: ControllerKind,
+    pub sr_policy: SrPolicy,
+    pub ds_enabled: bool,
+    /// GPU local memory size.
+    pub local_bytes: u64,
+    /// Total workload footprint (paper: 10x local).
+    pub footprint: u64,
+    pub llc: LlcConfig,
+    pub warps: usize,
+    /// Outstanding loads per warp before stalling.
+    pub mlp: usize,
+    pub total_ops: usize,
+    pub seed: u64,
+    /// UVM/GDS migration block.
+    pub uvm_block: u64,
+    /// Number of CXL root ports.
+    pub ports: usize,
+    /// Reserved GPU memory for the DS stack.
+    pub ds_capacity: u64,
+    /// Collect Fig. 9e time series.
+    pub timeline: bool,
+    /// Per-port media override (heterogeneous expanders, Fig. 1a's
+    /// "DRAMs and/or SSDs"); `None` = every port uses `media`.
+    pub media_per_port: Option<Vec<MediaKind>>,
+}
+
+impl SystemConfig {
+    /// Baseline scale: 4 MiB local GPU memory, 40 MiB footprint, 64
+    /// warps. Deliberately scaled down from real hardware so every
+    /// figure's full sweep runs in seconds; all configs share the scale,
+    /// so the paper's *ratios* are preserved.
+    pub fn base() -> SystemConfig {
+        SystemConfig {
+            name: "cxl".into(),
+            strategy: MemStrategy::Cxl,
+            media: MediaKind::Ddr5,
+            controller: ControllerKind::Panmnesia,
+            sr_policy: SrPolicy::Off,
+            ds_enabled: false,
+            local_bytes: 4 << 20,
+            footprint: 40 << 20,
+            llc: LlcConfig::default_vortex(),
+            warps: 16,
+            mlp: 4,
+            total_ops: 300_000,
+            seed: 0xC11A,
+            uvm_block: 16 << 10,
+            ports: 4,
+            ds_capacity: 1 << 20,
+            timeline: false,
+            media_per_port: None,
+        }
+    }
+
+    /// A named configuration from the paper. Recognized names: `gpu-dram`,
+    /// `uvm`, `gds`, `cxl`, `cxl-naive`, `cxl-dyn`, `cxl-sr`, `cxl-ds`,
+    /// `cxl-smt` (commercial-EP comparator).
+    pub fn named(name: &str, media: MediaKind) -> SystemConfig {
+        let mut c = SystemConfig::base();
+        c.name = name.into();
+        c.media = media;
+        match name {
+            "gpu-dram" => {
+                c.strategy = MemStrategy::GpuDram;
+                // Ideal: everything fits locally.
+                c.local_bytes = c.footprint;
+            }
+            "uvm" => c.strategy = MemStrategy::Uvm,
+            "gds" => c.strategy = MemStrategy::Gds,
+            "cxl" => c.strategy = MemStrategy::Cxl,
+            "cxl-naive" => {
+                c.strategy = MemStrategy::Cxl;
+                c.sr_policy = SrPolicy::Naive;
+            }
+            "cxl-dyn" => {
+                c.strategy = MemStrategy::Cxl;
+                c.sr_policy = SrPolicy::Dynamic;
+            }
+            "cxl-sr" => {
+                c.strategy = MemStrategy::Cxl;
+                c.sr_policy = SrPolicy::Window;
+            }
+            "cxl-ds" => {
+                c.strategy = MemStrategy::Cxl;
+                c.sr_policy = SrPolicy::Window;
+                c.ds_enabled = true;
+            }
+            "cxl-smt" => {
+                c.strategy = MemStrategy::Cxl;
+                c.controller = ControllerKind::Smt;
+            }
+            "cxl-hybrid" => {
+                // Heterogeneous expander: alternate DRAM and SSD ports
+                // behind one host bridge (Fig. 1a's mixed topology),
+                // with SR + DS enabled for the SSD ports.
+                c.strategy = MemStrategy::Cxl;
+                c.sr_policy = SrPolicy::Window;
+                c.ds_enabled = true;
+                c.media_per_port = Some(
+                    (0..c.ports)
+                        .map(|i| if i % 2 == 0 { MediaKind::Ddr5 } else { media })
+                        .collect(),
+                );
+            }
+            other => panic!("unknown configuration `{other}`"),
+        }
+        c
+    }
+
+    /// All evaluation-relevant configuration names.
+    pub fn known_names() -> &'static [&'static str] {
+        &[
+            "gpu-dram", "uvm", "gds", "cxl", "cxl-naive", "cxl-dyn", "cxl-sr", "cxl-ds",
+            "cxl-smt", "cxl-hybrid",
+        ]
+    }
+
+    /// Scale the system down for SSD-expander experiments (Figs. 9b-9e):
+    /// SSD media latencies are µs-to-ms, so the footprint must be small
+    /// enough that the trace covers it within a tractable op budget. All
+    /// configs within one figure share this scale, preserving ratios.
+    pub fn ssd_scale(&mut self) -> &mut Self {
+        self.footprint = 5 << 20;
+        self.local_bytes = if self.strategy == MemStrategy::GpuDram {
+            self.footprint
+        } else {
+            512 << 10
+        };
+        self.llc.capacity = 256 << 10;
+        self.ds_capacity = 256 << 10;
+        self
+    }
+
+    /// Apply overrides from a parsed TOML document (`[sim]` table).
+    pub fn apply_toml(&mut self, doc: &Document) {
+        self.local_bytes = doc.int_or("sim.local_bytes", self.local_bytes as i64) as u64;
+        self.footprint = doc.int_or("sim.footprint", self.footprint as i64) as u64;
+        self.warps = doc.int_or("sim.warps", self.warps as i64) as usize;
+        self.mlp = doc.int_or("sim.mlp", self.mlp as i64) as usize;
+        self.total_ops = doc.int_or("sim.total_ops", self.total_ops as i64) as usize;
+        self.seed = doc.int_or("sim.seed", self.seed as i64) as u64;
+        self.uvm_block = doc.int_or("sim.uvm_block", self.uvm_block as i64) as u64;
+        self.ports = doc.int_or("sim.ports", self.ports as i64) as usize;
+        self.ds_capacity = doc.int_or("sim.ds_capacity", self.ds_capacity as i64) as u64;
+        self.timeline = doc.bool_or("sim.timeline", self.timeline);
+    }
+}
+
+/// Parse a media name from the CLI (`dram|optane|znand|nand`).
+pub fn media_from_name(name: &str) -> Option<MediaKind> {
+    match name.to_ascii_lowercase().as_str() {
+        "dram" | "ddr5" => Some(MediaKind::Ddr5),
+        "optane" | "pram" | "o" => Some(MediaKind::Optane),
+        "znand" | "z-nand" | "z" => Some(MediaKind::Znand),
+        "nand" | "n" => Some(MediaKind::Nand),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_configs_resolve() {
+        for name in SystemConfig::known_names() {
+            let c = SystemConfig::named(name, MediaKind::Znand);
+            assert_eq!(c.name, *name);
+        }
+    }
+
+    #[test]
+    fn gpu_dram_fits_everything_locally() {
+        let c = SystemConfig::named("gpu-dram", MediaKind::Ddr5);
+        assert_eq!(c.local_bytes, c.footprint);
+    }
+
+    #[test]
+    fn cxl_variants_set_engines() {
+        assert_eq!(SystemConfig::named("cxl", MediaKind::Znand).sr_policy, SrPolicy::Off);
+        assert_eq!(
+            SystemConfig::named("cxl-naive", MediaKind::Znand).sr_policy,
+            SrPolicy::Naive
+        );
+        assert_eq!(
+            SystemConfig::named("cxl-dyn", MediaKind::Znand).sr_policy,
+            SrPolicy::Dynamic
+        );
+        let sr = SystemConfig::named("cxl-sr", MediaKind::Znand);
+        assert_eq!(sr.sr_policy, SrPolicy::Window);
+        assert!(!sr.ds_enabled);
+        let ds = SystemConfig::named("cxl-ds", MediaKind::Znand);
+        assert!(ds.ds_enabled);
+        assert_eq!(
+            SystemConfig::named("cxl-smt", MediaKind::Ddr5).controller,
+            ControllerKind::Smt
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown configuration")]
+    fn unknown_name_panics() {
+        SystemConfig::named("bogus", MediaKind::Ddr5);
+    }
+
+    #[test]
+    fn toml_overrides_apply() {
+        let doc = crate::util::toml::parse("[sim]\nwarps = 8\ntotal_ops = 1000").unwrap();
+        let mut c = SystemConfig::base();
+        c.apply_toml(&doc);
+        assert_eq!(c.warps, 8);
+        assert_eq!(c.total_ops, 1000);
+    }
+
+    #[test]
+    fn media_names_parse() {
+        assert_eq!(media_from_name("znand"), Some(MediaKind::Znand));
+        assert_eq!(media_from_name("O"), Some(MediaKind::Optane));
+        assert_eq!(media_from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,133 @@
+//! Run metrics: everything the figure benches and EXPERIMENTS.md consume.
+
+use crate::gpu::cache::LlcStats;
+use crate::sim::{ps_to_ns, Time, US};
+use crate::sim::Timeline;
+use crate::util::stats::Summary;
+
+/// Fig. 9e's three time series.
+#[derive(Debug, Clone)]
+pub struct Fig9eSeries {
+    pub load_latency: Timeline,
+    pub store_latency: Timeline,
+    pub ingress_occupancy: Timeline,
+}
+
+impl Fig9eSeries {
+    pub fn new() -> Fig9eSeries {
+        // 50 µs buckets resolve the multi-ms GC episodes cleanly.
+        Fig9eSeries {
+            load_latency: Timeline::new("load-latency-ns", 50 * US),
+            store_latency: Timeline::new("store-latency-ns", 50 * US),
+            ingress_occupancy: Timeline::new("ingress-occupancy", 50 * US),
+        }
+    }
+}
+
+impl Default for Fig9eSeries {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Aggregated metrics for one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Simulated execution time (max warp finish).
+    pub exec_time: Time,
+    /// End-to-end load latency (issue -> data), expander + local.
+    pub load_latency: Summary,
+    /// Store ack latency on the expander path.
+    pub store_latency: Summary,
+    pub llc: LlcStats,
+    /// Loads that crossed the system bus to the expander.
+    pub expander_loads: u64,
+    pub expander_stores: u64,
+    /// Loads served from the DS buffer in GPU memory.
+    pub ds_intercepts: u64,
+    /// Loads served by the SSD's internal DRAM (incl. SR prefetches).
+    pub ep_cache_hits: u64,
+    /// Loads that paid full backend-media latency.
+    pub media_reads: u64,
+    /// Page faults (UVM/GDS).
+    pub faults: u64,
+    /// GC episodes observed at the SSD EP.
+    pub gc_episodes: u64,
+    /// Speculative reads issued.
+    pub sr_issued: u64,
+    /// Simulation events processed (perf metric).
+    pub events: u64,
+    /// Host wall-clock for the run, nanoseconds (perf metric).
+    pub wall_ns: u128,
+    /// Optional Fig. 9e series.
+    pub series: Option<Fig9eSeries>,
+}
+
+impl RunMetrics {
+    /// SSD internal-DRAM hit rate over expander loads that reached the EP.
+    pub fn ep_hit_rate(&self) -> f64 {
+        let reached = self.ep_cache_hits + self.media_reads;
+        if reached == 0 {
+            0.0
+        } else {
+            self.ep_cache_hits as f64 / reached as f64
+        }
+    }
+
+    /// Simulated exec time in milliseconds.
+    pub fn exec_ms(&self) -> f64 {
+        ps_to_ns(self.exec_time) / 1e6
+    }
+
+    /// Events per wall second (simulator throughput).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            0.0
+        } else {
+            self.events as f64 / (self.wall_ns as f64 / 1e9)
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "exec {:.3} ms | load avg {:.0} ns p-mean | llc hit {:.1}% | ep hit {:.1}% | faults {} | gc {} | {:.1} M events/s",
+            self.exec_ms(),
+            self.load_latency.mean() / 1000.0,
+            self.llc.hit_rate() * 100.0,
+            self.ep_hit_rate() * 100.0,
+            self.faults,
+            self.gc_episodes,
+            self.events_per_sec() / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ep_hit_rate_handles_zero() {
+        let m = RunMetrics::default();
+        assert_eq!(m.ep_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn ep_hit_rate_computes() {
+        let m = RunMetrics { ep_cache_hits: 3, media_reads: 1, ..Default::default() };
+        assert!((m.ep_hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exec_ms_converts() {
+        let m = RunMetrics { exec_time: 2_000_000_000, ..Default::default() }; // 2 ms in ps
+        assert!((m.exec_ms() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_line_formats() {
+        let m = RunMetrics::default();
+        assert!(m.summary_line().contains("exec"));
+    }
+}

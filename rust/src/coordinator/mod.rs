@@ -1,0 +1,18 @@
+//! Experiment coordinator: configuration, the full-system simulator, and
+//! the per-figure experiment runners.
+//!
+//! This is Layer 3's driver: it owns process lifecycle (CLI → config →
+//! run → report), composes every substrate (GPU front-end, LLC, root
+//! complex, baselines, media) into a [`system::System`], and exposes the
+//! experiment entry points the benches and examples call.
+
+pub mod config;
+pub mod experiments;
+pub mod metrics;
+pub mod runner;
+pub mod system;
+
+pub use config::{MemStrategy, SystemConfig};
+pub use metrics::RunMetrics;
+pub use runner::{run_workload, RunResult};
+pub use system::System;

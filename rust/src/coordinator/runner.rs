@@ -1,0 +1,127 @@
+//! Experiment runner: named-config × workload execution plus the
+//! aggregation helpers the figure benches share.
+
+use crate::media::MediaKind;
+use crate::workloads::table1b::{spec, ALL_WORKLOADS};
+use crate::workloads::{Category, WorkloadSpec};
+
+use super::config::SystemConfig;
+use super::metrics::RunMetrics;
+use super::system::System;
+
+/// One (workload, config) run result.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub workload: &'static str,
+    pub config: String,
+    pub media: MediaKind,
+    pub metrics: RunMetrics,
+}
+
+impl RunResult {
+    /// Execution time normalized to a baseline run (paper's y-axes).
+    pub fn normalized_to(&self, baseline: &RunResult) -> f64 {
+        self.metrics.exec_time as f64 / baseline.metrics.exec_time.max(1) as f64
+    }
+}
+
+/// Run one workload under a named configuration.
+pub fn run_workload(workload: &str, config_name: &str, media: MediaKind) -> RunResult {
+    run_with(spec(workload), &SystemConfig::named(config_name, media))
+}
+
+/// Run with an explicit config (for sweeps that tweak fields).
+pub fn run_with(w: &'static WorkloadSpec, cfg: &SystemConfig) -> RunResult {
+    let metrics = System::new(w, cfg).run();
+    RunResult { workload: w.name, config: cfg.name.clone(), media: cfg.media, metrics }
+}
+
+/// Run every Table 1b workload under a config; returns results in table
+/// order.
+pub fn run_suite(config_name: &str, media: MediaKind, shrink: Option<usize>) -> Vec<RunResult> {
+    ALL_WORKLOADS
+        .iter()
+        .map(|w| {
+            let mut cfg = SystemConfig::named(config_name, media);
+            if let Some(ops) = shrink {
+                cfg.total_ops = ops;
+            }
+            run_with(w, &cfg)
+        })
+        .collect()
+}
+
+/// Geometric mean of normalized exec times across a category.
+pub fn category_geomean(
+    results: &[RunResult],
+    baseline: &[RunResult],
+    cat: Category,
+) -> f64 {
+    let mut log_sum = 0.0;
+    let mut n = 0usize;
+    for (r, b) in results.iter().zip(baseline) {
+        assert_eq!(r.workload, b.workload, "result/baseline order mismatch");
+        if spec(r.workload).category == cat {
+            log_sum += r.normalized_to(b).ln();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        1.0
+    } else {
+        (log_sum / n as f64).exp()
+    }
+}
+
+/// Geometric mean over all workloads.
+pub fn overall_geomean(results: &[RunResult], baseline: &[RunResult]) -> f64 {
+    let mut log_sum = 0.0;
+    for (r, b) in results.iter().zip(baseline) {
+        log_sum += r.normalized_to(b).ln();
+    }
+    (log_sum / results.len().max(1) as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(config: &str, media: MediaKind) -> Vec<RunResult> {
+        ALL_WORKLOADS
+            .iter()
+            .take(2)
+            .map(|w| {
+                let mut cfg = SystemConfig::named(config, media);
+                cfg.total_ops = 4_000;
+                cfg.warps = 8;
+                cfg.footprint = 2 << 20;
+                if cfg.strategy != super::super::config::MemStrategy::GpuDram {
+                    cfg.local_bytes = 256 << 10;
+                } else {
+                    cfg.local_bytes = cfg.footprint;
+                }
+                run_with(w, &cfg)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn normalization_is_relative() {
+        let base = small("gpu-dram", MediaKind::Ddr5);
+        let cxl = small("cxl", MediaKind::Ddr5);
+        for (c, b) in cxl.iter().zip(&base) {
+            let n = c.normalized_to(b);
+            assert!(n >= 1.0, "CXL should not beat ideal: {n}");
+        }
+    }
+
+    #[test]
+    fn geomeans_compute() {
+        let base = small("gpu-dram", MediaKind::Ddr5);
+        let cxl = small("cxl", MediaKind::Ddr5);
+        let g = overall_geomean(&cxl, &base);
+        assert!(g >= 1.0);
+        let cg = category_geomean(&cxl, &base, Category::ComputeIntensive);
+        assert!(cg > 0.0);
+    }
+}

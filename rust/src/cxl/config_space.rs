@@ -1,0 +1,139 @@
+//! CXL.io configuration space and HDM capability registers.
+//!
+//! The paper's simplified core performs EP enumeration at initialization:
+//! "firmware identifies CXL EPs by examining their configuration space
+//! and PCIe BARs. It aggregates each EP's memory address space by
+//! analyzing the HDM capability registers" (§System configuration). This
+//! module models that handshake: a little register file per EP exposing
+//! DVSEC-style identity + HDM decoder capability, and the firmware walk
+//! that reads them to program the host bridge.
+
+use crate::media::MediaKind;
+
+/// PCIe/CXL identity registers (subset the firmware reads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConfigSpace {
+    pub vendor_id: u16,
+    pub device_id: u16,
+    /// CXL DVSEC revision: 2 = CXL 2.0, 3 = CXL 3.x.
+    pub cxl_dvsec_rev: u8,
+    /// Device supports CXL.mem.
+    pub mem_capable: bool,
+    /// Device supports the MemSpecRd opcode (CXL 2.0+ feature).
+    pub spec_rd_capable: bool,
+    /// HDM capability: decoded memory size in 256 MiB units on real
+    /// hardware; here raw bytes for the scaled simulator.
+    pub hdm_size: u64,
+    /// Media class advertised through vendor DVSEC (drives firmware's
+    /// choice of SR/DS applicability).
+    pub media: MediaKind,
+}
+
+impl ConfigSpace {
+    /// The register image a DRAM expander EP exposes.
+    pub fn dram_ep(hdm_size: u64) -> ConfigSpace {
+        ConfigSpace {
+            vendor_id: 0x1AC1, // "Panmnesia" stand-in vendor id
+            device_id: 0x0D3A,
+            cxl_dvsec_rev: 3,
+            mem_capable: true,
+            spec_rd_capable: true,
+            hdm_size,
+            media: MediaKind::Ddr5,
+        }
+    }
+
+    /// The register image an SSD-backed EP exposes.
+    pub fn ssd_ep(hdm_size: u64, media: MediaKind) -> ConfigSpace {
+        debug_assert!(media.is_ssd());
+        ConfigSpace {
+            vendor_id: 0x1AC1,
+            device_id: 0x055D,
+            cxl_dvsec_rev: 3,
+            mem_capable: true,
+            spec_rd_capable: true,
+            hdm_size,
+            media,
+        }
+    }
+
+    /// Is this a CXL memory expander the root complex can map?
+    pub fn is_hdm_capable(&self) -> bool {
+        self.mem_capable && self.cxl_dvsec_rev >= 2 && self.hdm_size > 0
+    }
+
+    /// Raw dword read at a config-space offset (firmware-facing view).
+    /// Layout (dword index):
+    ///   0: vendor/device id    1: DVSEC rev + capability bits
+    ///   2: HDM size low        3: HDM size high
+    pub fn read_dword(&self, index: u32) -> u32 {
+        match index {
+            0 => (self.device_id as u32) << 16 | self.vendor_id as u32,
+            1 => {
+                (self.cxl_dvsec_rev as u32)
+                    | (self.mem_capable as u32) << 8
+                    | (self.spec_rd_capable as u32) << 9
+            }
+            2 => (self.hdm_size & 0xFFFF_FFFF) as u32,
+            3 => (self.hdm_size >> 32) as u32,
+            _ => 0xFFFF_FFFF, // unimplemented register
+        }
+    }
+
+    /// Decode a register image read back over CXL.io (the inverse of
+    /// [`read_dword`], as the firmware reconstructs it).
+    pub fn from_dwords(d0: u32, d1: u32, d2: u32, d3: u32, media: MediaKind) -> ConfigSpace {
+        ConfigSpace {
+            vendor_id: (d0 & 0xFFFF) as u16,
+            device_id: (d0 >> 16) as u16,
+            cxl_dvsec_rev: (d1 & 0xFF) as u8,
+            mem_capable: d1 & (1 << 8) != 0,
+            spec_rd_capable: d1 & (1 << 9) != 0,
+            hdm_size: d2 as u64 | (d3 as u64) << 32,
+            media,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_roundtrip() {
+        let cs = ConfigSpace::ssd_ep(10 << 30, MediaKind::Znand);
+        let back = ConfigSpace::from_dwords(
+            cs.read_dword(0),
+            cs.read_dword(1),
+            cs.read_dword(2),
+            cs.read_dword(3),
+            MediaKind::Znand,
+        );
+        assert_eq!(cs, back);
+    }
+
+    #[test]
+    fn hdm_capability_gates() {
+        assert!(ConfigSpace::dram_ep(1 << 20).is_hdm_capable());
+        let mut cs = ConfigSpace::dram_ep(1 << 20);
+        cs.hdm_size = 0;
+        assert!(!cs.is_hdm_capable());
+        cs = ConfigSpace::dram_ep(1 << 20);
+        cs.cxl_dvsec_rev = 1; // CXL 1.1: no MemSpecRd, no HDM ranges here
+        assert!(!cs.is_hdm_capable());
+    }
+
+    #[test]
+    fn unimplemented_registers_read_ffffffff() {
+        let cs = ConfigSpace::dram_ep(4096);
+        assert_eq!(cs.read_dword(9), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn large_hdm_sizes_span_two_dwords() {
+        let cs = ConfigSpace::dram_ep(5 << 32);
+        let lo = cs.read_dword(2) as u64;
+        let hi = cs.read_dword(3) as u64;
+        assert_eq!(lo | hi << 32, 5 << 32);
+    }
+}

@@ -1,0 +1,171 @@
+//! Layered CXL controller latency model (Fig. 3a / Fig. 4).
+//!
+//! A memory request crosses, in order: protocol conversion (memory op ->
+//! flit), the transaction layer, the link layer, the Flex Bus physical
+//! layer, the wire, and the mirror stack on the EP side. The paper's
+//! silicon achieves a **two-digit-nanosecond** total round trip including
+//! protocol conversion; SMT's and TPP's prototype controllers — which the
+//! paper hypothesizes reuse PCIe-era designs — sit near 250 ns.
+//!
+//! [`LayerCosts`] carries per-layer one-way costs so the Fig. 3b bench can
+//! print the same per-layer breakdown the paper draws, and so the root
+//! port and EP reuse the *same* numbers (both embed this controller).
+
+use crate::sim::{transfer_time, Time, NS};
+
+use super::flit::Flit;
+
+/// Which silicon the controller models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControllerKind {
+    /// The paper's custom CXL-optimized silicon (tens of ns round trip).
+    Panmnesia,
+    /// PCIe-architecture-derived prototype controller (SMT, Samsung).
+    Smt,
+    /// PCIe-architecture-derived prototype controller (TPP, Meta).
+    Tpp,
+}
+
+/// One-way per-layer traversal costs, in picoseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerCosts {
+    /// Standard memory op <-> CXL flit conversion (transaction-layer edge).
+    pub protocol_conv: Time,
+    /// Transaction layer (sub-protocol mux, ordering, credits).
+    pub transaction: Time,
+    /// Link layer (flow control, buffering, acks).
+    pub link: Time,
+    /// Flex Bus physical layer (PCS, elastic buffers, lane (de)striping).
+    pub phy: Time,
+}
+
+impl LayerCosts {
+    /// One-way stack traversal cost (excluding wire serialization).
+    pub fn one_way(&self) -> Time {
+        self.protocol_conv + self.transaction + self.link + self.phy
+    }
+
+    /// Costs for the paper's controller: tuned so the full round trip
+    /// (host stack down + wire + EP stack up + EP stack down + wire +
+    /// host stack up) lands in the high two-digit-ns range (~70 ns),
+    /// matching "round-trip latency in the range of tens of nanoseconds,
+    /// including protocol conversion".
+    pub fn panmnesia() -> LayerCosts {
+        LayerCosts {
+            protocol_conv: 2_500, // 2.5 ns
+            transaction: 5_000,   // 5.0 ns
+            link: 4_500,          // 4.5 ns
+            phy: 4_000,           // 4.0 ns
+        }
+    }
+
+    /// PCIe-derived prototype (SMT): dominated by PCIe transaction/link
+    /// layers sized for block I/O, not load/store. Round trip ≈ 250 ns.
+    pub fn smt() -> LayerCosts {
+        LayerCosts {
+            protocol_conv: 9_000,
+            transaction: 22_000,
+            link: 18_000,
+            phy: 12_000,
+        }
+    }
+
+    /// PCIe-derived prototype (TPP): Meta's tiered-memory testbed EP;
+    /// the paper groups it with SMT at ~250 ns (Fig. 3b).
+    pub fn tpp() -> LayerCosts {
+        LayerCosts {
+            protocol_conv: 8_000,
+            transaction: 24_000,
+            link: 19_000,
+            phy: 11_000,
+        }
+    }
+}
+
+/// A CXL controller instance (one per root port, one per EP).
+#[derive(Debug, Clone)]
+pub struct CxlController {
+    pub kind: ControllerKind,
+    pub costs: LayerCosts,
+    /// Link bandwidth in GB/s (PCIe 5.0 x8 ≈ 32 GB/s per direction).
+    pub link_gbps: f64,
+    /// Wire/board propagation per direction.
+    pub wire: Time,
+}
+
+impl CxlController {
+    pub fn new(kind: ControllerKind) -> CxlController {
+        let costs = match kind {
+            ControllerKind::Panmnesia => LayerCosts::panmnesia(),
+            ControllerKind::Smt => LayerCosts::smt(),
+            ControllerKind::Tpp => LayerCosts::tpp(),
+        };
+        CxlController { kind, costs, link_gbps: 32.0, wire: 2 * NS }
+    }
+
+    /// One-way latency for a request flit: host-side stack + wire +
+    /// serialization of the header flit.
+    pub fn request_leg(&self, flit: &Flit) -> Time {
+        self.costs.one_way() + self.wire + transfer_time(64, self.link_gbps) + self.extra(flit)
+    }
+
+    /// One-way latency for the completion: EP-side stack + wire +
+    /// serialization of the data flits.
+    pub fn response_leg(&self, flit: &Flit) -> Time {
+        self.costs.one_way()
+            + self.wire
+            + transfer_time(flit.data_flits() * 64, self.link_gbps)
+    }
+
+    /// Full protocol round trip for a 64 B access, *excluding* backend
+    /// media time — the quantity Fig. 3b reports.
+    pub fn round_trip_64b(&self) -> Time {
+        // Down through host stack, across, up through EP stack (request),
+        // then EP stack down, across, host stack up (completion).
+        2 * (self.costs.one_way() + self.wire + transfer_time(64, self.link_gbps))
+            + 2 * self.costs.one_way()
+    }
+
+    fn extra(&self, _flit: &Flit) -> Time {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::flit::MemOpcode;
+
+    #[test]
+    fn panmnesia_round_trip_is_two_digit_ns() {
+        let c = CxlController::new(ControllerKind::Panmnesia);
+        let rt_ns = c.round_trip_64b() as f64 / NS as f64;
+        assert!(rt_ns >= 10.0 && rt_ns < 100.0, "round trip {rt_ns} ns not two-digit");
+    }
+
+    #[test]
+    fn pcie_derived_controllers_are_about_250ns() {
+        for kind in [ControllerKind::Smt, ControllerKind::Tpp] {
+            let c = CxlController::new(kind);
+            let rt_ns = c.round_trip_64b() as f64 / NS as f64;
+            assert!((200.0..300.0).contains(&rt_ns), "{kind:?} rt {rt_ns} ns");
+        }
+    }
+
+    #[test]
+    fn paper_claims_over_3x_faster() {
+        let ours = CxlController::new(ControllerKind::Panmnesia).round_trip_64b();
+        let smt = CxlController::new(ControllerKind::Smt).round_trip_64b();
+        let tpp = CxlController::new(ControllerKind::Tpp).round_trip_64b();
+        assert!(smt as f64 / ours as f64 > 3.0);
+        assert!(tpp as f64 / ours as f64 > 3.0);
+    }
+
+    #[test]
+    fn response_serialization_scales_with_len() {
+        let c = CxlController::new(ControllerKind::Panmnesia);
+        let small = Flit { op: MemOpcode::MemRd, addr: 0, len: 64, issued_at: 0, req_id: 0 };
+        let big = Flit { op: MemOpcode::MemRd, addr: 0, len: 1024, issued_at: 0, req_id: 1 };
+        assert!(c.response_leg(&big) > c.response_leg(&small));
+    }
+}

@@ -1,0 +1,116 @@
+//! CXL QoS telemetry: the 2-bit `DevLoad` field.
+//!
+//! Every CXL.mem completion carries a DevLoad indication classifying the
+//! endpoint's instantaneous load (CXL 3.1 §3.3.4). The paper's queue
+//! logic uses it to modulate SpecRd granularity/rate and to throttle
+//! writes around SSD internal tasks (GC), so the model computes it from
+//! ingress-queue occupancy plus an internal-task flag, exactly the two
+//! signals the paper says the EP folds in.
+
+/// The four DevLoad states of the CXL standard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum DevLoad {
+    /// Light load: spare bandwidth available (paper: grow SR granularity).
+    Light,
+    /// Optimal load: at capacity without queueing (hold granularity).
+    Optimal,
+    /// Moderate overload: queue building up (shrink SR granularity).
+    Moderate,
+    /// Severe overload: queue saturated or internal task running (halt SR,
+    /// divert writes).
+    Severe,
+}
+
+impl DevLoad {
+    /// Classify from ingress-queue occupancy and the internal-task flag.
+    ///
+    /// Thresholds follow the usual quartile telemetry encoding: <25 %
+    /// light, <50 % optimal, <75 % moderate, else severe. An active
+    /// internal task (GC, wear-leveling) reports at least Moderate, and
+    /// Severe once it also has a backlog — the paper's EP "reports this
+    /// condition through the DevLoad field *before* scheduling the task".
+    pub fn classify(occupancy: usize, capacity: usize, internal_task: bool) -> DevLoad {
+        debug_assert!(capacity > 0);
+        let frac = occupancy as f64 / capacity as f64;
+        let base = if frac < 0.25 {
+            DevLoad::Light
+        } else if frac < 0.50 {
+            DevLoad::Optimal
+        } else if frac < 0.75 {
+            DevLoad::Moderate
+        } else {
+            DevLoad::Severe
+        };
+        if internal_task {
+            // Internal tasks are pre-announced as Severe so write traffic
+            // diverts *before* the stall (§Fine control for internal
+            // tasks: the EP reports the condition before scheduling it).
+            DevLoad::Severe
+        } else {
+            base
+        }
+    }
+
+    /// Two-bit wire encoding (00=light per the paper's "light load (11)"
+    /// typo normalized to spec order: we use spec order L=0,O=1,M=2,S=3).
+    pub fn encode(self) -> u8 {
+        match self {
+            DevLoad::Light => 0b00,
+            DevLoad::Optimal => 0b01,
+            DevLoad::Moderate => 0b10,
+            DevLoad::Severe => 0b11,
+        }
+    }
+
+    pub fn decode(bits: u8) -> DevLoad {
+        match bits & 0b11 {
+            0b00 => DevLoad::Light,
+            0b01 => DevLoad::Optimal,
+            0b10 => DevLoad::Moderate,
+            _ => DevLoad::Severe,
+        }
+    }
+
+    /// True if the EP asks requesters to back off (moderate or severe).
+    pub fn overloaded(self) -> bool {
+        self >= DevLoad::Moderate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_quartiles() {
+        assert_eq!(DevLoad::classify(0, 64, false), DevLoad::Light);
+        assert_eq!(DevLoad::classify(15, 64, false), DevLoad::Light);
+        assert_eq!(DevLoad::classify(16, 64, false), DevLoad::Optimal);
+        assert_eq!(DevLoad::classify(32, 64, false), DevLoad::Moderate);
+        assert_eq!(DevLoad::classify(48, 64, false), DevLoad::Severe);
+        assert_eq!(DevLoad::classify(64, 64, false), DevLoad::Severe);
+    }
+
+    #[test]
+    fn internal_task_is_always_severe() {
+        assert_eq!(DevLoad::classify(0, 64, true), DevLoad::Severe);
+        assert_eq!(DevLoad::classify(20, 64, true), DevLoad::Severe);
+        assert_eq!(DevLoad::classify(60, 64, true), DevLoad::Severe);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for d in [DevLoad::Light, DevLoad::Optimal, DevLoad::Moderate, DevLoad::Severe] {
+            assert_eq!(DevLoad::decode(d.encode()), d);
+        }
+    }
+
+    #[test]
+    fn ordering_and_overload() {
+        assert!(DevLoad::Light < DevLoad::Optimal);
+        assert!(DevLoad::Optimal < DevLoad::Moderate);
+        assert!(DevLoad::Moderate < DevLoad::Severe);
+        assert!(!DevLoad::Optimal.overloaded());
+        assert!(DevLoad::Moderate.overloaded());
+    }
+}

@@ -1,0 +1,130 @@
+//! CXL.mem flit model.
+//!
+//! CXL.mem moves packetized 64 B flits over the PCIe physical link. We
+//! model the fields the GPU-side queue logic actually inspects: opcode,
+//! host physical address, length, and — for `MemSpecRd` — the paper's
+//! repurposed address format where the two least-significant bits encode
+//! the request length in 256 B units (1..=4, i.e. 256 B..1024 B) and the
+//! remaining bits a 256 B-aligned offset (§Accelerating Reads, Fig. 6).
+
+use crate::sim::Time;
+
+/// Payload bytes carried by one CXL.mem data flit.
+pub const FLIT_DATA_BYTES: u64 = 64;
+
+/// Memory-offset unit of a `MemSpecRd` request (the paper repurposes the
+/// low bits so the remaining address specifies a 256 B offset).
+pub const SPECRD_OFFSET_UNIT: u64 = 256;
+
+/// CXL.mem master-to-subordinate opcodes we model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemOpcode {
+    /// Demand read (MemRd), 64 B granularity.
+    MemRd,
+    /// Write (MemWr), 64 B granularity.
+    MemWr,
+    /// Speculative read hint introduced in CXL 2.0; no completion data is
+    /// returned, the EP merely warms its backend (here: internal DRAM).
+    MemSpecRd,
+    /// Back-invalidate / management (stand-in for CXL.io config traffic).
+    Config,
+}
+
+/// A flit in flight between a root port and an EP.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flit {
+    pub op: MemOpcode,
+    /// Host physical address (64 B aligned for MemRd/MemWr; 256 B aligned
+    /// for MemSpecRd per the repurposed format).
+    pub addr: u64,
+    /// Request length in bytes (64 for demand ops; 256..=1024 for SpecRd).
+    pub len: u64,
+    /// Issue timestamp (for latency accounting).
+    pub issued_at: Time,
+    /// Request id used to match completions.
+    pub req_id: u64,
+}
+
+impl Flit {
+    /// Encode a `MemSpecRd` per the paper: two LSBs = length in 256 B
+    /// units minus one, upper bits = 256 B-aligned offset.
+    pub fn spec_rd(addr: u64, len: u64, issued_at: Time, req_id: u64) -> Flit {
+        let units = (len / SPECRD_OFFSET_UNIT).clamp(1, 4);
+        let aligned = addr & !(SPECRD_OFFSET_UNIT - 1);
+        Flit {
+            op: MemOpcode::MemSpecRd,
+            addr: aligned,
+            len: units * SPECRD_OFFSET_UNIT,
+            issued_at,
+            req_id,
+        }
+    }
+
+    /// The wire encoding of a SpecRd address word (offset | units-1).
+    pub fn spec_rd_encoding(&self) -> u64 {
+        debug_assert_eq!(self.op, MemOpcode::MemSpecRd);
+        let units = self.len / SPECRD_OFFSET_UNIT;
+        (self.addr & !(SPECRD_OFFSET_UNIT - 1)) | (units - 1)
+    }
+
+    /// Decode a SpecRd wire word back to (addr, len).
+    pub fn decode_spec_rd(word: u64) -> (u64, u64) {
+        let units = (word & 0b11) + 1;
+        let addr = word & !(SPECRD_OFFSET_UNIT - 1);
+        (addr, units * SPECRD_OFFSET_UNIT)
+    }
+
+    /// Number of 64 B data flits needed for this request's data phase.
+    pub fn data_flits(&self) -> u64 {
+        match self.op {
+            MemOpcode::MemRd | MemOpcode::MemWr => self.len.div_ceil(FLIT_DATA_BYTES),
+            // SpecRd carries no data payload (a hint), Config is 1 flit.
+            MemOpcode::MemSpecRd | MemOpcode::Config => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_rd_aligns_and_clamps() {
+        let f = Flit::spec_rd(0x1234, 1024, 0, 1);
+        assert_eq!(f.addr, 0x1200);
+        assert_eq!(f.len, 1024);
+        let tiny = Flit::spec_rd(0x40, 64, 0, 2);
+        assert_eq!(tiny.len, 256, "length clamps up to one 256B unit");
+        let big = Flit::spec_rd(0x0, 8192, 0, 3);
+        assert_eq!(big.len, 1024, "length clamps down to four units");
+    }
+
+    #[test]
+    fn spec_rd_encoding_roundtrip() {
+        for units in 1..=4u64 {
+            let f = Flit::spec_rd(0x4000, units * 256, 7, 9);
+            let word = f.spec_rd_encoding();
+            let (addr, len) = Flit::decode_spec_rd(word);
+            assert_eq!(addr, 0x4000);
+            assert_eq!(len, units * 256);
+        }
+    }
+
+    #[test]
+    fn encoding_uses_two_lsbs() {
+        let f = Flit::spec_rd(0x4000, 1024, 0, 0);
+        assert_eq!(f.spec_rd_encoding() & 0b11, 3);
+        let f = Flit::spec_rd(0x4000, 256, 0, 0);
+        assert_eq!(f.spec_rd_encoding() & 0b11, 0);
+    }
+
+    #[test]
+    fn data_flit_counts() {
+        let rd = Flit { op: MemOpcode::MemRd, addr: 0, len: 64, issued_at: 0, req_id: 0 };
+        assert_eq!(rd.data_flits(), 1);
+        let wr = Flit { op: MemOpcode::MemWr, addr: 0, len: 256, issued_at: 0, req_id: 0 };
+        assert_eq!(wr.data_flits(), 4);
+        let sr = Flit::spec_rd(0, 1024, 0, 0);
+        assert_eq!(sr.data_flits(), 1, "SpecRd is a hint, no data phase");
+    }
+}

@@ -1,0 +1,325 @@
+//! Set-associative write-back LLC with MSHRs.
+//!
+//! The Vortex LLC between the SMs and the system bus (Fig. 5a). Misses
+//! allocate an MSHR; further accesses to an in-flight line merge into it.
+//! Dirty victims produce writebacks that the memory system must absorb —
+//! the path that makes SSD tail latency visible to reads (Fig. 9e) and
+//! that the DS engine exists to decouple.
+
+use std::collections::HashMap;
+
+use crate::sim::{Time, NS};
+
+use super::{line_of, LINE};
+
+/// LLC geometry + timing.
+#[derive(Debug, Clone, Copy)]
+pub struct LlcConfig {
+    pub capacity: u64,
+    pub ways: usize,
+    /// Hit service latency.
+    pub hit_lat: Time,
+    /// Max in-flight misses (global MSHR count).
+    pub mshrs: usize,
+}
+
+impl LlcConfig {
+    /// Vortex-scale default: 2 MiB, 16-way, 5 ns hits. The in-flight-miss
+    /// window is sized like a replayable-fault buffer (4096) rather than
+    /// a classic MSHR file so every strategy sees the same concurrency
+    /// envelope — EP-side limits (port memory queues, media channels)
+    /// provide the real backpressure.
+    pub fn default_vortex() -> LlcConfig {
+        LlcConfig { capacity: 2 << 20, ways: 16, hit_lat: 5 * NS, mshrs: 4096 }
+    }
+
+    pub fn sets(&self) -> usize {
+        (self.capacity / LINE) as usize / self.ways
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct WayState {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    last_use: u64,
+}
+
+/// Outcome of an LLC lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessResult {
+    /// Served by the cache at the returned time.
+    Hit { done: Time },
+    /// Line must be fetched; an MSHR was allocated. The caller routes the
+    /// fill. `victim_writeback` carries a dirty victim line address that
+    /// must be written back to memory.
+    Miss { victim_writeback: Option<u64> },
+    /// Line already being fetched: merged into the existing MSHR.
+    MergedMiss,
+    /// All MSHRs busy: the access must retry after `free_at`.
+    MshrFull { free_at: Time },
+}
+
+/// The last-level cache.
+#[derive(Debug)]
+pub struct Llc {
+    cfg: LlcConfig,
+    sets: Vec<Vec<WayState>>,
+    tick: u64,
+    /// line -> waiters (request ids) for in-flight fills.
+    mshr: HashMap<u64, Vec<u64>>,
+    /// Earliest time an MSHR frees (conservative bookkeeping for retry).
+    mshr_free_hint: Time,
+    pub stats: LlcStats,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct LlcStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub merged: u64,
+    pub writebacks: u64,
+    pub mshr_stalls: u64,
+}
+
+impl LlcStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses + self.merged;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+impl Llc {
+    pub fn new(cfg: LlcConfig) -> Llc {
+        let sets = cfg.sets();
+        assert!(sets.is_power_of_two(), "set count must be a power of two");
+        Llc {
+            cfg,
+            sets: vec![vec![WayState::default(); cfg.ways]; sets],
+            tick: 0,
+            mshr: HashMap::new(),
+            mshr_free_hint: 0,
+            stats: LlcStats::default(),
+        }
+    }
+
+    fn set_and_tag(&self, line: u64) -> (usize, u64) {
+        let idx = (line / LINE) as usize & (self.sets.len() - 1);
+        (idx, line)
+    }
+
+    /// Look up `addr` at time `now`. For writes, a hit marks the line
+    /// dirty; a write miss write-allocates (fill then dirty).
+    pub fn access(&mut self, now: Time, addr: u64, is_write: bool, req_id: u64) -> AccessResult {
+        self.tick += 1;
+        let line = line_of(addr);
+        let (set_idx, tag) = self.set_and_tag(line);
+
+        // In-flight? Must be checked before the hit scan: lines are
+        // installed at allocate time but their data arrives with the
+        // fill, so accesses to a pending line merge into its MSHR.
+        if let Some(waiters) = self.mshr.get_mut(&line) {
+            waiters.push(req_id);
+            self.stats.merged += 1;
+            if is_write {
+                for way in self.sets[set_idx].iter_mut() {
+                    if way.valid && way.tag == tag {
+                        way.dirty = true;
+                    }
+                }
+            }
+            return AccessResult::MergedMiss;
+        }
+
+        let set = &mut self.sets[set_idx];
+        // Hit?
+        for way in set.iter_mut() {
+            if way.valid && way.tag == tag {
+                way.last_use = self.tick;
+                if is_write {
+                    way.dirty = true;
+                }
+                self.stats.hits += 1;
+                return AccessResult::Hit { done: now + self.cfg.hit_lat };
+            }
+        }
+
+        // Coalesced full-line store miss: install the line dirty without
+        // fetching it (write-validate — GPU L2s do not read-for-ownership
+        // on full-line writes). No MSHR, no fill; only the victim needs
+        // writing back.
+        if is_write {
+            self.stats.misses += 1;
+            let victim = self.evict_for(set_idx, tag, true);
+            return AccessResult::Miss { victim_writeback: victim };
+        }
+
+        // MSHR available?
+        if self.mshr.len() >= self.cfg.mshrs {
+            self.stats.mshr_stalls += 1;
+            let hint = self.mshr_free_hint.max(now + self.cfg.hit_lat);
+            return AccessResult::MshrFull { free_at: hint };
+        }
+        self.mshr.insert(line, vec![req_id]);
+        self.stats.misses += 1;
+
+        // Victim selection happens now so the writeback can start with the
+        // fill (standard eviction-on-allocate).
+        let victim = self.evict_for(set_idx, tag, false);
+        AccessResult::Miss { victim_writeback: victim }
+    }
+
+    /// Pick (and replace) the LRU way for an incoming line. Returns the
+    /// dirty victim's line address, if any.
+    fn evict_for(&mut self, set_idx: usize, tag: u64, incoming_dirty: bool) -> Option<u64> {
+        let tick = self.tick;
+        let set = &mut self.sets[set_idx];
+        // Prefer an invalid way.
+        let way_idx = if let Some(i) = set.iter().position(|w| !w.valid) {
+            i
+        } else {
+            set.iter()
+                .enumerate()
+                .min_by_key(|(_, w)| w.last_use)
+                .map(|(i, _)| i)
+                .unwrap()
+        };
+        let victim = &mut set[way_idx];
+        let wb = if victim.valid && victim.dirty { Some(victim.tag) } else { None };
+        *victim = WayState { tag, valid: true, dirty: incoming_dirty, last_use: tick };
+        if wb.is_some() {
+            self.stats.writebacks += 1;
+        }
+        wb
+    }
+
+    /// A fill returned from memory: release the MSHR and return the
+    /// waiting request ids (the line was installed at `access` time).
+    pub fn fill(&mut self, line: u64, fill_done: Time) -> Vec<u64> {
+        self.mshr_free_hint = self.mshr_free_hint.max(fill_done);
+        self.mshr.remove(&line_of(line)).unwrap_or_default()
+    }
+
+    pub fn inflight(&self) -> usize {
+        self.mshr.len()
+    }
+
+    /// Number of valid lines (for occupancy assertions).
+    pub fn resident_lines(&self) -> usize {
+        self.sets.iter().flatten().filter(|w| w.valid).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn llc() -> Llc {
+        Llc::new(LlcConfig { capacity: 64 * LINE * 4, ways: 4, hit_lat: 5 * NS, mshrs: 4 })
+    }
+
+    #[test]
+    fn miss_then_fill_then_hit() {
+        let mut c = llc();
+        match c.access(0, 0x1000, false, 1) {
+            AccessResult::Miss { victim_writeback: None } => {}
+            r => panic!("expected clean miss, got {r:?}"),
+        }
+        let waiters = c.fill(0x1000, 100);
+        assert_eq!(waiters, vec![1]);
+        match c.access(200, 0x1000, false, 2) {
+            AccessResult::Hit { done } => assert_eq!(done, 200 + 5 * NS),
+            r => panic!("expected hit, got {r:?}"),
+        }
+    }
+
+    #[test]
+    fn inflight_misses_merge() {
+        let mut c = llc();
+        c.access(0, 0x2000, false, 1);
+        match c.access(1, 0x2010, false, 2) {
+            AccessResult::MergedMiss => {}
+            r => panic!("expected merge (same line), got {r:?}"),
+        }
+        let waiters = c.fill(0x2000, 50);
+        assert_eq!(waiters, vec![1, 2]);
+    }
+
+    #[test]
+    fn mshr_exhaustion_backpressures() {
+        let mut c = llc();
+        for i in 0..4u64 {
+            c.access(0, i * 0x10000, false, i);
+        }
+        match c.access(0, 0x90000, false, 99) {
+            AccessResult::MshrFull { .. } => {}
+            r => panic!("expected MshrFull, got {r:?}"),
+        }
+        assert_eq!(c.stats.mshr_stalls, 1);
+    }
+
+    #[test]
+    fn dirty_eviction_produces_writeback() {
+        let mut c = llc();
+        // Fill all 4 ways of set 0 with dirty lines. Set index uses
+        // (line/64) % sets; sets = 64. Stride of 64*64 bytes maps to the
+        // same set.
+        let stride = 64 * LINE;
+        for i in 0..4u64 {
+            c.access(0, i * stride, true, i);
+            c.fill(i * stride, 10);
+        }
+        // Fifth distinct line in the same set evicts the LRU dirty line.
+        match c.access(100, 4 * stride, false, 9) {
+            AccessResult::Miss { victim_writeback: Some(victim) } => {
+                assert_eq!(victim, 0, "LRU victim should be the first line");
+            }
+            r => panic!("expected dirty eviction, got {r:?}"),
+        }
+    }
+
+    #[test]
+    fn write_hit_marks_dirty() {
+        let mut c = llc();
+        c.access(0, 0x3000, false, 1);
+        c.fill(0x3000, 10);
+        c.access(20, 0x3000, true, 2); // write hit -> dirty
+        // Evict it by filling the set with four distinct same-set lines.
+        let stride = 64 * LINE;
+        for i in 1..=4u64 {
+            c.access(100, 0x3000 + i * stride, false, 10 + i);
+            c.fill(0x3000 + i * stride, 110);
+        }
+        assert!(c.stats.writebacks >= 1, "dirty line should have been written back");
+    }
+
+    #[test]
+    fn lru_prefers_invalid_ways() {
+        let mut c = llc();
+        c.access(0, 0x0, false, 1);
+        c.fill(0x0, 5);
+        // Second line in same set must not evict the first (3 ways free).
+        match c.access(10, 64 * LINE, false, 2) {
+            AccessResult::Miss { victim_writeback: None } => {}
+            r => panic!("unexpected {r:?}"),
+        }
+        assert_eq!(c.resident_lines(), 2);
+    }
+
+    #[test]
+    fn hit_rate_accounts_all_outcomes() {
+        let mut c = llc();
+        c.access(0, 0x0, false, 1);
+        c.fill(0x0, 5);
+        c.access(10, 0x0, false, 2);
+        c.access(10, 0x0, false, 3);
+        assert_eq!(c.stats.hits, 2);
+        assert_eq!(c.stats.misses, 1);
+        assert!((c.stats.hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

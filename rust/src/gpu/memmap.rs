@@ -1,0 +1,74 @@
+//! The GPU system-bus memory map (Fig. 5b).
+//!
+//! After EP enumeration, the bus address space is segmented by function:
+//! GPU local memory, the host segment behind the PCIe EP, and one HDM
+//! segment per CXL root port. The system bus consults this map (and the
+//! root complex its HDM decoder) on every LLC miss.
+
+/// Address-space regions of the system bus map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    /// On-board GPU memory (GDDR).
+    Local,
+    /// Host memory behind the PCIe EP (UVM's backing store).
+    Host,
+    /// CXL expander space: handled by the root complex's HDM decoder.
+    Expander,
+}
+
+/// The memory map: `[0, local)` local, `[local, local+expander)` CXL HDM,
+/// `[local+expander, ..)` host.
+#[derive(Debug, Clone, Copy)]
+pub struct MemMap {
+    pub local_bytes: u64,
+    pub expander_bytes: u64,
+}
+
+impl MemMap {
+    pub fn new(local_bytes: u64, expander_bytes: u64) -> MemMap {
+        MemMap { local_bytes, expander_bytes }
+    }
+
+    pub fn region(&self, addr: u64) -> Region {
+        if addr < self.local_bytes {
+            Region::Local
+        } else if addr < self.local_bytes + self.expander_bytes {
+            Region::Expander
+        } else {
+            Region::Host
+        }
+    }
+
+    /// Offset of an expander address within HDM space.
+    pub fn hdm_offset(&self, addr: u64) -> u64 {
+        debug_assert_eq!(self.region(addr), Region::Expander);
+        addr - self.local_bytes
+    }
+
+    /// Total directly-addressable bytes (local + expander).
+    pub fn device_visible(&self) -> u64 {
+        self.local_bytes + self.expander_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_partition_the_space() {
+        let m = MemMap::new(4 << 20, 40 << 20);
+        assert_eq!(m.region(0), Region::Local);
+        assert_eq!(m.region((4 << 20) - 1), Region::Local);
+        assert_eq!(m.region(4 << 20), Region::Expander);
+        assert_eq!(m.region((44 << 20) - 1), Region::Expander);
+        assert_eq!(m.region(44 << 20), Region::Host);
+    }
+
+    #[test]
+    fn hdm_offset_is_relative() {
+        let m = MemMap::new(4 << 20, 40 << 20);
+        assert_eq!(m.hdm_offset(4 << 20), 0);
+        assert_eq!(m.hdm_offset((4 << 20) + 123), 123);
+    }
+}

@@ -1,0 +1,28 @@
+//! GPU-side model: the Vortex-style compute front-end and cache system.
+//!
+//! Mirrors Fig. 5a's left half: streaming multiprocessors (SMs) issue
+//! memory requests through a shared last-level cache (LLC) onto the
+//! system bus, which routes by physical address to the local-memory
+//! controller, the PCIe EP (host), or the CXL root complex.
+//!
+//! The paper's evaluation drives this front-end from Vortex performance
+//! counters; ours drives it from the instruction mixes of Table 1b and
+//! the access streams of the real workload kernels executed via PJRT
+//! (see `workloads/` and `runtime/`).
+
+pub mod cache;
+pub mod memmap;
+pub mod warp;
+
+pub use cache::{AccessResult, Llc, LlcConfig};
+pub use memmap::{MemMap, Region};
+pub use warp::{Op, Warp, WarpStats};
+
+/// Cache-line size used throughout (CXL.mem demand granularity).
+pub const LINE: u64 = 64;
+
+/// Align an address down to its cache line.
+#[inline]
+pub fn line_of(addr: u64) -> u64 {
+    addr & !(LINE - 1)
+}

@@ -1,0 +1,159 @@
+//! Warp (SM hardware-thread) front-end.
+//!
+//! Each warp executes an in-order instruction stream of compute bursts,
+//! loads and stores (already coalesced to 64 B lines, as Vortex's LSU
+//! does before the LLC). Loads are non-blocking up to a memory-level-
+//! parallelism limit; stores are fire-and-forget into the LLC unless the
+//! cache backpressures. The coordinator's `System` owns the clock and
+//! drives these state machines.
+
+use std::collections::VecDeque;
+
+use crate::sim::Time;
+
+/// One dynamic instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Execute for `dur` picoseconds without touching memory.
+    Compute { dur: Time },
+    /// 64 B coalesced load.
+    Load { addr: u64 },
+    /// 64 B coalesced store.
+    Store { addr: u64 },
+}
+
+/// Per-warp execution statistics.
+#[derive(Debug, Clone, Default)]
+pub struct WarpStats {
+    pub computes: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub compute_time: Time,
+    pub stall_time: Time,
+    pub finish: Time,
+}
+
+/// An in-order warp.
+#[derive(Debug)]
+pub struct Warp {
+    pub id: usize,
+    ops: VecDeque<Op>,
+    /// Loads issued but not yet completed.
+    pub outstanding: usize,
+    /// Max outstanding loads before the warp stalls (MLP).
+    pub mlp: usize,
+    /// The warp is stalled waiting for any load completion.
+    pub waiting: bool,
+    /// Set when the op stream is exhausted *and* all loads returned.
+    pub done: bool,
+    pub stats: WarpStats,
+}
+
+impl Warp {
+    pub fn new(id: usize, ops: Vec<Op>, mlp: usize) -> Warp {
+        Warp {
+            id,
+            ops: ops.into(),
+            outstanding: 0,
+            mlp: mlp.max(1),
+            waiting: false,
+            done: false,
+            stats: WarpStats::default(),
+        }
+    }
+
+    /// Next op without consuming it.
+    pub fn peek(&self) -> Option<&Op> {
+        self.ops.front()
+    }
+
+    /// Consume the next op.
+    pub fn pop(&mut self) -> Option<Op> {
+        self.ops.pop_front()
+    }
+
+    /// True when the warp can issue another load without stalling.
+    pub fn can_issue_load(&self) -> bool {
+        self.outstanding < self.mlp
+    }
+
+    /// Record a load issue.
+    pub fn issue_load(&mut self) {
+        debug_assert!(self.can_issue_load());
+        self.outstanding += 1;
+        self.stats.loads += 1;
+    }
+
+    /// Record a load completion; returns true if the warp was stalled on
+    /// it (caller should reschedule the warp).
+    pub fn complete_load(&mut self) -> bool {
+        debug_assert!(self.outstanding > 0);
+        self.outstanding -= 1;
+        let was_waiting = self.waiting;
+        self.waiting = false;
+        was_waiting
+    }
+
+    /// Remaining ops (for progress reporting).
+    pub fn remaining(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Mark final completion.
+    pub fn finish(&mut self, now: Time) {
+        self.done = true;
+        self.stats.finish = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::NS;
+
+    #[test]
+    fn ops_pop_in_order() {
+        let mut w = Warp::new(
+            0,
+            vec![Op::Compute { dur: NS }, Op::Load { addr: 64 }, Op::Store { addr: 128 }],
+            4,
+        );
+        assert_eq!(w.pop(), Some(Op::Compute { dur: NS }));
+        assert_eq!(w.pop(), Some(Op::Load { addr: 64 }));
+        assert_eq!(w.pop(), Some(Op::Store { addr: 128 }));
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn mlp_limits_outstanding_loads() {
+        let mut w = Warp::new(0, vec![], 2);
+        assert!(w.can_issue_load());
+        w.issue_load();
+        w.issue_load();
+        assert!(!w.can_issue_load());
+        w.complete_load();
+        assert!(w.can_issue_load());
+    }
+
+    #[test]
+    fn completion_wakes_waiting_warp() {
+        let mut w = Warp::new(0, vec![], 1);
+        w.issue_load();
+        w.waiting = true;
+        assert!(w.complete_load(), "waiting warp must be woken");
+        assert!(!w.waiting);
+        w.issue_load();
+        assert!(!w.complete_load(), "non-waiting warp needs no wake");
+    }
+
+    #[test]
+    fn stats_count_issues() {
+        let mut w = Warp::new(0, vec![], 8);
+        w.issue_load();
+        w.issue_load();
+        assert_eq!(w.stats.loads, 2);
+        w.finish(42);
+        assert!(w.done);
+        assert_eq!(w.stats.finish, 42);
+    }
+}

@@ -1,0 +1,32 @@
+//! # CXL-GPU
+//!
+//! Production-grade reproduction of *"CXL-GPU: Pushing GPU Memory
+//! Boundaries with the Integration of CXL Technologies"* (Gouk et al.,
+//! 2025): a GPU memory-expansion system built on CXL root ports, a
+//! low-latency layered CXL controller model, and the paper's two
+//! controller optimizations — **Speculative Read** (SR) and
+//! **Deterministic Store** (DS).
+//!
+//! The crate is a three-layer stack:
+//! - **L3 (this crate)** — the full-system discrete-event simulator (GPU
+//!   SMs → LLC → system bus → CXL root complex → EPs with DRAM/SSD
+//!   media), the SR/DS engines, the UVM/GDS baselines, plus the
+//!   experiment coordinator and the PJRT runtime that executes the real
+//!   workload compute.
+//! - **L2 (python/compile/model.py)** — the 13 evaluation workloads as
+//!   JAX graphs, AOT-lowered once to `artifacts/*.hlo.txt`.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels for the workload
+//!   hot-spots, validated against pure-jnp oracles.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod cxl;
+pub mod gpu;
+pub mod media;
+pub mod rootcomplex;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,232 @@
+//! `cxl-gpu` — CLI launcher for the CXL-GPU reproduction.
+//!
+//! Subcommands:
+//!   run          one (workload, config, media) simulation
+//!   suite        all 13 workloads under one config
+//!   experiments  reproduce the paper's figures/tables (--fig to select)
+//!   latency      Fig. 3b controller round-trip comparison
+//!   execute      run an AOT workload artifact through PJRT (real compute)
+//!   list         show workloads, configs, media
+
+use cxl_gpu::coordinator::config::{media_from_name, SystemConfig};
+use cxl_gpu::coordinator::experiments::{self, Scale};
+use cxl_gpu::coordinator::runner::run_suite;
+use cxl_gpu::media::MediaKind;
+use cxl_gpu::util::bench::Table;
+use cxl_gpu::util::cli::{self, OptSpec};
+use cxl_gpu::workloads::table1b::ALL_WORKLOADS;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli::parse(
+        &argv,
+        &["workload", "config", "media", "ops", "fig", "toml", "artifacts", "seed", "json"],
+    ) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+
+    let result = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("suite") => cmd_suite(&args),
+        Some("experiments") => cmd_experiments(&args),
+        Some("latency") => {
+            experiments::fig3b(true);
+            Ok(())
+        }
+        Some("execute") => cmd_execute(&args),
+        Some("list") => {
+            cmd_list();
+            Ok(())
+        }
+        _ => {
+            print!("{}", usage());
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    cli::usage(
+        "cxl-gpu",
+        "GPU memory expansion over CXL: full-system simulator + PJRT workload runtime",
+        &[
+            ("run", "simulate one workload under one configuration"),
+            ("suite", "simulate all 13 workloads under one configuration"),
+            ("experiments", "reproduce the paper's figures (--fig 3b|9a|9b|9c|9d|9e|table1b|headline)"),
+            ("latency", "Fig. 3b controller round-trip comparison"),
+            ("execute", "run an AOT workload artifact via PJRT (real compute)"),
+            ("list", "show workloads, configurations and media"),
+        ],
+        &[
+            OptSpec { name: "workload", help: "workload name (see `list`)", takes_value: true },
+            OptSpec { name: "config", help: "configuration name (default cxl-sr)", takes_value: true },
+            OptSpec { name: "media", help: "dram|optane|znand|nand (default znand)", takes_value: true },
+            OptSpec { name: "ops", help: "total dynamic ops (default 300000)", takes_value: true },
+            OptSpec { name: "fig", help: "figure selector for `experiments`", takes_value: true },
+            OptSpec { name: "toml", help: "TOML config file with [sim] overrides", takes_value: true },
+            OptSpec { name: "artifacts", help: "artifacts dir for `execute` (default artifacts/)", takes_value: true },
+            OptSpec { name: "quick", help: "smaller sweeps for experiments", takes_value: false },
+        ],
+    )
+}
+
+fn parse_media(args: &cxl_gpu::util::cli::Args) -> Result<MediaKind, String> {
+    let name = args.get_or("media", "znand");
+    media_from_name(name).ok_or_else(|| format!("unknown media `{name}`"))
+}
+
+fn cmd_run(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
+    let workload = args.get_or("workload", "vadd");
+    let config = args.get_or("config", "cxl-sr");
+    let media = parse_media(args)?;
+    let mut cfg = SystemConfig::named(config, media);
+    if let Some(path) = args.get("toml") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        cfg.apply_toml(&cxl_gpu::util::toml::parse(&text)?);
+    }
+    cfg.total_ops = args.get_u64("ops", cfg.total_ops as u64)? as usize;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let spec = cxl_gpu::workloads::table1b::spec(workload);
+    let r = cxl_gpu::coordinator::runner::run_with(spec, &cfg);
+    println!("{} on {} ({}): {}", workload, config, media.name(), r.metrics.summary_line());
+    Ok(())
+}
+
+fn cmd_suite(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
+    let config = args.get_or("config", "cxl-sr");
+    let media = parse_media(args)?;
+    let ops = args.get_u64("ops", 120_000)? as usize;
+    let results = run_suite(config, media, Some(ops));
+    if let Some(path) = args.get("json") {
+        write_json_report(path, config, &results)?;
+        println!("wrote {path}");
+    }
+    let mut t = Table::new(
+        &format!("suite: {config} on {}", media.name()),
+        &["workload", "exec (ms)", "load avg", "llc hit", "ep hit", "faults", "gc"],
+    );
+    for r in &results {
+        t.rowv(vec![
+            r.workload.into(),
+            format!("{:.3}", r.metrics.exec_ms()),
+            format!("{:.1} µs", r.metrics.load_latency.mean() / 1e6),
+            format!("{:.1}%", r.metrics.llc.hit_rate() * 100.0),
+            format!("{:.1}%", r.metrics.ep_hit_rate() * 100.0),
+            r.metrics.faults.to_string(),
+            r.metrics.gc_episodes.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_experiments(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
+    let scale = if args.has_flag("quick") { Scale::quick() } else { Scale::default() };
+    let which = args.get_or("fig", "all");
+    let run_one = |f: &str| -> Result<(), String> {
+        match f {
+            "3b" => {
+                experiments::fig3b(true);
+            }
+            "table1b" => {
+                experiments::table1b(true);
+            }
+            "9a" => {
+                experiments::fig9a(scale, true);
+            }
+            "9b" => {
+                experiments::fig9b(scale, true);
+            }
+            "9c" => {
+                experiments::fig9c(scale, true);
+            }
+            "9d" => {
+                experiments::fig9d(scale, true);
+            }
+            "9e" => {
+                experiments::fig9e(scale, true);
+            }
+            "headline" => {
+                experiments::headline(scale, true);
+            }
+            other => return Err(format!("unknown figure `{other}`")),
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for f in ["3b", "table1b", "9a", "9b", "9c", "9d", "9e", "headline"] {
+            run_one(f)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}
+
+fn cmd_execute(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let workload = args.get_or("workload", "vadd");
+    let rt = cxl_gpu::runtime::Runtime::load(dir).map_err(|e| e.to_string())?;
+    let out = rt.execute_named(workload, 42).map_err(|e| e.to_string())?;
+    println!(
+        "{workload}: executed via PJRT ({} outputs) — checksum {:.6}, {} elements",
+        out.outputs, out.checksum, out.elements
+    );
+    Ok(())
+}
+
+fn cmd_list() {
+    println!("workloads (Table 1b):");
+    for w in ALL_WORKLOADS {
+        println!(
+            "  {:8} {:18} compute {:.1}% load {:.1}%",
+            w.name,
+            w.category.name(),
+            w.compute_ratio * 100.0,
+            w.load_ratio * 100.0
+        );
+    }
+    println!("\nconfigurations: {}", SystemConfig::known_names().join(", "));
+    println!("media: dram, optane, znand, nand");
+}
+
+
+/// Emit a machine-readable run report (consumed by external tooling and
+/// by EXPERIMENTS.md bookkeeping).
+fn write_json_report(
+    path: &str,
+    config: &str,
+    results: &[cxl_gpu::coordinator::runner::RunResult],
+) -> Result<(), String> {
+    use cxl_gpu::util::json::Json;
+    use std::collections::BTreeMap;
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("workload".into(), Json::Str(r.workload.into()));
+            m.insert("config".into(), Json::Str(r.config.clone()));
+            m.insert("media".into(), Json::Str(r.media.name().into()));
+            m.insert("exec_ms".into(), Json::Num(r.metrics.exec_ms()));
+            m.insert("load_lat_ns".into(), Json::Num(r.metrics.load_latency.mean() / 1e3));
+            m.insert("llc_hit".into(), Json::Num(r.metrics.llc.hit_rate()));
+            m.insert("ep_hit".into(), Json::Num(r.metrics.ep_hit_rate()));
+            m.insert("faults".into(), Json::Num(r.metrics.faults as f64));
+            m.insert("gc_episodes".into(), Json::Num(r.metrics.gc_episodes as f64));
+            m.insert("sr_issued".into(), Json::Num(r.metrics.sr_issued as f64));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("suite".into(), Json::Str(config.into()));
+    top.insert("results".into(), Json::Arr(rows));
+    std::fs::write(path, Json::Obj(top).to_string()).map_err(|e| e.to_string())
+}

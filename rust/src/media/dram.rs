@@ -1,0 +1,230 @@
+//! Bank/row-level DDR5 timing model (DRAMSim3 stand-in).
+//!
+//! Captures the three timing regimes a row-buffer DRAM exposes: row hit
+//! (tCAS), row miss (tRP + tRCD + tCAS), and bank-busy queueing, plus
+//! data-bus serialization per channel. Defaults model the paper's
+//! DDR5-5600 expander media (Table 1a).
+
+use crate::sim::{transfer_time, Time, NS};
+
+use super::MediaStats;
+
+/// DDR timing parameters (picoseconds).
+#[derive(Debug, Clone, Copy)]
+pub struct DramTimings {
+    /// Column access (CAS) latency — row-buffer hit cost.
+    pub t_cas: Time,
+    /// Row activate (RAS-to-CAS) delay.
+    pub t_rcd: Time,
+    /// Precharge time.
+    pub t_rp: Time,
+    /// Per-channel data bandwidth, GB/s.
+    pub channel_gbps: f64,
+    /// Channels and banks per channel.
+    pub channels: usize,
+    pub banks_per_channel: usize,
+    /// Row (page) size in bytes — determines row-hit locality.
+    pub row_bytes: u64,
+    /// Fixed memory-subsystem traversal cost added to every access
+    /// (controller front-end, PHY, board). Vortex-class systems see
+    /// hundreds of ns to DDR — which is exactly why the paper's ~70 ns
+    /// CXL protocol adder costs only 2-20% end to end (Fig. 9a).
+    pub base_lat: Time,
+}
+
+impl DramTimings {
+    /// DDR5-5600: tCAS ≈ tRCD ≈ tRP ≈ 16 ns (CL46 at 5600 MT/s),
+    /// 44.8 GB/s per channel, 2 channels x 16 banks, 8 KiB rows.
+    pub fn ddr5_5600() -> DramTimings {
+        DramTimings {
+            t_cas: 16 * NS,
+            t_rcd: 16 * NS,
+            t_rp: 16 * NS,
+            channel_gbps: 44.8,
+            channels: 2,
+            banks_per_channel: 16,
+            row_bytes: 8192,
+            base_lat: 220 * NS,
+        }
+    }
+
+    /// GDDR-like local GPU memory: same structure, higher bandwidth and
+    /// slightly tighter timings (used for the GPU's on-board memory).
+    pub fn gddr_local() -> DramTimings {
+        DramTimings {
+            t_cas: 14 * NS,
+            t_rcd: 14 * NS,
+            t_rp: 14 * NS,
+            channel_gbps: 112.0,
+            channels: 8,
+            banks_per_channel: 16,
+            row_bytes: 4096,
+            base_lat: 220 * NS,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Bank {
+    open_row: Option<u64>,
+    busy_until: Time,
+}
+
+/// The DRAM device model: per-bank state + per-channel bus occupancy.
+#[derive(Debug, Clone)]
+pub struct DramModel {
+    pub timings: DramTimings,
+    banks: Vec<Bank>,
+    bus_free: Vec<Time>,
+    pub stats: MediaStats,
+    row_hits: u64,
+    row_misses: u64,
+}
+
+impl DramModel {
+    pub fn new(timings: DramTimings) -> DramModel {
+        let nbanks = timings.channels * timings.banks_per_channel;
+        DramModel {
+            timings,
+            banks: vec![Bank { open_row: None, busy_until: 0 }; nbanks],
+            bus_free: vec![0; timings.channels],
+            stats: MediaStats::default(),
+            row_hits: 0,
+            row_misses: 0,
+        }
+    }
+
+    fn map(&self, addr: u64) -> (usize, usize, u64) {
+        // Interleave channels on 256 B chunks, banks on rows.
+        let chunk = addr / 256;
+        let channel = (chunk as usize) % self.timings.channels;
+        let row = addr / self.timings.row_bytes;
+        let bank_in_ch = (row as usize) % self.timings.banks_per_channel;
+        let bank = channel * self.timings.banks_per_channel + bank_in_ch;
+        (channel, bank, row)
+    }
+
+    /// Service one access of `len` bytes at `addr` starting no earlier
+    /// than `now`; returns completion time and updates bank/bus state.
+    pub fn access(&mut self, now: Time, addr: u64, len: u64, is_write: bool) -> Time {
+        let (channel, bank_idx, row) = self.map(addr);
+        let bank = &mut self.banks[bank_idx];
+        let start = now.max(bank.busy_until);
+        let t = &self.timings;
+        let array_time = match bank.open_row {
+            Some(open) if open == row => {
+                self.row_hits += 1;
+                t.t_cas
+            }
+            Some(_) => {
+                self.row_misses += 1;
+                t.t_rp + t.t_rcd + t.t_cas
+            }
+            None => {
+                self.row_misses += 1;
+                t.t_rcd + t.t_cas
+            }
+        };
+        bank.open_row = Some(row);
+        let array_done = start + array_time;
+        bank.busy_until = array_done;
+
+        // Data burst occupies the channel bus.
+        let bus_start = array_done.max(self.bus_free[channel]);
+        let burst = transfer_time(len.max(64), t.channel_gbps);
+        let done = bus_start + burst + t.base_lat;
+        self.bus_free[channel] = bus_start + burst;
+
+        if is_write {
+            self.stats.writes += 1;
+            self.stats.write_bytes += len;
+        } else {
+            self.stats.reads += 1;
+            self.stats.read_bytes += len;
+        }
+        done
+    }
+
+    /// Unloaded row-hit latency (for calibration assertions).
+    pub fn hit_latency(&self) -> Time {
+        self.timings.base_lat + self.timings.t_cas + transfer_time(64, self.timings.channel_gbps)
+    }
+
+    pub fn row_hit_rate(&self) -> f64 {
+        let total = self.row_hits + self.row_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> DramModel {
+        DramModel::new(DramTimings::ddr5_5600())
+    }
+
+    #[test]
+    fn row_hit_is_cheaper_than_miss() {
+        let mut m = model();
+        let t0 = m.access(0, 0x0, 64, false); // cold: activate + cas
+        let t1 = m.access(t0, 0x40, 64, false) - t0; // same row: hit
+        let t2 = m.access(t0 + t1 + 1_000_000, 64 * 8192, 64, false)
+            - (t0 + t1 + 1_000_000); // same bank different row region
+        assert!(t1 < t2, "hit {t1} not cheaper than miss {t2}");
+    }
+
+    #[test]
+    fn sequential_stream_mostly_row_hits() {
+        let mut m = model();
+        let mut now = 0;
+        for i in 0..512u64 {
+            now = m.access(now, i * 64, 64, false);
+        }
+        assert!(m.row_hit_rate() > 0.8, "hit rate {}", m.row_hit_rate());
+    }
+
+    #[test]
+    fn random_stream_mostly_row_misses() {
+        let mut m = model();
+        let mut now = 0;
+        let mut addr = 0x12345u64;
+        for _ in 0..512 {
+            addr = addr.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            now = m.access(now, addr % (1 << 30) & !63, 64, false);
+        }
+        assert!(m.row_hit_rate() < 0.3, "hit rate {}", m.row_hit_rate());
+    }
+
+    #[test]
+    fn bank_conflicts_serialize() {
+        let mut m = model();
+        // Two accesses to the same bank, different rows, at the same time:
+        // the second must wait for the first.
+        let row_stride = m.timings.row_bytes * m.timings.banks_per_channel as u64;
+        let a = m.access(0, 0, 64, false);
+        let b = m.access(0, row_stride, 64, false);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn unloaded_hit_latency_includes_subsystem_base() {
+        let m = model();
+        let ns = m.hit_latency() as f64 / NS as f64;
+        assert!((220.0..260.0).contains(&ns), "{ns} ns");
+    }
+
+    #[test]
+    fn stats_track_reads_and_writes() {
+        let mut m = model();
+        m.access(0, 0, 64, false);
+        m.access(0, 4096, 128, true);
+        assert_eq!(m.stats.reads, 1);
+        assert_eq!(m.stats.writes, 1);
+        assert_eq!(m.stats.write_bytes, 128);
+    }
+}

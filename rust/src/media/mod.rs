@@ -1,0 +1,83 @@
+//! Endpoint backend media models: DDR5 DRAM and three SSD classes
+//! (Optane PRAM, Z-NAND ultra-low-latency flash, conventional NAND).
+//!
+//! The paper's simulator takes memory latencies from DRAMSim3 and device
+//! datasheets (Table 1a); per the substitution rule we implement the
+//! timing models directly — a bank/row-level DDR5 model ([`dram`]) and a
+//! flash model with internal DRAM caching, ingress queueing, garbage
+//! collection and wear-leveling ([`ssd`]) — which reproduce the latency
+//! *distributions* the SR/DS mechanisms react to.
+
+pub mod dram;
+pub mod ssd;
+
+pub use dram::{DramModel, DramTimings};
+pub use ssd::{SsdKind, SsdModel, SsdParams};
+
+use crate::sim::Time;
+
+/// Media classes evaluated by the paper (Table 1a).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MediaKind {
+    /// DDR5-5600 DRAM expander.
+    Ddr5,
+    /// Intel Optane P5800X (PRAM): no GC but fine-grained wear-leveling.
+    Optane,
+    /// Samsung 983 ZET (Z-NAND): ultra-low-latency flash with GC.
+    Znand,
+    /// Samsung 980 Pro (conventional NAND): slowest, longest GC.
+    Nand,
+}
+
+impl MediaKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            MediaKind::Ddr5 => "DRAM",
+            MediaKind::Optane => "Optane",
+            MediaKind::Znand => "Z-NAND",
+            MediaKind::Nand => "NAND",
+        }
+    }
+
+    /// Short letter used by Fig. 9c's column labels (O / Z / N).
+    pub fn letter(self) -> &'static str {
+        match self {
+            MediaKind::Ddr5 => "D",
+            MediaKind::Optane => "O",
+            MediaKind::Znand => "Z",
+            MediaKind::Nand => "N",
+        }
+    }
+
+    pub fn is_ssd(self) -> bool {
+        !matches!(self, MediaKind::Ddr5)
+    }
+}
+
+/// Counters every media model maintains (consumed by EXPERIMENTS.md rows).
+#[derive(Debug, Clone, Default)]
+pub struct MediaStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+    /// SSD-internal DRAM cache hits/misses (demand reads only).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Prefetches installed by MemSpecRd.
+    pub prefetches: u64,
+    /// Garbage-collection episodes and total stalled time.
+    pub gc_episodes: u64,
+    pub gc_time: Time,
+}
+
+impl MediaStats {
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+}

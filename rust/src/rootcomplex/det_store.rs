@@ -1,0 +1,262 @@
+//! Deterministic Store (DS) engine (Fig. 8).
+//!
+//! Stores to an SSD EP are acknowledged at GPU-local-memory speed: the
+//! request is sent concurrently to GPU memory and the SSD and released
+//! immediately ("fire and forget"). When the SSD reports congestion or an
+//! internal task through DevLoad, incoming stores are absorbed into a
+//! stack in reserved GPU memory instead; each entry's location is tracked
+//! in the system bus's internal SRAM as a red-black tree. A background
+//! flush drains the stack once the EP recovers, and demand reads are
+//! intercepted: if the address sits in the buffer, the read is served
+//! from GPU memory, bypassing the congested backend entirely.
+
+use crate::cxl::DevLoad;
+use crate::gpu::line_of;
+use crate::sim::Time;
+
+use super::rbtree::RbTree;
+
+/// What the root complex must do with an incoming store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreAction {
+    /// Mirror to GPU memory and forward to the EP now (fast ack).
+    DualWrite,
+    /// Absorb into the GPU-memory stack only (EP congested); a background
+    /// flush will forward it later.
+    Buffer,
+    /// Reserved region exhausted: the store must block on the EP (tail
+    /// case the paper accepts as unavoidable).
+    Block,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct DsStats {
+    pub stores_seen: u64,
+    pub dual_writes: u64,
+    pub buffered: u64,
+    pub blocked: u64,
+    pub flushed: u64,
+    pub read_intercepts: u64,
+    pub max_stack_bytes: u64,
+}
+
+/// The per-port DS engine.
+#[derive(Debug, Default)]
+pub struct DetStoreEngine {
+    pub enabled: bool,
+    /// Reserved GPU-memory capacity for the stack, bytes.
+    capacity: u64,
+    /// Current buffered bytes.
+    stack_bytes: u64,
+    /// Stack entries (LIFO order), line address + bytes.
+    stack: Vec<(u64, u64)>,
+    /// SRAM address list: line -> buffered bytes (red-black tree).
+    sram: RbTree<u64>,
+    pub stats: DsStats,
+}
+
+impl DetStoreEngine {
+    pub fn new(enabled: bool, capacity: u64) -> DetStoreEngine {
+        DetStoreEngine {
+            enabled,
+            capacity,
+            stack_bytes: 0,
+            stack: Vec::new(),
+            sram: RbTree::new(),
+            stats: DsStats::default(),
+        }
+    }
+
+    pub fn buffered_bytes(&self) -> u64 {
+        self.stack_bytes
+    }
+
+    pub fn buffered_entries(&self) -> usize {
+        self.sram.len()
+    }
+
+    /// Classify an incoming store given the EP's telemetry.
+    pub fn on_store(&mut self, _now: Time, addr: u64, len: u64, devload: DevLoad) -> StoreAction {
+        self.stats.stores_seen += 1;
+        if !self.enabled {
+            // Without DS every store behaves like a dual write whose ack
+            // still waits on the EP — the caller models that.
+            return StoreAction::DualWrite;
+        }
+        let line = line_of(addr);
+        // Re-buffering an already-buffered line just updates it in place.
+        if self.sram.contains(line) {
+            self.stats.buffered += 1;
+            return StoreAction::Buffer;
+        }
+        // Buffer only on Severe: the paper diverts writes when DevLoad
+        // indicates congestion or an announced internal task; buffering
+        // at Moderate would starve the EP of writes it can still absorb.
+        if devload == DevLoad::Severe {
+            if self.stack_bytes + len > self.capacity {
+                self.stats.blocked += 1;
+                return StoreAction::Block;
+            }
+            self.push(line, len);
+            self.stats.buffered += 1;
+            StoreAction::Buffer
+        } else {
+            self.stats.dual_writes += 1;
+            StoreAction::DualWrite
+        }
+    }
+
+    fn push(&mut self, line: u64, len: u64) {
+        self.stack.push((line, len));
+        self.stack_bytes += len;
+        self.sram.insert(line, len);
+        self.stats.max_stack_bytes = self.stats.max_stack_bytes.max(self.stack_bytes);
+    }
+
+    /// Does a read at `addr` hit the buffer? (Served from GPU memory.)
+    pub fn intercept_read(&mut self, addr: u64) -> bool {
+        let hit = self.sram.contains(line_of(addr));
+        if hit {
+            self.stats.read_intercepts += 1;
+        }
+        hit
+    }
+
+    /// Take up to `max` entries for a background flush, in ascending
+    /// address order (friendlier to the flash translation layer than the
+    /// LIFO stack order). Entries stay tracked until `flush_done`.
+    pub fn flush_batch(&mut self, max: usize) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut key = 0u64;
+        while out.len() < max {
+            match self.sram.ceiling(key) {
+                Some(k) => {
+                    let len = *self.sram.get(k).unwrap();
+                    out.push((k, len));
+                    key = k + 1;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// A flushed entry has reached the EP: drop it from the stack/SRAM.
+    pub fn flush_done(&mut self, line: u64) {
+        if let Some(len) = self.sram.remove(line) {
+            self.stack_bytes -= len;
+            self.stats.flushed += 1;
+            // Lazy stack compaction: remove a matching entry.
+            if let Some(pos) = self.stack.iter().rposition(|&(l, _)| l == line) {
+                self.stack.swap_remove(pos);
+            }
+        }
+    }
+
+    /// Consistency probe for property tests: buffered accounting matches.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.sram.check_invariants().map_err(|e| format!("sram rbtree: {e}"))?;
+        if self.sram.len() != self.stack.len() {
+            return Err(format!(
+                "sram has {} entries but stack has {}",
+                self.sram.len(),
+                self.stack.len()
+            ));
+        }
+        let sum: u64 = self.stack.iter().map(|&(_, l)| l).sum();
+        if sum != self.stack_bytes {
+            return Err(format!("stack bytes {sum} != accounted {}", self.stack_bytes));
+        }
+        if self.stack_bytes > self.capacity {
+            return Err("stack exceeds reserved capacity".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> DetStoreEngine {
+        DetStoreEngine::new(true, 1 << 20)
+    }
+
+    #[test]
+    fn healthy_ep_gets_dual_writes() {
+        let mut e = engine();
+        assert_eq!(e.on_store(0, 0x40, 64, DevLoad::Light), StoreAction::DualWrite);
+        assert_eq!(e.on_store(0, 0x80, 64, DevLoad::Optimal), StoreAction::DualWrite);
+        assert_eq!(e.buffered_entries(), 0);
+    }
+
+    #[test]
+    fn overloaded_ep_buffers() {
+        let mut e = engine();
+        assert_eq!(e.on_store(0, 0x100, 64, DevLoad::Severe), StoreAction::Buffer);
+        assert_eq!(e.buffered_entries(), 1);
+        assert_eq!(e.buffered_bytes(), 64);
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rewrites_to_buffered_line_merge() {
+        let mut e = engine();
+        e.on_store(0, 0x100, 64, DevLoad::Severe);
+        e.on_store(1, 0x100, 64, DevLoad::Severe);
+        assert_eq!(e.buffered_entries(), 1, "same line buffers once");
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn capacity_exhaustion_blocks() {
+        let mut e = DetStoreEngine::new(true, 128);
+        assert_eq!(e.on_store(0, 0x0, 64, DevLoad::Severe), StoreAction::Buffer);
+        assert_eq!(e.on_store(0, 0x40, 64, DevLoad::Severe), StoreAction::Buffer);
+        assert_eq!(e.on_store(0, 0x80, 64, DevLoad::Severe), StoreAction::Block);
+        assert_eq!(e.stats.blocked, 1);
+    }
+
+    #[test]
+    fn reads_intercepted_while_buffered() {
+        let mut e = engine();
+        e.on_store(0, 0x2000, 64, DevLoad::Severe);
+        assert!(e.intercept_read(0x2020), "same line, different offset");
+        assert!(!e.intercept_read(0x3000));
+        assert_eq!(e.stats.read_intercepts, 1);
+    }
+
+    #[test]
+    fn flush_drains_in_address_order() {
+        let mut e = engine();
+        for addr in [0x300u64, 0x100, 0x200] {
+            e.on_store(0, addr, 64, DevLoad::Severe);
+        }
+        let batch = e.flush_batch(10);
+        let addrs: Vec<u64> = batch.iter().map(|&(a, _)| a).collect();
+        assert_eq!(addrs, vec![0x100, 0x200, 0x300]);
+        for (line, _) in batch {
+            e.flush_done(line);
+        }
+        assert_eq!(e.buffered_entries(), 0);
+        assert_eq!(e.buffered_bytes(), 0);
+        assert!(!e.intercept_read(0x100), "flushed entries no longer intercept");
+        e.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn flush_batch_respects_max() {
+        let mut e = engine();
+        for i in 0..10u64 {
+            e.on_store(0, i * 64, 64, DevLoad::Severe);
+        }
+        assert_eq!(e.flush_batch(4).len(), 4);
+    }
+
+    #[test]
+    fn disabled_engine_never_buffers() {
+        let mut e = DetStoreEngine::new(false, 1 << 20);
+        assert_eq!(e.on_store(0, 0x0, 64, DevLoad::Severe), StoreAction::DualWrite);
+        assert_eq!(e.buffered_entries(), 0);
+    }
+}

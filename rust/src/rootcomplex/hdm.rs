@@ -1,0 +1,125 @@
+//! HDM decoder: maps host physical addresses (HPA) to root ports.
+//!
+//! During initialization the simplified core enumerates CXL EPs, reads
+//! their HDM capability registers, and programs the host bridge's HDM
+//! decoder with each root port's base/size (Fig. 5a). At run time every
+//! expander request consults this decoder to pick its port.
+
+/// One root port's HDM window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HdmEntry {
+    pub port: usize,
+    pub base: u64,
+    pub size: u64,
+}
+
+impl HdmEntry {
+    pub fn end(&self) -> u64 {
+        self.base + self.size
+    }
+
+    pub fn contains(&self, hpa: u64) -> bool {
+        (self.base..self.end()).contains(&hpa)
+    }
+}
+
+/// The host bridge's HDM decoder: a sorted, non-overlapping window list.
+#[derive(Debug, Clone, Default)]
+pub struct HdmDecoder {
+    entries: Vec<HdmEntry>,
+}
+
+impl HdmDecoder {
+    pub fn new() -> HdmDecoder {
+        HdmDecoder { entries: Vec::new() }
+    }
+
+    /// Program a window. Firmware runs once at init, so overlaps are a
+    /// programming error and rejected.
+    pub fn program(&mut self, entry: HdmEntry) -> Result<(), String> {
+        if entry.size == 0 {
+            return Err("zero-size HDM window".into());
+        }
+        for e in &self.entries {
+            if entry.base < e.end() && e.base < entry.end() {
+                return Err(format!(
+                    "HDM window [{:#x},{:#x}) overlaps port {} window [{:#x},{:#x})",
+                    entry.base,
+                    entry.end(),
+                    e.port,
+                    e.base,
+                    e.end()
+                ));
+            }
+        }
+        self.entries.push(entry);
+        self.entries.sort_by_key(|e| e.base);
+        Ok(())
+    }
+
+    /// Decode an HPA to (port, offset-within-window).
+    pub fn decode(&self, hpa: u64) -> Option<(usize, u64)> {
+        // Binary search over sorted bases.
+        let idx = self.entries.partition_point(|e| e.base <= hpa);
+        if idx == 0 {
+            return None;
+        }
+        let e = &self.entries[idx - 1];
+        if e.contains(hpa) {
+            Some((e.port, hpa - e.base))
+        } else {
+            None
+        }
+    }
+
+    pub fn entries(&self) -> &[HdmEntry] {
+        &self.entries
+    }
+
+    /// Total decoded bytes.
+    pub fn total_size(&self) -> u64 {
+        self.entries.iter().map(|e| e.size).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_and_decode() {
+        let mut d = HdmDecoder::new();
+        d.program(HdmEntry { port: 0, base: 0x0, size: 0x1000 }).unwrap();
+        d.program(HdmEntry { port: 1, base: 0x1000, size: 0x2000 }).unwrap();
+        assert_eq!(d.decode(0x0), Some((0, 0)));
+        assert_eq!(d.decode(0xfff), Some((0, 0xfff)));
+        assert_eq!(d.decode(0x1000), Some((1, 0)));
+        assert_eq!(d.decode(0x2fff), Some((1, 0x1fff)));
+        assert_eq!(d.decode(0x3000), None);
+    }
+
+    #[test]
+    fn rejects_overlap() {
+        let mut d = HdmDecoder::new();
+        d.program(HdmEntry { port: 0, base: 0x1000, size: 0x1000 }).unwrap();
+        assert!(d.program(HdmEntry { port: 1, base: 0x1800, size: 0x1000 }).is_err());
+        assert!(d.program(HdmEntry { port: 1, base: 0x0, size: 0x1001 }).is_err());
+        assert!(d.program(HdmEntry { port: 1, base: 0x2000, size: 0 }).is_err());
+    }
+
+    #[test]
+    fn gaps_decode_to_none() {
+        let mut d = HdmDecoder::new();
+        d.program(HdmEntry { port: 0, base: 0x0, size: 0x100 }).unwrap();
+        d.program(HdmEntry { port: 1, base: 0x1000, size: 0x100 }).unwrap();
+        assert_eq!(d.decode(0x500), None);
+    }
+
+    #[test]
+    fn total_size_sums_windows() {
+        let mut d = HdmDecoder::new();
+        d.program(HdmEntry { port: 0, base: 0, size: 10 << 20 }).unwrap();
+        d.program(HdmEntry { port: 1, base: 10 << 20, size: 30 << 20 }).unwrap();
+        assert_eq!(d.total_size(), 40 << 20);
+    }
+}

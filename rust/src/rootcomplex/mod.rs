@@ -1,0 +1,186 @@
+//! The GPU's CXL root complex (Fig. 5): host bridge + HDM decoder +
+//! multiple root ports, each fronting a DRAM- or SSD-backed endpoint.
+//!
+//! This module is the paper's *system contribution*: the piece that lets
+//! GPU compute units reach memory expanders with plain loads/stores, no
+//! host intervention — plus the two controller optimizations, SR
+//! ([`spec_read`]) and DS ([`det_store`]).
+
+pub mod det_store;
+pub mod hdm;
+pub mod rbtree;
+pub mod rootport;
+pub mod spec_read;
+
+pub use det_store::{DetStoreEngine, DsStats, StoreAction};
+pub use hdm::{HdmDecoder, HdmEntry};
+pub use rbtree::RbTree;
+pub use rootport::{EpBackend, LoadOutcome, LoadPath, PortStats, RootPort, StoreOutcome};
+pub use spec_read::{SpecReadEngine, SrPolicy, SrStats};
+
+use crate::sim::{Time, NS};
+use crate::util::prng::Pcg32;
+
+/// The root complex: host-bridge decode + port fan-out.
+#[derive(Debug)]
+pub struct RootComplex {
+    pub hdm: HdmDecoder,
+    pub ports: Vec<RootPort>,
+    /// Host-bridge + HDM-decode traversal cost.
+    pub bridge_lat: Time,
+}
+
+impl RootComplex {
+    pub fn new(ports: Vec<RootPort>) -> RootComplex {
+        RootComplex { hdm: HdmDecoder::new(), ports, bridge_lat: 2 * NS }
+    }
+
+    /// Firmware init: carve the HDM space evenly across ports (the
+    /// simplified core's enumeration pass). `total` bytes of expander.
+    pub fn enumerate(&mut self, total: u64) -> Result<(), String> {
+        let n = self.ports.len() as u64;
+        assert!(n > 0);
+        let per = total / n;
+        self.enumerate_sized(&vec![per; n as usize])
+    }
+
+    /// Firmware init against per-port HDM sizes, walking each EP's
+    /// CXL.io configuration space exactly as the paper's simplified core
+    /// does: read identity + HDM capability registers over CXL.io,
+    /// reject non-HDM devices, then program base/size into the host
+    /// bridge's decoder in port order.
+    pub fn enumerate_sized(&mut self, sizes: &[u64]) -> Result<(), String> {
+        use crate::cxl::ConfigSpace;
+        if sizes.len() != self.ports.len() {
+            return Err(format!(
+                "{} sizes for {} ports",
+                sizes.len(),
+                self.ports.len()
+            ));
+        }
+        let mut base = 0;
+        for (i, port) in self.ports.iter().enumerate() {
+            let media = port.backend.kind();
+            let raw = if media.is_ssd() {
+                ConfigSpace::ssd_ep(sizes[i], media)
+            } else {
+                ConfigSpace::dram_ep(sizes[i])
+            };
+            // CXL.io config read round trip (4 dwords), as firmware sees it.
+            let cs = ConfigSpace::from_dwords(
+                raw.read_dword(0),
+                raw.read_dword(1),
+                raw.read_dword(2),
+                raw.read_dword(3),
+                media,
+            );
+            if !cs.is_hdm_capable() {
+                return Err(format!("port {i}: EP is not HDM-capable"));
+            }
+            self.hdm.program(HdmEntry { port: i, base, size: cs.hdm_size })?;
+            base += cs.hdm_size;
+        }
+        Ok(())
+    }
+
+    /// Route a load at HDM-relative address `hpa_off`.
+    pub fn load(&mut self, now: Time, hpa_off: u64, len: u64) -> LoadOutcome {
+        let (port, off) = self
+            .hdm
+            .decode(hpa_off)
+            .unwrap_or_else(|| panic!("HDM decode miss at {:#x}", hpa_off));
+        let mut out = self.ports[port].load(now + self.bridge_lat, off, len);
+        out.done += self.bridge_lat;
+        out
+    }
+
+    /// Route a store at HDM-relative address `hpa_off`.
+    pub fn store(&mut self, now: Time, hpa_off: u64, len: u64, rng: &mut Pcg32) -> StoreOutcome {
+        let (port, off) = self
+            .hdm
+            .decode(hpa_off)
+            .unwrap_or_else(|| panic!("HDM decode miss at {:#x}", hpa_off));
+        let mut out = self.ports[port].store(now + self.bridge_lat, off, len, rng);
+        out.ack += self.bridge_lat;
+        out
+    }
+
+    /// Background DS flush across ports.
+    pub fn flush_tick(&mut self, now: Time, rng: &mut Pcg32) {
+        for p in &mut self.ports {
+            p.flush_step(now, 8, rng);
+        }
+    }
+
+    /// Total buffered DS bytes (for end-of-run draining checks).
+    pub fn ds_backlog(&self) -> u64 {
+        self.ports.iter().map(|p| p.ds.buffered_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::ControllerKind;
+    use crate::media::{DramModel, DramTimings};
+
+    fn complex(nports: usize) -> RootComplex {
+        let ports = (0..nports)
+            .map(|i| {
+                RootPort::new(
+                    i,
+                    ControllerKind::Panmnesia,
+                    EpBackend::Dram(DramModel::new(DramTimings::ddr5_5600())),
+                    SrPolicy::Off,
+                    false,
+                    0,
+                )
+            })
+            .collect();
+        let mut rc = RootComplex::new(ports);
+        rc.enumerate(64 << 20).unwrap();
+        rc
+    }
+
+    #[test]
+    fn enumerate_partitions_evenly() {
+        let rc = complex(4);
+        assert_eq!(rc.hdm.entries().len(), 4);
+        assert_eq!(rc.hdm.total_size(), 64 << 20);
+        assert_eq!(rc.hdm.decode(0).unwrap().0, 0);
+        assert_eq!(rc.hdm.decode(16 << 20).unwrap().0, 1);
+        assert_eq!(rc.hdm.decode(63 << 20).unwrap().0, 3);
+    }
+
+    #[test]
+    fn loads_route_to_the_right_port() {
+        let mut rc = complex(2);
+        rc.load(0, 0, 64);
+        rc.load(0, 32 << 20, 64);
+        assert_eq!(rc.ports[0].stats.loads, 1);
+        assert_eq!(rc.ports[1].stats.loads, 1);
+    }
+
+    #[test]
+    fn bridge_latency_is_added() {
+        let mut rc = complex(1);
+        let with_bridge = rc.load(0, 0x100, 64).done;
+        let mut port = RootPort::new(
+            0,
+            ControllerKind::Panmnesia,
+            EpBackend::Dram(DramModel::new(DramTimings::ddr5_5600())),
+            SrPolicy::Off,
+            false,
+            0,
+        );
+        let without = port.load(0, 0x100, 64).done;
+        assert_eq!(with_bridge, without + 2 * rc.bridge_lat);
+    }
+
+    #[test]
+    #[should_panic(expected = "HDM decode miss")]
+    fn out_of_range_panics() {
+        let mut rc = complex(1);
+        rc.load(0, 128 << 20, 64);
+    }
+}

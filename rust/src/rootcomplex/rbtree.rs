@@ -1,0 +1,536 @@
+//! Red-black tree keyed by physical address.
+//!
+//! The DS engine keeps "a record of each stack entry's precise location
+//! ... within the system bus's internal SRAM, which is implemented as a
+//! red-black tree for efficient management" (§Fine control for internal
+//! tasks). Implemented from scratch (arena-based, no unsafe): insert,
+//! lookup, remove, in-order iteration, and an invariant checker used by
+//! the property tests.
+
+/// Node color.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Color {
+    Red,
+    Black,
+}
+
+const NIL: usize = usize::MAX;
+
+#[derive(Debug, Clone)]
+struct Node<V> {
+    key: u64,
+    val: V,
+    color: Color,
+    left: usize,
+    right: usize,
+    parent: usize,
+}
+
+/// Arena-based red-black tree map from `u64` keys to `V`.
+#[derive(Debug, Clone)]
+pub struct RbTree<V> {
+    nodes: Vec<Node<V>>,
+    free: Vec<usize>,
+    root: usize,
+    len: usize,
+}
+
+impl<V> Default for RbTree<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> RbTree<V> {
+    pub fn new() -> Self {
+        RbTree { nodes: Vec::new(), free: Vec::new(), root: NIL, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn alloc(&mut self, key: u64, val: V) -> usize {
+        if let Some(i) = self.free.pop() {
+            self.nodes[i] = Node { key, val, color: Color::Red, left: NIL, right: NIL, parent: NIL };
+            i
+        } else {
+            self.nodes.push(Node { key, val, color: Color::Red, left: NIL, right: NIL, parent: NIL });
+            self.nodes.len() - 1
+        }
+    }
+
+    fn color(&self, n: usize) -> Color {
+        if n == NIL {
+            Color::Black
+        } else {
+            self.nodes[n].color
+        }
+    }
+
+    /// Find the arena index for `key`.
+    fn find(&self, key: u64) -> usize {
+        let mut cur = self.root;
+        while cur != NIL {
+            let node = &self.nodes[cur];
+            cur = match key.cmp(&node.key) {
+                std::cmp::Ordering::Less => node.left,
+                std::cmp::Ordering::Greater => node.right,
+                std::cmp::Ordering::Equal => return cur,
+            };
+        }
+        NIL
+    }
+
+    pub fn contains(&self, key: u64) -> bool {
+        self.find(key) != NIL
+    }
+
+    pub fn get(&self, key: u64) -> Option<&V> {
+        let i = self.find(key);
+        if i == NIL {
+            None
+        } else {
+            Some(&self.nodes[i].val)
+        }
+    }
+
+    pub fn get_mut(&mut self, key: u64) -> Option<&mut V> {
+        let i = self.find(key);
+        if i == NIL {
+            None
+        } else {
+            Some(&mut self.nodes[i].val)
+        }
+    }
+
+    /// Insert (or replace). Returns the previous value for the key.
+    pub fn insert(&mut self, key: u64, val: V) -> Option<V> {
+        // BST descent.
+        let mut parent = NIL;
+        let mut cur = self.root;
+        while cur != NIL {
+            parent = cur;
+            let node = &self.nodes[cur];
+            match key.cmp(&node.key) {
+                std::cmp::Ordering::Less => cur = node.left,
+                std::cmp::Ordering::Greater => cur = node.right,
+                std::cmp::Ordering::Equal => {
+                    return Some(std::mem::replace(&mut self.nodes[cur].val, val));
+                }
+            }
+        }
+        let n = self.alloc(key, val);
+        self.nodes[n].parent = parent;
+        if parent == NIL {
+            self.root = n;
+        } else if key < self.nodes[parent].key {
+            self.nodes[parent].left = n;
+        } else {
+            self.nodes[parent].right = n;
+        }
+        self.len += 1;
+        self.fix_insert(n);
+        None
+    }
+
+    fn rotate_left(&mut self, x: usize) {
+        let y = self.nodes[x].right;
+        debug_assert_ne!(y, NIL);
+        let y_left = self.nodes[y].left;
+        self.nodes[x].right = y_left;
+        if y_left != NIL {
+            self.nodes[y_left].parent = x;
+        }
+        let xp = self.nodes[x].parent;
+        self.nodes[y].parent = xp;
+        if xp == NIL {
+            self.root = y;
+        } else if self.nodes[xp].left == x {
+            self.nodes[xp].left = y;
+        } else {
+            self.nodes[xp].right = y;
+        }
+        self.nodes[y].left = x;
+        self.nodes[x].parent = y;
+    }
+
+    fn rotate_right(&mut self, x: usize) {
+        let y = self.nodes[x].left;
+        debug_assert_ne!(y, NIL);
+        let y_right = self.nodes[y].right;
+        self.nodes[x].left = y_right;
+        if y_right != NIL {
+            self.nodes[y_right].parent = x;
+        }
+        let xp = self.nodes[x].parent;
+        self.nodes[y].parent = xp;
+        if xp == NIL {
+            self.root = y;
+        } else if self.nodes[xp].left == x {
+            self.nodes[xp].left = y;
+        } else {
+            self.nodes[xp].right = y;
+        }
+        self.nodes[y].right = x;
+        self.nodes[x].parent = y;
+    }
+
+    fn fix_insert(&mut self, mut z: usize) {
+        while self.color(self.nodes[z].parent) == Color::Red {
+            let p = self.nodes[z].parent;
+            let g = self.nodes[p].parent;
+            if g == NIL {
+                break;
+            }
+            if p == self.nodes[g].left {
+                let u = self.nodes[g].right;
+                if self.color(u) == Color::Red {
+                    self.nodes[p].color = Color::Black;
+                    self.nodes[u].color = Color::Black;
+                    self.nodes[g].color = Color::Red;
+                    z = g;
+                } else {
+                    if z == self.nodes[p].right {
+                        z = p;
+                        self.rotate_left(z);
+                    }
+                    let p = self.nodes[z].parent;
+                    let g = self.nodes[p].parent;
+                    self.nodes[p].color = Color::Black;
+                    self.nodes[g].color = Color::Red;
+                    self.rotate_right(g);
+                }
+            } else {
+                let u = self.nodes[g].left;
+                if self.color(u) == Color::Red {
+                    self.nodes[p].color = Color::Black;
+                    self.nodes[u].color = Color::Black;
+                    self.nodes[g].color = Color::Red;
+                    z = g;
+                } else {
+                    if z == self.nodes[p].left {
+                        z = p;
+                        self.rotate_right(z);
+                    }
+                    let p = self.nodes[z].parent;
+                    let g = self.nodes[p].parent;
+                    self.nodes[p].color = Color::Black;
+                    self.nodes[g].color = Color::Red;
+                    self.rotate_left(g);
+                }
+            }
+        }
+        let r = self.root;
+        self.nodes[r].color = Color::Black;
+    }
+
+    fn minimum(&self, mut n: usize) -> usize {
+        while self.nodes[n].left != NIL {
+            n = self.nodes[n].left;
+        }
+        n
+    }
+
+    fn transplant(&mut self, u: usize, v: usize) {
+        let up = self.nodes[u].parent;
+        if up == NIL {
+            self.root = v;
+        } else if self.nodes[up].left == u {
+            self.nodes[up].left = v;
+        } else {
+            self.nodes[up].right = v;
+        }
+        if v != NIL {
+            self.nodes[v].parent = up;
+        }
+    }
+
+    /// Remove `key`, returning its value.
+    pub fn remove(&mut self, key: u64) -> Option<V>
+    where
+        V: Default,
+    {
+        let z = self.find(key);
+        if z == NIL {
+            return None;
+        }
+        let fix_parent; // parent of the "moved-up" position when x is NIL
+        let mut y = z;
+        let mut y_color = self.nodes[y].color;
+        let x;
+        if self.nodes[z].left == NIL {
+            x = self.nodes[z].right;
+            fix_parent = self.nodes[z].parent;
+            self.transplant(z, x);
+        } else if self.nodes[z].right == NIL {
+            x = self.nodes[z].left;
+            fix_parent = self.nodes[z].parent;
+            self.transplant(z, x);
+        } else {
+            y = self.minimum(self.nodes[z].right);
+            y_color = self.nodes[y].color;
+            x = self.nodes[y].right;
+            if self.nodes[y].parent == z {
+                fix_parent = y;
+                if x != NIL {
+                    self.nodes[x].parent = y;
+                }
+            } else {
+                fix_parent = self.nodes[y].parent;
+                self.transplant(y, x);
+                let zr = self.nodes[z].right;
+                self.nodes[y].right = zr;
+                self.nodes[zr].parent = y;
+            }
+            self.transplant(z, y);
+            let zl = self.nodes[z].left;
+            self.nodes[y].left = zl;
+            self.nodes[zl].parent = y;
+            self.nodes[y].color = self.nodes[z].color;
+        }
+        if y_color == Color::Black {
+            self.fix_remove(x, fix_parent);
+        }
+        self.len -= 1;
+        self.free.push(z);
+        let val = std::mem::take(&mut self.nodes[z].val);
+        // Poison the freed node so stale references are caught in tests.
+        self.nodes[z].parent = NIL;
+        self.nodes[z].left = NIL;
+        self.nodes[z].right = NIL;
+        Some(val)
+    }
+
+    fn fix_remove(&mut self, mut x: usize, mut parent: usize) {
+        while x != self.root && self.color(x) == Color::Black {
+            if parent == NIL {
+                break;
+            }
+            if x == self.nodes[parent].left {
+                let mut w = self.nodes[parent].right;
+                if self.color(w) == Color::Red {
+                    self.nodes[w].color = Color::Black;
+                    self.nodes[parent].color = Color::Red;
+                    self.rotate_left(parent);
+                    w = self.nodes[parent].right;
+                }
+                if self.color(self.nodes[w].left) == Color::Black
+                    && self.color(self.nodes[w].right) == Color::Black
+                {
+                    self.nodes[w].color = Color::Red;
+                    x = parent;
+                    parent = self.nodes[x].parent;
+                } else {
+                    if self.color(self.nodes[w].right) == Color::Black {
+                        let wl = self.nodes[w].left;
+                        if wl != NIL {
+                            self.nodes[wl].color = Color::Black;
+                        }
+                        self.nodes[w].color = Color::Red;
+                        self.rotate_right(w);
+                        w = self.nodes[parent].right;
+                    }
+                    self.nodes[w].color = self.nodes[parent].color;
+                    self.nodes[parent].color = Color::Black;
+                    let wr = self.nodes[w].right;
+                    if wr != NIL {
+                        self.nodes[wr].color = Color::Black;
+                    }
+                    self.rotate_left(parent);
+                    x = self.root;
+                    break;
+                }
+            } else {
+                let mut w = self.nodes[parent].left;
+                if self.color(w) == Color::Red {
+                    self.nodes[w].color = Color::Black;
+                    self.nodes[parent].color = Color::Red;
+                    self.rotate_right(parent);
+                    w = self.nodes[parent].left;
+                }
+                if self.color(self.nodes[w].right) == Color::Black
+                    && self.color(self.nodes[w].left) == Color::Black
+                {
+                    self.nodes[w].color = Color::Red;
+                    x = parent;
+                    parent = self.nodes[x].parent;
+                } else {
+                    if self.color(self.nodes[w].left) == Color::Black {
+                        let wr = self.nodes[w].right;
+                        if wr != NIL {
+                            self.nodes[wr].color = Color::Black;
+                        }
+                        self.nodes[w].color = Color::Red;
+                        self.rotate_left(w);
+                        w = self.nodes[parent].left;
+                    }
+                    self.nodes[w].color = self.nodes[parent].color;
+                    self.nodes[parent].color = Color::Black;
+                    let wl = self.nodes[w].left;
+                    if wl != NIL {
+                        self.nodes[wl].color = Color::Black;
+                    }
+                    self.rotate_right(parent);
+                    x = self.root;
+                    break;
+                }
+            }
+        }
+        if x != NIL {
+            self.nodes[x].color = Color::Black;
+        }
+    }
+
+    /// In-order key iteration (ascending).
+    pub fn keys(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.len);
+        let mut stack = Vec::new();
+        let mut cur = self.root;
+        while cur != NIL || !stack.is_empty() {
+            while cur != NIL {
+                stack.push(cur);
+                cur = self.nodes[cur].left;
+            }
+            let n = stack.pop().unwrap();
+            out.push(self.nodes[n].key);
+            cur = self.nodes[n].right;
+        }
+        out
+    }
+
+    /// Smallest key >= `key` (for flush scans).
+    pub fn ceiling(&self, key: u64) -> Option<u64> {
+        let mut best = None;
+        let mut cur = self.root;
+        while cur != NIL {
+            let node = &self.nodes[cur];
+            if node.key >= key {
+                best = Some(node.key);
+                cur = node.left;
+            } else {
+                cur = node.right;
+            }
+        }
+        best
+    }
+
+    /// First key in-order (minimum).
+    pub fn first(&self) -> Option<u64> {
+        if self.root == NIL {
+            None
+        } else {
+            Some(self.nodes[self.minimum(self.root)].key)
+        }
+    }
+
+    /// Validate red-black invariants. Returns black-height or an error.
+    pub fn check_invariants(&self) -> Result<usize, String> {
+        if self.root != NIL && self.nodes[self.root].color == Color::Red {
+            return Err("root is red".into());
+        }
+        self.check_node(self.root, u64::MIN, u64::MAX)
+    }
+
+    fn check_node(&self, n: usize, lo: u64, hi: u64) -> Result<usize, String> {
+        if n == NIL {
+            return Ok(1);
+        }
+        let node = &self.nodes[n];
+        if !(lo..=hi).contains(&node.key) {
+            return Err(format!("BST order violated at key {}", node.key));
+        }
+        if node.color == Color::Red {
+            if self.color(node.left) == Color::Red || self.color(node.right) == Color::Red {
+                return Err(format!("red-red violation at key {}", node.key));
+            }
+        }
+        let lh = self.check_node(node.left, lo, node.key.saturating_sub(1))?;
+        let rh = self.check_node(node.right, node.key.saturating_add(1), hi)?;
+        if lh != rh {
+            return Err(format!("black-height mismatch at key {}: {lh} vs {rh}", node.key));
+        }
+        Ok(lh + if node.color == Color::Black { 1 } else { 0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut t: RbTree<u32> = RbTree::new();
+        assert!(t.insert(10, 1).is_none());
+        assert!(t.insert(5, 2).is_none());
+        assert!(t.insert(15, 3).is_none());
+        assert_eq!(t.get(5), Some(&2));
+        assert_eq!(t.insert(5, 9), Some(2));
+        assert_eq!(t.remove(5), Some(9));
+        assert_eq!(t.get(5), None);
+        assert_eq!(t.len(), 2);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn in_order_keys_sorted() {
+        let mut t: RbTree<()> = RbTree::new();
+        for k in [50u64, 20, 80, 10, 30, 70, 90, 25, 35] {
+            t.insert(k, ());
+        }
+        let keys = t.keys();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn ceiling_and_first() {
+        let mut t: RbTree<()> = RbTree::new();
+        for k in [10u64, 20, 30] {
+            t.insert(k, ());
+        }
+        assert_eq!(t.ceiling(15), Some(20));
+        assert_eq!(t.ceiling(20), Some(20));
+        assert_eq!(t.ceiling(31), None);
+        assert_eq!(t.first(), Some(10));
+    }
+
+    #[test]
+    fn random_workout_keeps_invariants() {
+        let mut t: RbTree<u64> = RbTree::new();
+        let mut reference = std::collections::BTreeMap::new();
+        let mut rng = Pcg32::new(99, 0);
+        for step in 0..5000 {
+            let key = rng.below(500);
+            if rng.chance(0.6) {
+                t.insert(key, step);
+                reference.insert(key, step);
+            } else {
+                assert_eq!(t.remove(key), reference.remove(&key), "step {step} key {key}");
+            }
+            if step % 64 == 0 {
+                t.check_invariants().unwrap();
+                assert_eq!(t.len(), reference.len());
+            }
+        }
+        let keys: Vec<u64> = reference.keys().copied().collect();
+        assert_eq!(t.keys(), keys);
+    }
+
+    #[test]
+    fn empty_tree_behaviour() {
+        let mut t: RbTree<u8> = RbTree::new();
+        assert!(t.is_empty());
+        assert_eq!(t.remove(7), None);
+        assert_eq!(t.first(), None);
+        assert_eq!(t.ceiling(0), None);
+        t.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,424 @@
+//! Speculative Read (SR) engine — the queue logic beneath each root port
+//! (Figs. 6 and 7).
+//!
+//! On every incoming load the SR reader may emit a `MemSpecRd` so the EP
+//! can stage data in its internal DRAM before the demand read lands. The
+//! three policy levels reproduce Fig. 9d's ablation:
+//!
+//! * [`SrPolicy::Naive`] (CXL-NAIVE): blindly issue a 64 B MemSpecRd for
+//!   every memory request.
+//! * [`SrPolicy::Dynamic`] (CXL-DYN): use the repurposed low address bits
+//!   to issue larger requests, sizing granularity from the endpoint's
+//!   DevLoad telemetry (light -> grow to 1024 B, optimal -> hold,
+//!   moderate -> shrink, severe -> halt).
+//! * [`SrPolicy::Window`] (CXL-SR): additionally compute an address
+//!   window from the memory queue (past) and SR queue (future) so the
+//!   prefetch may extend *backwards* for descending streams ("Around"
+//!   patterns), rounded to 256 B.
+
+use std::collections::VecDeque;
+
+use crate::cxl::{DevLoad, Flit, SPECRD_OFFSET_UNIT};
+use crate::sim::Time;
+
+/// SR aggressiveness (Fig. 9d configurations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SrPolicy {
+    /// SR disabled (plain CXL).
+    Off,
+    /// CXL-NAIVE.
+    Naive,
+    /// CXL-DYN.
+    Dynamic,
+    /// CXL-SR (full: DYN + address-window control).
+    Window,
+}
+
+/// Queue capacities from the paper: "two separate queues: the SR queue
+/// and the memory queue, each with a capacity of 32 entries".
+pub const SR_QUEUE_CAP: usize = 32;
+pub const MEM_QUEUE_CAP: usize = 32;
+/// Ring buffer of issued SR windows used for dedup.
+pub const RING_CAP: usize = 64;
+
+/// Counters for the Fig. 9d analysis.
+#[derive(Debug, Clone, Default)]
+pub struct SrStats {
+    pub loads_seen: u64,
+    pub sr_issued: u64,
+    pub sr_bytes: u64,
+    pub dedup_forwarded: u64,
+    pub halted: u64,
+    pub streak_grows: u64,
+    pub shrinks: u64,
+    pub grows: u64,
+}
+
+/// The per-port SR engine.
+#[derive(Debug)]
+pub struct SpecReadEngine {
+    pub policy: SrPolicy,
+    /// Current SpecRd granularity in bytes (256..=1024), DevLoad-driven.
+    granularity: u64,
+    /// Issue 1 of every `period` loads (DevLoad-driven frequency control;
+    /// 1 = every load, 8 = severe-overload trickle).
+    period: u64,
+    /// Issued-window ring buffer: (addr, len).
+    ring: VecDeque<(u64, u64)>,
+    /// Pending loads whose SR has not been issued yet (SR queue).
+    sr_queue: VecDeque<u64>,
+    /// Consecutive dedup-covered loads (on-stream evidence).
+    dedup_streak: u32,
+    /// Adaptive prefetch lead distance in bytes: how far beyond the
+    /// demand front windows are placed. Grows when demands keep missing
+    /// or waiting on in-flight prefetches (windows landing late), decays
+    /// slowly when demands hit promptly.
+    lead: u64,
+    pub stats: SrStats,
+}
+
+impl SpecReadEngine {
+    pub fn new(policy: SrPolicy) -> SpecReadEngine {
+        SpecReadEngine {
+            policy,
+            granularity: 4 * SPECRD_OFFSET_UNIT,
+            period: 1,
+            ring: VecDeque::with_capacity(RING_CAP),
+            sr_queue: VecDeque::with_capacity(SR_QUEUE_CAP),
+            dedup_streak: 0,
+            lead: 1024,
+            stats: SrStats::default(),
+        }
+    }
+
+    pub fn granularity(&self) -> u64 {
+        self.granularity
+    }
+
+    /// Current issue period (1 = every load).
+    pub fn period(&self) -> u64 {
+        self.period
+    }
+
+    /// Current prefetch lead distance in bytes.
+    pub fn lead(&self) -> u64 {
+        self.lead
+    }
+
+    /// Feedback from the demand path: a load paid backend-media latency
+    /// (window was behind the front) or waited on an in-flight prefetch
+    /// (window was issued too late). Deepen the lead.
+    pub fn feedback_late(&mut self) {
+        self.lead = (self.lead + 256).min(32 << 10);
+    }
+
+    /// Feedback: a load hit promptly — the windows are early enough;
+    /// decay the lead slowly toward its floor.
+    pub fn feedback_timely(&mut self) {
+        self.lead = self.lead.saturating_sub(32).max(512);
+    }
+
+    /// Record a DevLoad observation from a completion (the profiler path)
+    /// and adapt granularity *and frequency* (§Load control for
+    /// speculative reads: "the DevLoad metric ... is shared with the SR
+    /// reader to dynamically adjust the frequency of SR requests").
+    pub fn observe_devload(&mut self, dl: DevLoad) {
+        match dl {
+            DevLoad::Light => {
+                self.period = 1;
+                if self.granularity < 1024 {
+                    self.granularity = (self.granularity * 2).min(1024);
+                    self.stats.grows += 1;
+                }
+            }
+            DevLoad::Optimal => {
+                // Operate at full bandwidth: hold granularity/frequency.
+                self.period = 1;
+            }
+            DevLoad::Moderate => {
+                self.period = 1;
+                if self.granularity > SPECRD_OFFSET_UNIT {
+                    self.granularity = (self.granularity / 2).max(SPECRD_OFFSET_UNIT);
+                    self.stats.shrinks += 1;
+                }
+            }
+            DevLoad::Severe => {
+                // Reduced frequency (every other load may speculate), at
+                // unchanged granularity. A full halt would be a stable
+                // bad equilibrium — a miss-bound stream keeps the queue
+                // full forever, so SR would never restart; the window
+                // dedup already suppresses redundant speculation, so the
+                // residual rate costs the EP almost nothing.
+                self.period = 2;
+                self.stats.halted += 1;
+            }
+        }
+    }
+
+    /// Is every 256 B unit of `[start, start+len)` already covered by an
+    /// issued SR window? (The ring-buffer check — applied to the window
+    /// the reader is *about* to issue, since windows sit ahead of the
+    /// demand address.)
+    fn window_covered(&self, start: u64, len: u64) -> bool {
+        let unit = SPECRD_OFFSET_UNIT;
+        let mut covered = 0u64;
+        let mut total = 0u64;
+        let mut u = start / unit * unit;
+        while u < start + len {
+            total += 1;
+            if self.ring.iter().any(|&(a, l)| a <= u && u + unit <= a + l) {
+                covered += 1;
+            }
+            u += unit;
+        }
+        // Mostly-covered windows are suppressed: re-fetching one fringe
+        // unit is not worth a backend op (jittering walk patterns would
+        // otherwise spray near-duplicate windows).
+        covered * 2 > total
+    }
+
+    fn remember(&mut self, addr: u64, len: u64) {
+        if self.ring.len() == RING_CAP {
+            self.ring.pop_front();
+        }
+        self.ring.push_back((addr, len));
+    }
+
+    /// Process an incoming load at `now`. `mem_queue` holds the addresses
+    /// of demand reads currently outstanding at the port (the memory
+    /// queue). Returns a `MemSpecRd` flit to issue, if any.
+    pub fn on_load(
+        &mut self,
+        now: Time,
+        addr: u64,
+        mem_queue: &VecDeque<u64>,
+        req_id: u64,
+    ) -> Option<Flit> {
+        self.stats.loads_seen += 1;
+        if self.policy == SrPolicy::Off {
+            return None;
+        }
+        // Frequency control: under load only every `period`-th load
+        // generates speculation; the rest queue as anticipated work.
+        if self.stats.loads_seen % self.period != 0 {
+            if self.sr_queue.len() == SR_QUEUE_CAP {
+                self.sr_queue.pop_front();
+            }
+            self.sr_queue.push_back(addr);
+            return None;
+        }
+
+        // Build the candidate window per policy, then apply the ring
+        // check against *that window* (not the trigger address — the
+        // window sits ahead of the demand front by design).
+        let flit = match self.policy {
+            SrPolicy::Off => unreachable!(),
+            SrPolicy::Naive => {
+                // 64 B blind speculation at the demand address.
+                let f = Flit::spec_rd(addr, SPECRD_OFFSET_UNIT, now, req_id);
+                // Model the 64 B intent: naive still occupies one offset
+                // unit on the wire but covers only the demand line.
+                Flit { len: 64, ..f }
+            }
+            SrPolicy::Dynamic => Flit::spec_rd(addr, self.granularity, now, req_id),
+            SrPolicy::Window => {
+                let (start, len) = self.address_window(addr, mem_queue);
+                Flit::spec_rd(start, len, now, req_id)
+            }
+        };
+        if self.window_covered(flit.addr, flit.len.max(64)) {
+            self.stats.dedup_forwarded += 1;
+            // On-stream evidence: sustained coverage means the windows
+            // are tracking the stream — widen them even if the EP's
+            // DevLoad never reports Light (a saturated-but-recovering EP
+            // would otherwise pin the granularity at its floor).
+            self.dedup_streak += 1;
+            if self.dedup_streak >= 16 {
+                self.dedup_streak = 0;
+                if self.granularity < 1024 {
+                    self.granularity *= 2;
+                    self.stats.streak_grows += 1;
+                }
+            }
+            return None;
+        }
+        self.dedup_streak = self.dedup_streak.saturating_sub(1);
+        self.remember(flit.addr, flit.len.max(64));
+        self.stats.sr_issued += 1;
+        self.stats.sr_bytes += flit.len.max(64);
+        // Track as anticipated-future work for subsequent window calcs.
+        if self.sr_queue.len() == SR_QUEUE_CAP {
+            self.sr_queue.pop_front();
+        }
+        self.sr_queue.push_back(addr);
+        Some(flit)
+    }
+
+    /// Fig. 7's address-window computation, as skip-ahead control.
+    ///
+    /// The memory queue (chronological past requests) and SR queue
+    /// (anticipated work) are analyzed for a direction *trend*: a
+    /// coalesced multi-warp stream forms a moving band of addresses, so
+    /// instantaneous above/below counts are uninformative — what matters
+    /// is whether the band's centre is rising or falling. With a clear
+    /// trend the window is placed beyond the band edge plus an adaptive
+    /// lead (speculation must land before the demand front arrives);
+    /// without one ("Around" patterns — binary-tree descents,
+    /// pivot-relative accesses) the window is centred on the trigger so
+    /// either direction is served.
+    fn address_window(&self, addr: u64, mem_queue: &VecDeque<u64>) -> (u64, u64) {
+        let g = self.granularity;
+        let unit = SPECRD_OFFSET_UNIT;
+        let n = mem_queue.len();
+        if n >= 8 {
+            let half = n / 2;
+            let older: u64 = mem_queue.iter().take(half).sum::<u64>() / half as u64;
+            let newer: u64 =
+                mem_queue.iter().skip(half).sum::<u64>() / (n - half) as u64;
+            // The trend must dominate the band's own spread: interleaved
+            // walks over per-warp regions (Around) span megabytes with
+            // zero net direction, while a coalesced stream's band is
+            // narrow and its centre moves a band-width per queue-life.
+            let spread = mem_queue.iter().copied().max().unwrap_or(addr)
+                - mem_queue.iter().copied().min().unwrap_or(addr);
+            let drift = newer.abs_diff(older);
+            let directional = drift > 64 && drift * 4 > spread;
+            if directional && newer > older {
+                // Ascending band: prefetch beyond its upper edge.
+                let edge = mem_queue.iter().copied().max().unwrap_or(addr).max(addr);
+                let start = (edge + 64 + self.lead) / unit * unit;
+                return (start, g);
+            }
+            if directional && older > newer {
+                // Descending band: prefetch below its lower edge.
+                let edge = mem_queue.iter().copied().min().unwrap_or(addr).min(addr);
+                let end = edge.saturating_sub(self.lead) / unit * unit;
+                return (end.saturating_sub(g), g);
+            }
+        }
+        // No clear direction (Fig. 7's both-ways case — the next access
+        // may come before or after): bias the window forward but keep a
+        // quarter of it behind the trigger, so descending steps of a
+        // wandering pattern still land in covered ground.
+        let start = addr.saturating_sub(g / 4) / unit * unit;
+        (start, g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mq(addrs: &[u64]) -> VecDeque<u64> {
+        addrs.iter().copied().collect()
+    }
+
+    #[test]
+    fn off_policy_never_speculates() {
+        let mut e = SpecReadEngine::new(SrPolicy::Off);
+        assert!(e.on_load(0, 0x1000, &mq(&[]), 1).is_none());
+        assert_eq!(e.stats.sr_issued, 0);
+    }
+
+    #[test]
+    fn naive_issues_64b_at_demand_addr() {
+        let mut e = SpecReadEngine::new(SrPolicy::Naive);
+        let f = e.on_load(0, 0x1040, &mq(&[]), 1).unwrap();
+        assert_eq!(f.len, 64);
+        assert_eq!(f.addr, 0x1000, "aligned to the 256B offset unit");
+    }
+
+    #[test]
+    fn dynamic_grows_on_light_and_shrinks_on_moderate() {
+        let mut e = SpecReadEngine::new(SrPolicy::Dynamic);
+        assert_eq!(e.granularity(), 1024, "wide default for cold-start coverage");
+        e.observe_devload(DevLoad::Light);
+        assert_eq!(e.granularity(), 1024, "capped at 1 KiB");
+        e.observe_devload(DevLoad::Moderate);
+        assert_eq!(e.granularity(), 512);
+        e.observe_devload(DevLoad::Moderate);
+        assert_eq!(e.granularity(), 256);
+        e.observe_devload(DevLoad::Moderate);
+        assert_eq!(e.granularity(), 256, "floor at one offset unit");
+        e.observe_devload(DevLoad::Optimal);
+        assert_eq!(e.granularity(), 256, "optimal holds");
+        e.observe_devload(DevLoad::Severe);
+        assert_eq!(e.granularity(), 256, "severe trickles, holds size");
+    }
+
+    #[test]
+    fn severe_reduces_sr_frequency() {
+        let mut e = SpecReadEngine::new(SrPolicy::Dynamic);
+        e.observe_devload(DevLoad::Severe);
+        assert_eq!(e.period(), 2);
+        // Over 32 far-apart loads, about half generate speculation.
+        let mut issued = 0;
+        for i in 0..32u64 {
+            if e.on_load(0, 0x100000 + i * 0x10000, &mq(&[]), i).is_some() {
+                issued += 1;
+            }
+        }
+        assert!((10..=22).contains(&issued), "severe issued {issued}/32");
+        e.observe_devload(DevLoad::Light);
+        assert_eq!(e.period(), 1);
+        assert!(e.on_load(0, 0x9000000, &mq(&[]), 99).is_some());
+    }
+
+    #[test]
+    fn ring_buffer_dedups_covered_windows() {
+        let mut e = SpecReadEngine::new(SrPolicy::Dynamic);
+        let f = e.on_load(0, 0x2000, &mq(&[]), 1).unwrap();
+        assert!(f.len >= 512);
+        // A nearby load whose candidate window is fully covered by the
+        // issued one generates no new SR.
+        assert!(e.on_load(1, 0x2040, &mq(&[]), 2).is_none());
+        assert_eq!(e.stats.dedup_forwarded, 1);
+    }
+
+    #[test]
+    fn window_extends_backwards_for_descending_streams() {
+        let mut e = SpecReadEngine::new(SrPolicy::Window);
+        e.observe_devload(DevLoad::Light); // 1024
+        // Chronologically falling band: stream moving down.
+        let queue =
+            mq(&[0x9700, 0x9600, 0x9500, 0x9400, 0x9300, 0x9200, 0x9100, 0x9000]);
+        let f = e.on_load(0, 0x8000, &queue, 1).unwrap();
+        assert!(f.addr < 0x8000, "window should sit below the trigger: {:#x}", f.addr);
+    }
+
+    #[test]
+    fn window_skips_ahead_for_ascending_streams() {
+        let mut e = SpecReadEngine::new(SrPolicy::Window);
+        e.observe_devload(DevLoad::Light); // 1024
+        // Chronologically rising band (>= 8 samples for trend detection).
+        let queue =
+            mq(&[0x7000, 0x7100, 0x7200, 0x7300, 0x7400, 0x7500, 0x7600, 0x7700]);
+        let f = e.on_load(0, 0x8000, &queue, 1).unwrap();
+        // The window must land ahead of the trigger — speculation runs
+        // ahead of the demand front (band edge + adaptive lead).
+        assert!(f.addr >= 0x8000, "window should skip ahead: {:#x}", f.addr);
+        assert!(f.addr <= 0x8000 + (40 << 10), "but not unboundedly far");
+    }
+
+    #[test]
+    fn window_is_256b_aligned_and_bounded() {
+        let mut e = SpecReadEngine::new(SrPolicy::Window);
+        for dl in [DevLoad::Light, DevLoad::Light, DevLoad::Light] {
+            e.observe_devload(dl);
+        }
+        let queue = mq(&[0x100, 0x40000, 0x80000]);
+        let f = e.on_load(0, 0x40040, &queue, 1).unwrap();
+        assert_eq!(f.addr % 256, 0);
+        assert!(f.len >= 256 && f.len <= 1024, "len {}", f.len);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut e = SpecReadEngine::new(SrPolicy::Dynamic);
+        e.on_load(0, 0x0, &mq(&[]), 1);
+        e.on_load(1, 0x10000, &mq(&[]), 2);
+        assert_eq!(e.stats.loads_seen, 2);
+        assert_eq!(e.stats.sr_issued, 2);
+        assert!(e.stats.sr_bytes >= 512);
+    }
+}

@@ -1,0 +1,152 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime (shapes, dtypes, file names, content hashes).
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One tensor's shape + dtype.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<u64>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> u64 {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|v| v.as_u64().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<_>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One AOT-lowered workload.
+#[derive(Debug, Clone)]
+pub struct WorkloadArtifact {
+    pub name: String,
+    pub hlo: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub workloads: Vec<WorkloadArtifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} (run `make artifacts`)"))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let arr = j
+            .get("workloads")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing `workloads`"))?;
+        let mut workloads = Vec::with_capacity(arr.len());
+        for w in arr {
+            let name = w
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("workload missing name"))?
+                .to_string();
+            let hlo = w
+                .get("hlo")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing hlo path"))?
+                .to_string();
+            let inputs = w
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?;
+            let outputs = w
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing outputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?;
+            let sha256 = w
+                .get("sha256")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string();
+            workloads.push(WorkloadArtifact { name, hlo, inputs, outputs, sha256 });
+        }
+        Ok(Manifest { workloads })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&WorkloadArtifact> {
+        self.workloads.iter().find(|w| w.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.workloads.iter().map(|w| w.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "workloads": [
+        {"name": "vadd", "hlo": "vadd.hlo.txt",
+         "inputs": [{"shape": [262144], "dtype": "float32"},
+                    {"shape": [262144], "dtype": "float32"}],
+         "outputs": [{"shape": [262144], "dtype": "float32"}],
+         "sha256": "abc"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.workloads.len(), 1);
+        let w = m.get("vadd").unwrap();
+        assert_eq!(w.inputs.len(), 2);
+        assert_eq!(w.inputs[0].elements(), 262144);
+        assert_eq!(w.outputs[0].dtype, "float32");
+        assert_eq!(w.sha256, "abc");
+    }
+
+    #[test]
+    fn names_listed() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.names(), vec!["vadd"]);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"workloads": [{"name": "x"}]}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

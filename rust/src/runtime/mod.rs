@@ -1,0 +1,170 @@
+//! PJRT runtime: load the AOT-compiled workload artifacts and execute the
+//! *real* workload compute from Rust.
+//!
+//! Python runs only at build time (`make artifacts`); this module loads
+//! the HLO **text** artifacts (see python/compile/aot.py for why text,
+//! not serialized protos), compiles them on the PJRT CPU client, and
+//! executes them with deterministic inputs. The e2e example uses this to
+//! prove the three layers compose: L1 Pallas kernels inside L2 JAX graphs
+//! executed under the L3 coordinator.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, TensorSpec, WorkloadArtifact};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::prng::Pcg32;
+
+/// Result of executing one workload artifact.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOutcome {
+    /// Number of output tensors.
+    pub outputs: usize,
+    /// Mean of all finite f32 output values (stable under same seed).
+    pub checksum: f64,
+    /// Total output elements.
+    pub elements: usize,
+}
+
+/// The PJRT runtime: one CPU client + the artifact manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: String,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and start a PJRT CPU client.
+    pub fn load(dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime { client, manifest, dir: dir.to_string() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one workload's HLO text.
+    fn compile(&self, art: &WorkloadArtifact) -> Result<xla::PjRtLoadedExecutable> {
+        let path = format!("{}/{}", self.dir, art.hlo);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {}", art.name))
+    }
+
+    /// Build a deterministic input literal for a tensor spec, applying the
+    /// same per-workload validity fixups the python tests use (diagonal
+    /// dominance for gauss, 0/1 adjacency + one-hot for bfs/gnn, positive
+    /// fields for cfd).
+    fn build_input(
+        workload: &str,
+        idx: usize,
+        ninputs: usize,
+        spec: &TensorSpec,
+        rng: &mut Pcg32,
+    ) -> Result<xla::Literal> {
+        if spec.dtype != "float32" {
+            bail!("unsupported input dtype {} for {workload}", spec.dtype);
+        }
+        let n: usize = spec.shape.iter().product::<u64>() as usize;
+        let mut data: Vec<f32> = (0..n).map(|_| (rng.f64() as f32) * 2.0 - 1.0).collect();
+
+        match (workload, idx) {
+            ("gauss", 0) => {
+                // Diagonal dominance over the (m, m+1) augmented matrix.
+                let m = spec.shape[0] as usize;
+                let cols = spec.shape[1] as usize;
+                for i in 0..m {
+                    data[i * cols + i] += m as f32;
+                }
+            }
+            ("bfs", 0) | ("gnn", 0) => {
+                // Sparse 0/1 adjacency.
+                for v in data.iter_mut() {
+                    *v = if *v > 0.8 { 1.0 } else { 0.0 };
+                }
+            }
+            ("bfs", i) | ("gnn", i) if i == ninputs - 1 => {
+                // One-hot source vector.
+                for v in data.iter_mut() {
+                    *v = 0.0;
+                }
+                data[0] = 1.0;
+            }
+            ("cfd", 0) => {
+                for v in data.iter_mut() {
+                    *v = v.abs() + 1.0; // positive density
+                }
+            }
+            ("cfd", 2) => {
+                for v in data.iter_mut() {
+                    *v = v.abs() + 10.0; // positive energy
+                }
+            }
+            ("saxpy", 0) => {
+                data[0] = 2.5; // the scalar a
+            }
+            _ => {}
+        }
+
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&data);
+        Ok(if dims.len() == 1 { lit } else { lit.reshape(&dims).map_err(|e| anyhow!("{e:?}"))? })
+    }
+
+    /// Execute a workload by name with deterministic inputs.
+    pub fn execute_named(&self, name: &str, seed: u64) -> Result<ExecOutcome> {
+        let art = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("workload `{name}` not in manifest"))?;
+        let exe = self.compile(art)?;
+        let mut rng = Pcg32::new(seed, 7);
+        let inputs: Vec<xla::Literal> = art
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| Self::build_input(name, i, art.inputs.len(), s, &mut rng))
+            .collect::<Result<_>>()?;
+
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let tuple = result[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+
+        let mut sum = 0.0f64;
+        let mut elements = 0usize;
+        let nparts = parts.len();
+        for part in parts {
+            let ty = part.ty().map_err(|e| anyhow!("{e:?}"))?;
+            match ty {
+                xla::ElementType::F32 => {
+                    let v: Vec<f32> = part.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                    for x in &v {
+                        if !x.is_finite() {
+                            bail!("{name}: non-finite output value");
+                        }
+                        sum += *x as f64;
+                    }
+                    elements += v.len();
+                }
+                xla::ElementType::S32 => {
+                    let v: Vec<i32> = part.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                    sum += v.iter().map(|&x| x as f64).sum::<f64>();
+                    elements += v.len();
+                }
+                other => bail!("{name}: unhandled output type {other:?}"),
+            }
+        }
+        Ok(ExecOutcome { outputs: nparts, checksum: sum / elements.max(1) as f64, elements })
+    }
+}

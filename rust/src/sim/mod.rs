@@ -1,0 +1,62 @@
+//! Discrete-event simulation core.
+//!
+//! The whole memory-system model runs on one [`EventQueue`]: components
+//! schedule typed events at absolute picosecond timestamps and the system
+//! drains them in (time, sequence) order, so simulations are fully
+//! deterministic for a given seed. Mirrors the paper's methodology — their
+//! evaluation also ran on a software simulator reproducing the RTL's
+//! behaviour (Evaluation §Methodology).
+
+pub mod queue;
+pub mod timeline;
+
+pub use queue::EventQueue;
+pub use timeline::Timeline;
+
+/// Simulation time in **picoseconds**. CXL layer costs are single-digit
+/// nanoseconds and PCIe serialization is sub-nanosecond per lane-beat, so
+/// nanosecond resolution would accumulate rounding error.
+pub type Time = u64;
+
+/// One nanosecond in [`Time`] units.
+pub const NS: Time = 1_000;
+/// One microsecond.
+pub const US: Time = 1_000_000;
+/// One millisecond.
+pub const MS: Time = 1_000_000_000;
+
+/// Convert picoseconds to fractional nanoseconds (for reporting only).
+pub fn ps_to_ns(t: Time) -> f64 {
+    t as f64 / NS as f64
+}
+
+/// Convert a (bytes, GB/s) pair to a serialization delay.
+///
+/// `gbps` is interpreted as 10^9 bytes per second (vendor convention used
+/// by the paper's PCIe 5.0 x8 ≈ 32 GB/s figure).
+pub fn transfer_time(bytes: u64, gbps: f64) -> Time {
+    debug_assert!(gbps > 0.0);
+    // ps = bytes / (GB/s) * 1e12 / 1e9 = bytes * 1000 / gbps
+    (bytes as f64 * 1000.0 / gbps).round() as Time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_64b_at_32gbps_is_2ns() {
+        assert_eq!(transfer_time(64, 32.0), 2 * NS);
+    }
+
+    #[test]
+    fn transfer_time_4k_page() {
+        // 4096 B at 32 GB/s = 128 ns.
+        assert_eq!(transfer_time(4096, 32.0), 128 * NS);
+    }
+
+    #[test]
+    fn ps_to_ns_roundtrip() {
+        assert_eq!(ps_to_ns(1_500), 1.5);
+    }
+}

@@ -1,0 +1,96 @@
+//! Time-series sampling for figures like Fig. 9e (latency + ingress-queue
+//! utilization around a garbage-collection episode).
+
+use super::Time;
+
+/// Fixed-interval time series: samples are bucketed into `bucket` wide
+//  windows and averaged within each bucket.
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    bucket: Time,
+    sums: Vec<f64>,
+    counts: Vec<u64>,
+    label: String,
+}
+
+impl Timeline {
+    pub fn new(label: &str, bucket: Time) -> Self {
+        assert!(bucket > 0);
+        Timeline { bucket, sums: Vec::new(), counts: Vec::new(), label: label.to_string() }
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn bucket_width(&self) -> Time {
+        self.bucket
+    }
+
+    /// Record `value` at simulation time `at`.
+    pub fn record(&mut self, at: Time, value: f64) {
+        let idx = (at / self.bucket) as usize;
+        if idx >= self.sums.len() {
+            self.sums.resize(idx + 1, 0.0);
+            self.counts.resize(idx + 1, 0);
+        }
+        self.sums[idx] += value;
+        self.counts[idx] += 1;
+    }
+
+    /// Bucketed series as (bucket_start_time, mean) pairs; empty buckets
+    /// are skipped.
+    pub fn series(&self) -> Vec<(Time, f64)> {
+        self.sums
+            .iter()
+            .zip(&self.counts)
+            .enumerate()
+            .filter(|(_, (_, &c))| c > 0)
+            .map(|(i, (&s, &c))| (i as Time * self.bucket, s / c as f64))
+            .collect()
+    }
+
+    /// Max bucket mean (for quick assertions on spikes).
+    pub fn max_mean(&self) -> f64 {
+        self.series().iter().map(|&(_, v)| v).fold(0.0, f64::max)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.iter().all(|&c| c == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_and_averages() {
+        let mut tl = Timeline::new("lat", 100);
+        tl.record(10, 2.0);
+        tl.record(20, 4.0);
+        tl.record(250, 10.0);
+        let s = tl.series();
+        assert_eq!(s, vec![(0, 3.0), (200, 10.0)]);
+    }
+
+    #[test]
+    fn skips_empty_buckets() {
+        let mut tl = Timeline::new("q", 10);
+        tl.record(5, 1.0);
+        tl.record(95, 9.0);
+        let s = tl.series();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[1].0, 90);
+    }
+
+    #[test]
+    fn max_mean() {
+        let mut tl = Timeline::new("x", 10);
+        assert!(tl.is_empty());
+        tl.record(0, 1.0);
+        tl.record(11, 7.0);
+        assert_eq!(tl.max_mean(), 7.0);
+        assert!(!tl.is_empty());
+    }
+}

@@ -1,0 +1,177 @@
+//! Micro-benchmark harness (offline stand-in for criterion).
+//!
+//! Benches in `rust/benches/` are `harness = false` binaries that call
+//! [`Bench::run`] for hot-loop timing and use [`Table`] to print the
+//! paper-figure reproductions. Timing uses `std::time::Instant` with
+//! warmup, multiple measured batches, and median-of-batches reporting.
+
+use std::time::Instant;
+
+/// One benchmark's timing configuration + results.
+pub struct Bench {
+    pub name: String,
+    warmup_iters: u64,
+    batches: usize,
+    batch_iters: u64,
+}
+
+/// Result of a bench run (per-iteration times, ns).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub iters: u64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench { name: name.to_string(), warmup_iters: 3, batches: 7, batch_iters: 5 }
+    }
+
+    /// Configure iteration counts (for fast vs slow bodies).
+    pub fn iters(mut self, warmup: u64, batches: usize, batch_iters: u64) -> Self {
+        self.warmup_iters = warmup;
+        self.batches = batches.max(1);
+        self.batch_iters = batch_iters.max(1);
+        self
+    }
+
+    /// Time `f`, which must do one unit of work per call. Returns stats
+    /// and prints a criterion-like line.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.batches);
+        for _ in 0..self.batches {
+            let t0 = Instant::now();
+            for _ in 0..self.batch_iters {
+                f();
+            }
+            per_iter.push(t0.elapsed().as_nanos() as f64 / self.batch_iters as f64);
+        }
+        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = per_iter[per_iter.len() / 2];
+        let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+        let res = BenchResult {
+            name: self.name.clone(),
+            median_ns: median,
+            mean_ns: mean,
+            min_ns: per_iter[0],
+            max_ns: *per_iter.last().unwrap(),
+            iters: self.batches as u64 * self.batch_iters,
+        };
+        println!(
+            "bench {:<40} median {:>12}  (min {}, max {}, n={})",
+            res.name,
+            super::fmt_ns(res.median_ns),
+            super::fmt_ns(res.min_ns),
+            super::fmt_ns(res.max_ns),
+            res.iters
+        );
+        res
+    }
+}
+
+/// Fixed-width table printer for paper-figure reproductions.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowv(&mut self, cells: Vec<String>) {
+        self.row(&cells);
+    }
+
+    /// Render to stdout.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        println!("\n== {} ==", self.title);
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", "-".repeat(total));
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(total));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        println!("{}", "-".repeat(total));
+    }
+}
+
+/// Helper: `3.14x`-style ratio formatting used across the figure benches.
+pub fn ratio(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}x")
+    } else if x >= 10.0 {
+        format!("{x:.1}x")
+    } else {
+        format!("{x:.2}x")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = Bench::new("spin").iters(1, 3, 10).run(|| {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn table_prints_all_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["333".into(), "4".into()]);
+        t.print(); // smoke: no panic, widths adapt
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn ratio_formats() {
+        assert_eq!(ratio(2.345), "2.35x");
+        assert_eq!(ratio(52.7), "52.7x");
+        assert_eq!(ratio(250.0), "250x");
+    }
+}

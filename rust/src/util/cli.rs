@@ -1,0 +1,150 @@
+//! Tiny CLI argument parser (offline stand-in for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, and
+//! positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec for usage text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|_| format!("--{key}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected number, got `{v}`")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Parse `argv[1..]`. `value_opts` lists option names that consume a value;
+/// anything else starting with `--` is a flag.
+pub fn parse(argv: &[String], value_opts: &[&str]) -> Result<Args, String> {
+    let mut out = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(stripped) = a.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+            } else if value_opts.contains(&stripped) {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .ok_or_else(|| format!("--{stripped} requires a value"))?;
+                out.options.insert(stripped.to_string(), v.clone());
+            } else {
+                out.flags.push(stripped.to_string());
+            }
+        } else if out.subcommand.is_none() && out.positional.is_empty() {
+            out.subcommand = Some(a.clone());
+        } else {
+            out.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+/// Render a usage block.
+pub fn usage(prog: &str, about: &str, subcommands: &[(&str, &str)], opts: &[OptSpec]) -> String {
+    let mut s = format!("{prog} — {about}\n\nUSAGE:\n  {prog} <COMMAND> [OPTIONS]\n");
+    if !subcommands.is_empty() {
+        s.push_str("\nCOMMANDS:\n");
+        for (name, help) in subcommands {
+            s.push_str(&format!("  {name:<18} {help}\n"));
+        }
+    }
+    if !opts.is_empty() {
+        s.push_str("\nOPTIONS:\n");
+        for o in opts {
+            let name = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            s.push_str(&format!("  {name:<18} {}\n", o.help));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let args =
+            parse(&sv(&["run", "--workload", "vadd", "--verbose", "--seed=7", "extra"]),
+                  &["workload", "seed"]).unwrap();
+        assert_eq!(args.subcommand.as_deref(), Some("run"));
+        assert_eq!(args.get("workload"), Some("vadd"));
+        assert_eq!(args.get("seed"), Some("7"));
+        assert!(args.has_flag("verbose"));
+        assert_eq!(args.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&sv(&["run", "--workload"]), &["workload"]).is_err());
+    }
+
+    #[test]
+    fn numeric_accessors() {
+        let args = parse(&sv(&["x", "--n=1_000", "--f=2.5"]), &[]).unwrap();
+        assert_eq!(args.get_u64("n", 0).unwrap(), 1000);
+        assert_eq!(args.get_f64("f", 0.0).unwrap(), 2.5);
+        assert_eq!(args.get_u64("absent", 9).unwrap(), 9);
+        assert!(parse(&sv(&["x", "--n=zzz"]), &[]).unwrap().get_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn usage_contains_everything() {
+        let u = usage("cxl-gpu", "about", &[("run", "run an experiment")],
+                      &[OptSpec { name: "seed", help: "rng seed", takes_value: true }]);
+        assert!(u.contains("cxl-gpu"));
+        assert!(u.contains("run"));
+        assert!(u.contains("--seed"));
+    }
+}

@@ -1,0 +1,64 @@
+//! Self-contained utility substrates.
+//!
+//! This environment is fully offline — only the `xla` crate's vendored
+//! closure exists — so the conveniences a production crate would pull from
+//! crates.io are implemented here from scratch: a deterministic PRNG
+//! ([`prng`]), summary statistics ([`stats`]), a TOML-subset config parser
+//! ([`toml`]), a tiny CLI argument parser ([`cli`]), a micro-benchmark
+//! harness ([`bench`]) and a property-test runner ([`prop`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod toml;
+
+/// Format a nanosecond quantity with an adaptive unit (ns/µs/ms/s).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3}s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Format a byte quantity with an adaptive unit (B/KiB/MiB/GiB).
+pub fn fmt_bytes(b: u64) -> String {
+    const K: u64 = 1024;
+    if b < K {
+        format!("{b}B")
+    } else if b < K * K {
+        format!("{:.1}KiB", b as f64 / K as f64)
+    } else if b < K * K * K {
+        format!("{:.1}MiB", b as f64 / (K * K) as f64)
+    } else {
+        format!("{:.2}GiB", b as f64 / (K * K * K) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.0), "12.0ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50ms");
+        assert_eq!(fmt_ns(3_200_000_000.0), "3.200s");
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0MiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024 * 1024), "5.00GiB");
+    }
+}

@@ -1,0 +1,195 @@
+//! Minimal property-based testing runner (offline stand-in for proptest).
+//!
+//! A property is a closure over a [`Gen`] (seeded case-data source). The
+//! runner executes `cases` random cases; on failure it re-runs with greedy
+//! size shrinking of every recorded integer draw and reports the smallest
+//! failing case's draw log plus the seed needed to replay it.
+
+use super::prng::Pcg32;
+
+/// Case-data source handed to properties. Records every draw so the
+/// runner can shrink failing cases.
+pub struct Gen {
+    rng: Pcg32,
+    /// (label, value) log of draws for failure reports.
+    pub log: Vec<(String, i128)>,
+    /// Shrink overrides: when set, draw i returns the override.
+    overrides: Vec<Option<i128>>,
+    draw_idx: usize,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64, overrides: Vec<Option<i128>>) -> Self {
+        Gen { rng: Pcg32::new(seed, case), log: Vec::new(), overrides, draw_idx: 0 }
+    }
+
+    fn record(&mut self, label: &str, v: i128) -> i128 {
+        let idx = self.draw_idx;
+        self.draw_idx += 1;
+        let v = match self.overrides.get(idx).copied().flatten() {
+            Some(o) => o,
+            None => v,
+        };
+        self.log.push((label.to_string(), v));
+        v
+    }
+
+    /// Uniform `u64` in `[lo, hi]`, logged under `label`.
+    pub fn u64(&mut self, label: &str, lo: u64, hi: u64) -> u64 {
+        let raw = self.rng.range(lo, hi.saturating_add(1).max(lo + 1)) as i128;
+        let v = self.record(label, raw);
+        (v.clamp(lo as i128, hi as i128)) as u64
+    }
+
+    /// Uniform `usize` in `[lo, hi]`.
+    pub fn usize(&mut self, label: &str, lo: usize, hi: usize) -> usize {
+        self.u64(label, lo as u64, hi as u64) as usize
+    }
+
+    /// Uniform `f64` in `[0, 1)` (not shrunk; logged as permille).
+    pub fn unit_f64(&mut self, label: &str) -> f64 {
+        let v = self.rng.f64();
+        self.record(label, (v * 1000.0) as i128);
+        v
+    }
+
+    /// Bernoulli draw.
+    pub fn bool(&mut self, label: &str, p_true: f64) -> bool {
+        let v = self.rng.chance(p_true);
+        self.record(label, v as i128);
+        v
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, label: &str, xs: &'a [T]) -> &'a T {
+        let i = self.usize(label, 0, xs.len() - 1);
+        &xs[i]
+    }
+
+    /// A vector of `u64` draws.
+    pub fn vec_u64(&mut self, label: &str, len_lo: usize, len_hi: usize, lo: u64, hi: u64) -> Vec<u64> {
+        let len = self.usize(&format!("{label}.len"), len_lo, len_hi);
+        (0..len).map(|i| self.u64(&format!("{label}[{i}]"), lo, hi)).collect()
+    }
+}
+
+/// Outcome of a property run.
+pub enum PropResult {
+    Pass,
+    Fail { case: u64, log: Vec<(String, i128)>, msg: String },
+}
+
+/// Run `prop` for `cases` cases with the given seed. Panics (with a replay
+/// report) on the first failure after shrinking.
+///
+/// The property returns `Err(msg)` or panics to signal failure.
+pub fn check<F>(name: &str, seed: u64, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut run = |ovr: Vec<Option<i128>>| -> (Result<(), String>, Vec<(String, i128)>) {
+            let mut g = Gen::new(seed, case, ovr);
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+            let res = match r {
+                Ok(inner) => inner,
+                Err(p) => Err(panic_msg(p)),
+            };
+            (res, g.log)
+        };
+        let (res, log) = run(Vec::new());
+        if let Err(first_msg) = res {
+            // Greedy shrink: for each draw, try 0 / lo-style reductions.
+            let mut best_log = log;
+            let mut best_msg = first_msg;
+            let mut overrides: Vec<Option<i128>> = vec![None; best_log.len()];
+            let mut improved = true;
+            while improved {
+                improved = false;
+                for i in 0..overrides.len() {
+                    let orig = best_log.get(i).map(|kv| kv.1).unwrap_or(0);
+                    for cand in [0, orig / 2, orig - 1] {
+                        if cand == orig || cand < 0 {
+                            continue;
+                        }
+                        let mut trial = overrides.clone();
+                        trial[i] = Some(cand);
+                        let (r, l) = run(trial.clone());
+                        if let Err(m) = r {
+                            overrides = trial;
+                            best_log = l;
+                            best_msg = m;
+                            improved = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            let draws: Vec<String> =
+                best_log.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}):\n  {}\n  draws: [{}]",
+                best_msg,
+                draws.join(", ")
+            );
+        }
+    }
+}
+
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 1, 50, |g| {
+            let a = g.u64("a", 0, 1000);
+            let b = g.u64("b", 0, 1000);
+            if a + b == b + a { Ok(()) } else { Err("math broke".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        check("always-fails", 1, 10, |g| {
+            let a = g.u64("a", 0, 100);
+            if a <= 100 { Err("nope".into()) } else { Ok(()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'panics' failed")]
+    fn panicking_property_is_caught() {
+        check("panics", 1, 5, |g| {
+            let v = g.u64("v", 10, 20);
+            assert!(v < 5, "v too big");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_seed_case() {
+        let mut first: Vec<u64> = Vec::new();
+        check("det", 7, 1, |g| {
+            first.push(g.u64("x", 0, u32::MAX as u64));
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("det", 7, 1, |g| {
+            second.push(g.u64("x", 0, u32::MAX as u64));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,186 @@
+//! Streaming summary statistics and histogram utilities used by the
+//! simulator's metric collection and the bench harness.
+
+/// Online mean/min/max/count accumulator (Welford variance).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY, sum: 0.0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.mean }
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Merge another summary (means combined exactly; m2 via Chan et al.).
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * n1 * n2 / (n1 + n2);
+        self.mean = (n1 * self.mean + n2 * other.mean) / (n1 + n2);
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Reservoir of raw samples for percentile queries; above `cap` samples it
+/// keeps a uniform reservoir (deterministic, index-hashed).
+#[derive(Debug, Clone)]
+pub struct Percentiles {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+}
+
+impl Percentiles {
+    pub fn new(cap: usize) -> Self {
+        Percentiles { cap: cap.max(16), seen: 0, samples: Vec::new() }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // Deterministic reservoir: SplitMix over the index.
+            let mut z = self.seen.wrapping_mul(0x9E3779B97F4A7C15);
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^= z >> 31;
+            let slot = z % self.seen;
+            if (slot as usize) < self.cap {
+                self.samples[slot as usize] = x;
+            }
+        }
+    }
+
+    /// p in [0, 100]; nearest-rank on the (sorted) reservoir.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn count(&self) -> u64 {
+        self.seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_zeroes() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+    }
+
+    #[test]
+    fn summary_merge_matches_sequential() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        let mut whole = Summary::new();
+        for i in 0..100 {
+            let x = (i * i % 37) as f64;
+            if i % 2 == 0 { a.add(x) } else { b.add(x) }
+            whole.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_exact_under_cap() {
+        let mut p = Percentiles::new(1000);
+        for i in 0..=100 {
+            p.add(i as f64);
+        }
+        assert_eq!(p.percentile(0.0), 0.0);
+        assert_eq!(p.percentile(50.0), 50.0);
+        assert_eq!(p.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn percentiles_reservoir_stays_bounded() {
+        let mut p = Percentiles::new(64);
+        for i in 0..100_000 {
+            p.add((i % 1000) as f64);
+        }
+        assert_eq!(p.count(), 100_000);
+        let med = p.percentile(50.0);
+        assert!((200.0..800.0).contains(&med), "median {med}");
+    }
+}

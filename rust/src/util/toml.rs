@@ -1,0 +1,304 @@
+//! Minimal TOML-subset parser for experiment configs (offline stand-in
+//! for the `toml` crate).
+//!
+//! Supported: `[table]` and `[table.sub]` headers, `key = value` pairs
+//! with string / integer / float / boolean / homogeneous-array values,
+//! `#` comments, and bare or quoted keys. Unsupported TOML (dates,
+//! inline tables, arrays-of-tables, multi-line strings) is rejected with
+//! a line-numbered error — configs in this repo stay inside the subset.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parsed document: dotted-path keys (`table.sub.key`) to values.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(Value::as_str).unwrap_or(default)
+    }
+    pub fn int_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(Value::as_int).unwrap_or(default)
+    }
+    pub fn float_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_float).unwrap_or(default)
+    }
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Keys under a table prefix, e.g. `keys_under("media")`.
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        let p = format!("{prefix}.");
+        self.entries.keys().filter(|k| k.starts_with(&p)).map(|k| k.as_str()).collect()
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Document, String> {
+    let mut doc = Document::default();
+    let mut table = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let inner = inner
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated table header", lineno + 1))?;
+            if inner.starts_with('[') {
+                return Err(format!("line {}: arrays-of-tables unsupported", lineno + 1));
+            }
+            table = inner.trim().to_string();
+            if table.is_empty() {
+                return Err(format!("line {}: empty table name", lineno + 1));
+            }
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+        let key = line[..eq].trim().trim_matches('"').to_string();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        let path = if table.is_empty() { key } else { format!("{table}.{key}") };
+        doc.entries.insert(path, val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.find('"').ok_or("unterminated string")?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err("trailing garbage after string".into());
+        }
+        return Ok(Value::Str(rest[..end].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    let cleaned = s.replace('_', "");
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(i) = u64::from_str_radix(cleaned.trim_start_matches("0x"), 16) {
+        if cleaned.starts_with("0x") {
+            return Ok(Value::Int(i as i64));
+        }
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+/// Split on commas not inside nested brackets/strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_tables() {
+        let doc = parse(
+            r#"
+# experiment
+name = "fig9a"
+seed = 42
+scale = 1.5
+verbose = true
+
+[gpu]
+cores = 8
+threads = 8
+
+[media.znand]
+read_ns = 3000
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "fig9a");
+        assert_eq!(doc.int_or("seed", 0), 42);
+        assert!((doc.float_or("scale", 0.0) - 1.5).abs() < 1e-12);
+        assert!(doc.bool_or("verbose", false));
+        assert_eq!(doc.int_or("gpu.cores", 0), 8);
+        assert_eq!(doc.int_or("media.znand.read_ns", 0), 3000);
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse("xs = [1, 2, 3]\nnames = [\"a\", \"b\"]").unwrap();
+        let xs = doc.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_int(), Some(3));
+        let names = doc.get("names").unwrap().as_array().unwrap();
+        assert_eq!(names[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn comments_and_underscores() {
+        let doc = parse("big = 1_000_000 # one million").unwrap();
+        assert_eq!(doc.int_or("big", 0), 1_000_000);
+    }
+
+    #[test]
+    fn comment_char_inside_string_kept() {
+        let doc = parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = parse("ok = 1\nbroken").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_array_of_tables() {
+        assert!(parse("[[t]]").is_err());
+    }
+
+    #[test]
+    fn float_forms() {
+        let doc = parse("a = 2.5\nb = 1e3\nc = 3").unwrap();
+        assert_eq!(doc.float_or("a", 0.0), 2.5);
+        assert_eq!(doc.float_or("b", 0.0), 1000.0);
+        assert_eq!(doc.float_or("c", 0.0), 3.0); // int coerces
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = parse("[m.a]\nx = 1\n[m.b]\ny = 2\n[other]\nz = 3").unwrap();
+        let keys = doc.keys_under("m");
+        assert_eq!(keys, vec!["m.a.x", "m.b.y"]);
+    }
+}

@@ -1,0 +1,222 @@
+//! The evaluation workload suite (Table 1b): 11 Rodinia-style programs
+//! plus the two real-world composites (gnn, mri).
+//!
+//! Each workload is characterized by its instruction mix (compute ratio,
+//! load ratio — Table 1b's two columns) and its memory access pattern
+//! (the Seq / Around / Rand taxonomy of Fig. 9d, plus tiled reuse for the
+//! 2D kernels). Generators materialize per-warp instruction streams that
+//! the coordinator's `System` executes against any memory configuration.
+//!
+//! The *compute results* of these workloads come from the real JAX/Pallas
+//! kernels executed through PJRT (`runtime/`); the *timing* comes from
+//! these streams. Both describe the same programs.
+
+pub mod patterns;
+pub mod table1b;
+
+pub use patterns::{Pattern, PatternKind};
+pub use table1b::{WorkloadSpec, ALL_WORKLOADS};
+
+use crate::gpu::{Op, LINE};
+use crate::sim::{Time, NS};
+use crate::util::prng::Pcg32;
+
+/// Category labels used by the figure benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    ComputeIntensive,
+    LoadIntensive,
+    StoreIntensive,
+    RealWorld,
+}
+
+impl Category {
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::ComputeIntensive => "compute-intensive",
+            Category::LoadIntensive => "load-intensive",
+            Category::StoreIntensive => "store-intensive",
+            Category::RealWorld => "real-world",
+        }
+    }
+}
+
+/// Parameters controlling trace materialization.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceParams {
+    /// Total data footprint in bytes (paper: 10x the GPU local memory).
+    pub footprint: u64,
+    /// Number of warps (Table 1a: 8 cores x 8 threads).
+    pub warps: usize,
+    /// Total dynamic instructions across all warps.
+    pub total_ops: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Base duration of one compute burst.
+    pub compute_ns: Time,
+}
+
+impl Default for TraceParams {
+    fn default() -> Self {
+        TraceParams {
+            footprint: 40 << 20,
+            warps: 64,
+            total_ops: 300_000,
+            seed: 0xC11A,
+            compute_ns: 8 * NS,
+        }
+    }
+}
+
+/// Materialize per-warp op streams for a workload.
+pub fn generate(spec: &WorkloadSpec, p: &TraceParams) -> Vec<Vec<Op>> {
+    let per_warp = p.total_ops / p.warps;
+    let mut out = Vec::with_capacity(p.warps);
+    for w in 0..p.warps {
+        let mut rng = Pcg32::new(p.seed ^ spec.seed_salt(), w as u64);
+        let mut pat = Pattern::new(spec.pattern, p.footprint, w, p.warps, &mut rng);
+        let mut ops = Vec::with_capacity(per_warp);
+        for _ in 0..per_warp {
+            if rng.chance(spec.compute_ratio) {
+                // Compute burst: base +/- 50% jitter.
+                let jitter = (rng.f64() - 0.5) * p.compute_ns as f64;
+                let dur = (p.compute_ns as f64 + jitter).max(500.0) as Time;
+                ops.push(Op::Compute { dur });
+            } else if rng.chance(spec.load_ratio) {
+                ops.push(Op::Load { addr: pat.next_load(&mut rng) });
+            } else {
+                ops.push(Op::Store { addr: pat.next_store(&mut rng) });
+            }
+        }
+        out.push(ops);
+    }
+    out
+}
+
+/// Measured instruction mix of a generated trace (for the Table 1b bench).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TraceMix {
+    pub computes: u64,
+    pub loads: u64,
+    pub stores: u64,
+}
+
+impl TraceMix {
+    pub fn of(trace: &[Vec<Op>]) -> TraceMix {
+        let mut m = TraceMix::default();
+        for ops in trace {
+            for op in ops {
+                match op {
+                    Op::Compute { .. } => m.computes += 1,
+                    Op::Load { .. } => m.loads += 1,
+                    Op::Store { .. } => m.stores += 1,
+                }
+            }
+        }
+        m
+    }
+
+    pub fn total(&self) -> u64 {
+        self.computes + self.loads + self.stores
+    }
+
+    pub fn compute_ratio(&self) -> f64 {
+        self.computes as f64 / self.total().max(1) as f64
+    }
+
+    /// Loads as a fraction of memory operations (Table 1b's load ratio).
+    pub fn load_ratio(&self) -> f64 {
+        let mem = self.loads + self.stores;
+        if mem == 0 {
+            0.0
+        } else {
+            self.loads as f64 / mem as f64
+        }
+    }
+}
+
+/// Unique 64 B lines touched by a trace (footprint check).
+pub fn distinct_lines(trace: &[Vec<Op>]) -> usize {
+    let mut set = std::collections::HashSet::new();
+    for ops in trace {
+        for op in ops {
+            match op {
+                Op::Load { addr } | Op::Store { addr } => {
+                    set.insert(addr / LINE);
+                }
+                _ => {}
+            }
+        }
+    }
+    set.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::table1b::spec;
+
+    #[test]
+    fn mix_matches_table1b_within_tolerance() {
+        let p = TraceParams { total_ops: 64_000, ..Default::default() };
+        for spec in ALL_WORKLOADS {
+            let trace = generate(spec, &p);
+            let mix = TraceMix::of(&trace);
+            assert!(
+                (mix.compute_ratio() - spec.compute_ratio).abs() < 0.03,
+                "{}: compute ratio {} vs spec {}",
+                spec.name,
+                mix.compute_ratio(),
+                spec.compute_ratio
+            );
+            assert!(
+                (mix.load_ratio() - spec.load_ratio).abs() < 0.04,
+                "{}: load ratio {} vs spec {}",
+                spec.name,
+                mix.load_ratio(),
+                spec.load_ratio
+            );
+        }
+    }
+
+    #[test]
+    fn traces_are_deterministic() {
+        let p = TraceParams { total_ops: 10_000, ..Default::default() };
+        let a = generate(spec("vadd"), &p);
+        let b = generate(spec("vadd"), &p);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn different_workloads_differ() {
+        let p = TraceParams { total_ops: 10_000, ..Default::default() };
+        let a = generate(spec("vadd"), &p);
+        let b = generate(spec("bfs"), &p);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn addresses_stay_in_footprint() {
+        let p = TraceParams { total_ops: 50_000, footprint: 8 << 20, ..Default::default() };
+        for name in ["vadd", "sort", "bfs", "gemm", "gnn", "mri"] {
+            let trace = generate(spec(name), &p);
+            for ops in &trace {
+                for op in ops {
+                    if let Op::Load { addr } | Op::Store { addr } = op {
+                        assert!(*addr < p.footprint, "{name}: {addr:#x} out of range");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seq_workloads_touch_many_distinct_lines() {
+        let p = TraceParams { total_ops: 100_000, ..Default::default() };
+        let vadd_lines = distinct_lines(&generate(spec("vadd"), &p));
+        let gemm_lines = distinct_lines(&generate(spec("gemm"), &p));
+        // Streaming vadd covers far more distinct lines than tiled gemm
+        // (which re-reads its tiles).
+        assert!(vadd_lines > gemm_lines, "vadd {vadd_lines} <= gemm {gemm_lines}");
+    }
+}

@@ -1,0 +1,378 @@
+//! Memory access pattern generators: the Seq / Around / Rand taxonomy of
+//! Fig. 9d plus tiled 2D reuse and the real-world composites.
+//!
+//! Streaming (Seq/Tiled) kinds model *coalesced* GPU access: all warps
+//! sweep one shared region together, each taking every W-th line (the
+//! CUDA `base + tid` idiom after 64 B coalescing). This matters: it makes
+//! the combined request stream at the root port dense and monotone —
+//! exactly the stream SR's 256 B–1 KiB windows exploit — and keeps the
+//! page-level working set small (what UVM's migration heuristics assume).
+//!
+//! Loads draw from the lower (input) portion of the footprint and stores
+//! from the upper sixth (output), mirroring the Rodinia kernels' separate
+//! input/output buffers.
+
+use crate::gpu::LINE;
+use crate::util::prng::Pcg32;
+
+/// Pattern taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PatternKind {
+    /// Monotonically ascending coalesced stream (vadd, saxpy, rsum, cfd).
+    Seq,
+    /// Descending stream (reverse traversal; exercises the address
+    /// window's backwards extension).
+    SeqReverse,
+    /// Spatially local but direction-undecided (sort, gauss): a random
+    /// walk with bounded step around a drifting cursor.
+    Around,
+    /// Irregular (path, bfs): uniform over the footprint.
+    Rand,
+    /// 2D tiled with intra-tile reuse (gemm, conv3, stencil): warps
+    /// cooperate on a shared tile that is swept `reuse` times.
+    Tiled { tile_bytes: u64, reuse: u32 },
+    /// Phase composite (gnn = bfs+vadd+gemm, mri = sort+conv3): cycles
+    /// through sub-patterns every `phase_len` accesses.
+    Composite2 { a: &'static PatternKind, b: &'static PatternKind, phase_len: u32 },
+    Composite3 {
+        a: &'static PatternKind,
+        b: &'static PatternKind,
+        c: &'static PatternKind,
+        phase_len: u32,
+    },
+}
+
+/// A warp's stateful address generator.
+#[derive(Debug)]
+pub struct Pattern {
+    kind: PatternKind,
+    /// Shared input region [lo, hi) and this warp's interleave step.
+    lo: u64,
+    hi: u64,
+    step: u64,
+    /// Store region (shared, interleaved).
+    st_lo: u64,
+    st_hi: u64,
+    cursor: u64,
+    st_cursor: u64,
+    /// Tiled state.
+    tile_off: u64,
+    tile_pos: u64,
+    visits: u32,
+    /// Around state (per-warp local region).
+    around_lo: u64,
+    around_hi: u64,
+    /// Composite state.
+    phase: u32,
+    count: u32,
+    sub: Vec<Pattern>,
+}
+
+impl Pattern {
+    pub fn new(
+        kind: PatternKind,
+        footprint: u64,
+        warp: usize,
+        warps: usize,
+        rng: &mut Pcg32,
+    ) -> Pattern {
+        // Output region = top 1/6 of the footprint; inputs below it.
+        let store_base = (footprint - footprint / 6) & !(LINE - 1);
+        let w = warp as u64;
+        let nw = warps as u64;
+        let step = nw * LINE;
+
+        // Around: per-warp local window (binary-tree subtrees differ per
+        // thread), sized 1/warps of the input space.
+        let around_span = ((store_base / nw) & !(LINE - 1)).max(LINE);
+        let around_lo = w * around_span;
+        let around_hi = around_lo + around_span;
+
+        let sub = match kind {
+            PatternKind::Composite2 { a, b, .. } => vec![
+                Pattern::new(*a, footprint, warp, warps, rng),
+                Pattern::new(*b, footprint, warp, warps, rng),
+            ],
+            PatternKind::Composite3 { a, b, c, .. } => vec![
+                Pattern::new(*a, footprint, warp, warps, rng),
+                Pattern::new(*b, footprint, warp, warps, rng),
+                Pattern::new(*c, footprint, warp, warps, rng),
+            ],
+            _ => Vec::new(),
+        };
+
+        let cursor = match kind {
+            PatternKind::SeqReverse => store_base - (w + 1) * LINE,
+            PatternKind::Around => (around_lo + around_span / 2) & !(LINE - 1),
+            _ => w * LINE,
+        };
+        Pattern {
+            kind,
+            lo: 0,
+            hi: store_base,
+            step,
+            st_lo: store_base,
+            st_hi: footprint,
+            cursor,
+            st_cursor: store_base + w * LINE,
+            tile_off: 0,
+            tile_pos: w * LINE,
+            visits: 0,
+            around_lo,
+            around_hi,
+            phase: 0,
+            count: 0,
+            sub,
+        }
+    }
+
+    fn wrap_input(&self, a: u64) -> u64 {
+        let span = self.hi - self.lo;
+        self.lo + (a - self.lo) % span
+    }
+
+    /// Next load address.
+    pub fn next_load(&mut self, rng: &mut Pcg32) -> u64 {
+        match self.kind {
+            PatternKind::Seq => {
+                let a = self.cursor;
+                self.cursor = self.wrap_input(self.cursor + self.step);
+                a
+            }
+            PatternKind::SeqReverse => {
+                let a = self.cursor;
+                self.cursor = if self.cursor < self.lo + self.step {
+                    self.hi - (self.lo + self.step - self.cursor)
+                } else {
+                    self.cursor - self.step
+                };
+                a
+            }
+            PatternKind::Around => {
+                // Bounded random walk with slow forward drift inside the
+                // warp's subtree window.
+                let step = (rng.below(4) + 1) * LINE;
+                let span = self.around_hi - self.around_lo;
+                let fwd = rng.chance(0.52);
+                let mut c = self.cursor;
+                if fwd {
+                    c += step;
+                    if c >= self.around_hi {
+                        c = self.around_lo + (c - self.around_hi) % span;
+                    }
+                } else {
+                    c = if c < self.around_lo + step {
+                        self.around_hi - (self.around_lo + step - c) % span
+                    } else {
+                        c - step
+                    };
+                }
+                self.cursor = c & !(LINE - 1);
+                self.cursor
+            }
+            PatternKind::Rand => {
+                // Frontier-style irregularity (Rodinia bfs/path): most
+                // accesses land in a slowly-drifting hot window (the
+                // current frontier), the rest scatter globally. Pure
+                // uniform access would be far harsher than the real
+                // graph workloads the paper measured.
+                let span_lines = (self.hi - self.lo) / LINE;
+                let hot_lines = (span_lines / 16).max(1);
+                let a = if rng.chance(0.95) {
+                    let base = (self.cursor / LINE) % span_lines;
+                    self.lo + ((base + rng.below(hot_lines)) % span_lines) * LINE
+                } else {
+                    self.lo + rng.below(span_lines.max(1)) * LINE
+                };
+                // The frontier drifts forward slowly.
+                self.cursor += LINE / 4 + 16;
+                a
+            }
+            PatternKind::Tiled { tile_bytes, reuse } => {
+                // All warps sweep the shared tile cooperatively; each tile
+                // is swept `reuse` times before advancing (CUDA-block
+                // shared-memory reuse).
+                let a = self.tile_off + self.tile_pos;
+                self.tile_pos += self.step;
+                if self.tile_pos >= tile_bytes {
+                    self.tile_pos -= tile_bytes; // next sweep of this tile
+                    self.visits += 1;
+                    if self.visits >= reuse {
+                        self.visits = 0;
+                        self.tile_off += tile_bytes;
+                        if self.tile_off + tile_bytes > self.hi {
+                            self.tile_off = self.lo;
+                        }
+                    }
+                }
+                self.wrap_input(a)
+            }
+            PatternKind::Composite2 { phase_len, .. } => {
+                self.advance_phase(phase_len, 2);
+                let p = self.phase as usize;
+                self.sub[p].next_load(rng)
+            }
+            PatternKind::Composite3 { phase_len, .. } => {
+                self.advance_phase(phase_len, 3);
+                let p = self.phase as usize;
+                self.sub[p].next_load(rng)
+            }
+        }
+    }
+
+    fn advance_phase(&mut self, phase_len: u32, phases: u32) {
+        self.count += 1;
+        if self.count >= phase_len {
+            self.count = 0;
+            self.phase = (self.phase + 1) % phases;
+        }
+    }
+
+    /// Next store address (shared output region, coalesced interleave;
+    /// Rand kinds scatter).
+    pub fn next_store(&mut self, rng: &mut Pcg32) -> u64 {
+        match self.kind {
+            PatternKind::Rand => {
+                let span = (self.st_hi - self.st_lo) / LINE;
+                self.st_lo + rng.below(span.max(1)) * LINE
+            }
+            PatternKind::Composite2 { .. } | PatternKind::Composite3 { .. } => {
+                let p = self.phase as usize;
+                self.sub[p].next_store(rng)
+            }
+            _ => {
+                let a = self.st_cursor;
+                self.st_cursor += self.step;
+                if self.st_cursor >= self.st_hi {
+                    let span = self.st_hi - self.st_lo;
+                    self.st_cursor = self.st_lo + (self.st_cursor - self.st_lo) % span;
+                }
+                a
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FOOT: u64 = 4 << 20;
+    const WARPS: usize = 4;
+
+    fn pat(kind: PatternKind, warp: usize) -> (Pattern, Pcg32) {
+        let mut rng = Pcg32::new(7, warp as u64);
+        let p = Pattern::new(kind, FOOT, warp, WARPS, &mut rng);
+        (p, rng)
+    }
+
+    #[test]
+    fn seq_interleaves_across_warps() {
+        // Warp w starts at w*LINE and strides by warps*LINE: the union of
+        // all warps' first accesses is a dense run of lines.
+        let mut firsts = Vec::new();
+        for w in 0..WARPS {
+            let (mut p, mut rng) = pat(PatternKind::Seq, w);
+            firsts.push(p.next_load(&mut rng));
+        }
+        firsts.sort_unstable();
+        for (i, a) in firsts.iter().enumerate() {
+            assert_eq!(*a, i as u64 * LINE);
+        }
+    }
+
+    #[test]
+    fn seq_strides_by_warp_count() {
+        let (mut p, mut rng) = pat(PatternKind::Seq, 1);
+        let a = p.next_load(&mut rng);
+        let b = p.next_load(&mut rng);
+        assert_eq!(b - a, WARPS as u64 * LINE);
+    }
+
+    #[test]
+    fn seq_reverse_descends() {
+        let (mut p, mut rng) = pat(PatternKind::SeqReverse, 0);
+        let a = p.next_load(&mut rng);
+        let b = p.next_load(&mut rng);
+        assert_eq!(a - b, WARPS as u64 * LINE);
+    }
+
+    #[test]
+    fn around_stays_in_warp_window() {
+        let (mut p, mut rng) = pat(PatternKind::Around, 2);
+        let store_base = FOOT - FOOT / 6;
+        let span = store_base / WARPS as u64 & !(LINE - 1);
+        for _ in 0..500 {
+            let a = p.next_load(&mut rng);
+            assert!(a >= 2 * span && a < 3 * span, "{a:#x} outside warp-2 window");
+        }
+    }
+
+    #[test]
+    fn around_moves_both_directions() {
+        let (mut p, mut rng) = pat(PatternKind::Around, 0);
+        let mut up = 0;
+        let mut down = 0;
+        let mut prev = p.next_load(&mut rng);
+        for _ in 0..300 {
+            let a = p.next_load(&mut rng);
+            if a > prev {
+                up += 1;
+            } else if a < prev {
+                down += 1;
+            }
+            prev = a;
+        }
+        assert!(up > 50 && down > 50, "walk must go both ways: up {up} down {down}");
+    }
+
+    #[test]
+    fn rand_covers_widely() {
+        let (mut p, mut rng) = pat(PatternKind::Rand, 0);
+        let mut set = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            set.insert(p.next_load(&mut rng));
+        }
+        assert!(set.len() > 800, "only {} distinct", set.len());
+    }
+
+    #[test]
+    fn tiled_stays_within_tile_until_advancing() {
+        let tile = 16 * LINE;
+        let (mut p, mut rng) = pat(PatternKind::Tiled { tile_bytes: tile, reuse: 2 }, 0);
+        // With 4 warps and reuse 2, warp 0 makes 2*16/4 = 8 accesses in
+        // tile 0 before moving on.
+        let mut addrs = Vec::new();
+        for _ in 0..8 {
+            addrs.push(p.next_load(&mut rng));
+        }
+        assert!(addrs.iter().all(|&a| a < tile), "left tile early: {addrs:?}");
+        let next = p.next_load(&mut rng);
+        assert!(next >= tile, "should advance to next tile, got {next:#x}");
+    }
+
+    #[test]
+    fn stores_land_in_output_region() {
+        let (mut p, mut rng) = pat(PatternKind::Seq, 1);
+        let store_base = FOOT - FOOT / 6 & !(LINE - 1);
+        for _ in 0..100 {
+            let a = p.next_store(&mut rng);
+            assert!(a >= store_base, "{a:#x} below store region");
+            assert!(a < FOOT);
+        }
+    }
+
+    #[test]
+    fn composite_cycles_phases() {
+        static SEQ: PatternKind = PatternKind::Seq;
+        static RAND: PatternKind = PatternKind::Rand;
+        let (mut p, mut rng) =
+            pat(PatternKind::Composite2 { a: &SEQ, b: &RAND, phase_len: 8 }, 0);
+        let mut addrs = Vec::new();
+        for _ in 0..64 {
+            addrs.push(p.next_load(&mut rng));
+        }
+        let jumps = addrs.windows(2).filter(|w| w[1].abs_diff(w[0]) > 64 * LINE).count();
+        assert!(jumps > 0, "composite never switched phase");
+    }
+}

@@ -1,0 +1,203 @@
+//! Table 1b: the workload roster with its measured instruction mixes.
+//!
+//! Compute ratio = compute instructions / all instructions; load ratio =
+//! loads / (loads + stores). Categories and ratios are the paper's; the
+//! pattern assignments follow the paper's own description of each
+//! workload (Fig. 9d's Seq/Around/Rand taxonomy, §Performance Analysis).
+
+use super::patterns::PatternKind;
+use super::Category;
+
+/// Static description of one workload.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    pub category: Category,
+    /// Table 1b "Compute Ratio".
+    pub compute_ratio: f64,
+    /// Table 1b "Load Ratio" (fraction of memory ops that are loads).
+    pub load_ratio: f64,
+    pub pattern: PatternKind,
+}
+
+impl WorkloadSpec {
+    /// Per-workload RNG salt so traces differ across workloads.
+    pub fn seed_salt(&self) -> u64 {
+        self.name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x100000001b3)
+        })
+    }
+}
+
+// Sub-patterns for the composites (need 'static for the enum references).
+static SEQ: PatternKind = PatternKind::Seq;
+static RAND: PatternKind = PatternKind::Rand;
+static AROUND: PatternKind = PatternKind::Around;
+static GEMM_TILE: PatternKind = PatternKind::Tiled { tile_bytes: 16 << 10, reuse: 3 };
+static CONV_TILE: PatternKind = PatternKind::Tiled { tile_bytes: 8 << 10, reuse: 2 };
+
+/// The full Table 1b roster, in the paper's row order.
+pub static ALL_WORKLOADS: &[WorkloadSpec] = &[
+    // Compute-intensive.
+    WorkloadSpec {
+        name: "rsum",
+        category: Category::ComputeIntensive,
+        compute_ratio: 0.314,
+        load_ratio: 0.533,
+        pattern: PatternKind::Seq,
+    },
+    WorkloadSpec {
+        name: "stencil",
+        category: Category::ComputeIntensive,
+        compute_ratio: 0.375,
+        load_ratio: 0.725,
+        pattern: PatternKind::Tiled { tile_bytes: 8 << 10, reuse: 2 },
+    },
+    WorkloadSpec {
+        name: "sort",
+        category: Category::ComputeIntensive,
+        compute_ratio: 0.381,
+        load_ratio: 0.987,
+        pattern: PatternKind::Around,
+    },
+    // Load-intensive.
+    WorkloadSpec {
+        name: "gemm",
+        category: Category::LoadIntensive,
+        compute_ratio: 0.116,
+        load_ratio: 0.999,
+        pattern: PatternKind::Tiled { tile_bytes: 16 << 10, reuse: 3 },
+    },
+    WorkloadSpec {
+        name: "vadd",
+        category: Category::LoadIntensive,
+        compute_ratio: 0.156,
+        load_ratio: 0.691,
+        pattern: PatternKind::Seq,
+    },
+    WorkloadSpec {
+        name: "saxpy",
+        category: Category::LoadIntensive,
+        compute_ratio: 0.162,
+        load_ratio: 0.692,
+        pattern: PatternKind::Seq,
+    },
+    WorkloadSpec {
+        name: "conv3",
+        category: Category::LoadIntensive,
+        compute_ratio: 0.218,
+        load_ratio: 0.786,
+        pattern: PatternKind::Tiled { tile_bytes: 8 << 10, reuse: 2 },
+    },
+    WorkloadSpec {
+        name: "path",
+        category: Category::LoadIntensive,
+        compute_ratio: 0.270,
+        load_ratio: 0.927,
+        pattern: PatternKind::Rand,
+    },
+    // Store-intensive.
+    WorkloadSpec {
+        name: "cfd",
+        category: Category::StoreIntensive,
+        compute_ratio: 0.209,
+        load_ratio: 0.426,
+        pattern: PatternKind::Seq,
+    },
+    WorkloadSpec {
+        name: "gauss",
+        category: Category::StoreIntensive,
+        compute_ratio: 0.235,
+        load_ratio: 0.485,
+        pattern: PatternKind::Around,
+    },
+    WorkloadSpec {
+        name: "bfs",
+        category: Category::StoreIntensive,
+        compute_ratio: 0.293,
+        load_ratio: 0.432,
+        pattern: PatternKind::Rand,
+    },
+    // Real-world composites: gnn = bfs + vadd + gemm; mri = sort + conv3.
+    WorkloadSpec {
+        name: "gnn",
+        category: Category::RealWorld,
+        compute_ratio: 0.274,
+        load_ratio: 0.738,
+        pattern: PatternKind::Composite3 { a: &RAND, b: &SEQ, c: &GEMM_TILE, phase_len: 128 },
+    },
+    WorkloadSpec {
+        name: "mri",
+        category: Category::RealWorld,
+        compute_ratio: 0.292,
+        load_ratio: 0.533,
+        pattern: PatternKind::Composite2 { a: &AROUND, b: &CONV_TILE, phase_len: 128 },
+    },
+];
+
+/// Look up a workload by name (panics on unknown: test/bench-time input).
+pub fn spec(name: &str) -> &'static WorkloadSpec {
+    ALL_WORKLOADS
+        .iter()
+        .find(|w| w.name == name)
+        .unwrap_or_else(|| panic!("unknown workload `{name}`"))
+}
+
+/// Workloads in a category, in table order.
+pub fn by_category(cat: Category) -> Vec<&'static WorkloadSpec> {
+    ALL_WORKLOADS.iter().filter(|w| w.category == cat).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_workloads() {
+        assert_eq!(ALL_WORKLOADS.len(), 13);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(spec("vadd").compute_ratio, 0.156);
+        assert_eq!(spec("gemm").load_ratio, 0.999);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown workload")]
+    fn unknown_name_panics() {
+        spec("nope");
+    }
+
+    #[test]
+    fn categories_partition_roster() {
+        let n: usize = [
+            Category::ComputeIntensive,
+            Category::LoadIntensive,
+            Category::StoreIntensive,
+            Category::RealWorld,
+        ]
+        .iter()
+        .map(|&c| by_category(c).len())
+        .sum();
+        assert_eq!(n, 13);
+        assert_eq!(by_category(Category::LoadIntensive).len(), 5);
+        assert_eq!(by_category(Category::RealWorld).len(), 2);
+    }
+
+    #[test]
+    fn salts_are_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for w in ALL_WORKLOADS {
+            assert!(seen.insert(w.seed_salt()), "salt collision for {}", w.name);
+        }
+    }
+
+    #[test]
+    fn ratios_are_probabilities() {
+        for w in ALL_WORKLOADS {
+            assert!((0.0..=1.0).contains(&w.compute_ratio), "{}", w.name);
+            assert!((0.0..=1.0).contains(&w.load_ratio), "{}", w.name);
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Integration: the paper's qualitative figure shapes at reduced scale.
+//! (The full-scale sweeps live in `cargo bench`.)
+
+use cxl_gpu::coordinator::experiments::{self, Scale};
+
+#[test]
+fn fig3b_controller_ordering() {
+    let r = experiments::fig3b(false);
+    assert!(r.ours_ns < 100.0, "two-digit ns");
+    assert!(r.smt_ns / r.ours_ns > 3.0);
+    assert!(r.tpp_ns / r.ours_ns > 3.0);
+}
+
+#[test]
+fn table1b_mixes_track_paper() {
+    let rows = experiments::table1b(false);
+    assert_eq!(rows.len(), 13);
+    for (name, c, l) in rows {
+        let s = cxl_gpu::workloads::table1b::spec(name);
+        assert!((c - s.compute_ratio).abs() < 0.05, "{name}");
+        assert!((l - s.load_ratio).abs() < 0.06, "{name}");
+    }
+}
+
+#[test]
+fn fig9a_shape_uvm_much_worse_cxl_close() {
+    // Quick scale: per-workload coverage is partial (short traces barely
+    // leave local memory for some workloads), so assert the aggregate
+    // ordering; the per-workload sweep runs at full scale in the bench.
+    let r = experiments::fig9a(Scale::quick(), false);
+    assert!(r.uvm_over_ideal > 10.0, "UVM {}", r.uvm_over_ideal);
+    let uvm_over_cxl =
+        cxl_gpu::coordinator::runner::overall_geomean(&r.uvm, &r.cxl);
+    assert!(uvm_over_cxl > 5.0, "CXL should beat UVM broadly: {uvm_over_cxl}");
+}
+
+#[test]
+fn fig9b_shape_sr_and_ds_help() {
+    let r = experiments::fig9b(Scale::quick(), false);
+    assert!(r.sr_over_cxl > 1.1, "SR {}", r.sr_over_cxl);
+    assert!(r.ds_over_sr_store > 0.0, "DS store {}", r.ds_over_sr_store);
+}
+
+#[test]
+fn fig9e_ds_hides_store_tail() {
+    let r = experiments::fig9e(Scale::quick(), false);
+    assert!(r.ds_peak_store_us < r.sr_peak_store_us);
+}
+
+#[test]
+fn headline_direction() {
+    let r = experiments::headline(Scale::quick(), false);
+    assert!(r.cxl_over_uvm > 1.5);
+    assert!(r.cxl_over_smt > 1.0);
+}

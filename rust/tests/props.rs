@@ -1,0 +1,217 @@
+//! Property-based tests over coordinator invariants, using the in-tree
+//! prop-test runner (`cxl_gpu::util::prop`).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use cxl_gpu::cxl::DevLoad;
+use cxl_gpu::gpu::{AccessResult, Llc, LlcConfig, LINE};
+use cxl_gpu::rootcomplex::det_store::DetStoreEngine;
+use cxl_gpu::rootcomplex::hdm::{HdmDecoder, HdmEntry};
+use cxl_gpu::rootcomplex::rbtree::RbTree;
+use cxl_gpu::rootcomplex::spec_read::{SpecReadEngine, SrPolicy};
+use cxl_gpu::sim::{EventQueue, NS};
+use cxl_gpu::util::prop::check;
+
+#[test]
+fn prop_event_queue_pops_in_nondecreasing_time() {
+    check("event-queue-order", 0xE1, 100, |g| {
+        let mut q = EventQueue::new();
+        let n = g.usize("events", 1, 200);
+        for i in 0..n {
+            q.push_at(g.u64(&format!("t{i}"), 0, 10_000), i);
+        }
+        let mut last = 0;
+        while let Some((t, _)) = q.pop() {
+            if t < last {
+                return Err(format!("time went backwards: {t} < {last}"));
+            }
+            last = t;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hdm_decode_is_total_and_consistent_over_programmed_space() {
+    check("hdm-total", 0xD0, 100, |g| {
+        let mut d = HdmDecoder::new();
+        let ports = g.usize("ports", 1, 8);
+        let size = g.u64("win", 1, 64) * 4096;
+        for p in 0..ports {
+            d.program(HdmEntry { port: p, base: p as u64 * size, size })
+                .map_err(|e| e.to_string())?;
+        }
+        let total = ports as u64 * size;
+        for i in 0..32 {
+            let hpa = g.u64(&format!("hpa{i}"), 0, total - 1);
+            let (port, off) = d.decode(hpa).ok_or("decode hole inside programmed space")?;
+            if port as u64 != hpa / size {
+                return Err(format!("wrong port for {hpa:#x}"));
+            }
+            if off != hpa % size {
+                return Err(format!("wrong offset for {hpa:#x}"));
+            }
+        }
+        if d.decode(total).is_some() {
+            return Err("decoded past the programmed space".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rbtree_matches_btreemap() {
+    check("rbtree-model", 0xB3, 60, |g| {
+        let mut t: RbTree<u64> = RbTree::new();
+        let mut model = BTreeMap::new();
+        let ops = g.usize("ops", 1, 300);
+        for i in 0..ops {
+            let key = g.u64(&format!("k{i}"), 0, 64);
+            if g.bool(&format!("ins{i}"), 0.6) {
+                let prev_t = t.insert(key, i as u64);
+                let prev_m = model.insert(key, i as u64);
+                if prev_t != prev_m {
+                    return Err(format!("insert mismatch at {key}"));
+                }
+            } else if t.remove(key) != model.remove(&key) {
+                return Err(format!("remove mismatch at {key}"));
+            }
+        }
+        t.check_invariants().map_err(|e| e)?;
+        let keys: Vec<u64> = model.keys().copied().collect();
+        if t.keys() != keys {
+            return Err("in-order keys diverge from model".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ds_never_loses_or_duplicates_stores() {
+    check("ds-conservation", 0xD5, 60, |g| {
+        let mut ds = DetStoreEngine::new(true, 1 << 20);
+        let mut live = std::collections::HashSet::new();
+        let ops = g.usize("ops", 1, 200);
+        for i in 0..ops {
+            let addr = g.u64(&format!("a{i}"), 0, 2_000) * LINE;
+            let dl = *g.choose(
+                &format!("dl{i}"),
+                &[DevLoad::Light, DevLoad::Optimal, DevLoad::Moderate, DevLoad::Severe],
+            );
+            match ds.on_store(0, addr, 64, dl) {
+                cxl_gpu::rootcomplex::StoreAction::Buffer => {
+                    live.insert(addr);
+                }
+                _ => {}
+            }
+            if g.bool(&format!("flush{i}"), 0.3) {
+                for (line, _) in ds.flush_batch(4) {
+                    ds.flush_done(line);
+                    live.remove(&line);
+                }
+            }
+            ds.check_invariants()?;
+        }
+        // Everything still live must intercept; everything flushed must not.
+        for &addr in &live {
+            if !ds.intercept_read(addr) {
+                return Err(format!("lost buffered store at {addr:#x}"));
+            }
+        }
+        if ds.buffered_entries() != live.len() {
+            return Err(format!(
+                "entry count {} != live {}",
+                ds.buffered_entries(),
+                live.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sr_windows_are_aligned_and_bounded() {
+    check("sr-window-bounds", 0x5A, 80, |g| {
+        let mut e = SpecReadEngine::new(SrPolicy::Window);
+        for _ in 0..g.usize("warmup", 0, 6) {
+            e.observe_devload(DevLoad::Light);
+        }
+        let mut queue = VecDeque::new();
+        let qlen = g.usize("qlen", 0, 32);
+        for i in 0..qlen {
+            queue.push_back(g.u64(&format!("q{i}"), 0, 1 << 24));
+        }
+        for i in 0..16 {
+            let addr = g.u64(&format!("addr{i}"), 0, 1 << 24);
+            if let Some(f) = e.on_load(0, addr, &queue, i) {
+                if f.addr % 256 != 0 {
+                    return Err(format!("window start {:#x} not 256B aligned", f.addr));
+                }
+                if !(64..=1024).contains(&f.len) {
+                    return Err(format!("window len {} out of range", f.len));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_llc_hit_after_fill_and_capacity_bounded() {
+    check("llc-fill-hit", 0x77C, 60, |g| {
+        let mut llc = Llc::new(LlcConfig {
+            capacity: 64 * LINE * 4,
+            ways: 4,
+            hit_lat: 5 * NS,
+            mshrs: 8,
+        });
+        let ops = g.usize("ops", 1, 200);
+        let mut now = 0;
+        for i in 0..ops {
+            let addr = g.u64(&format!("a{i}"), 0, 512) * LINE;
+            let is_write = g.bool(&format!("w{i}"), 0.3);
+            now += 10 * NS;
+            match llc.access(now, addr, is_write, 1) {
+                AccessResult::Miss { .. } if !is_write => {
+                    llc.fill(addr, now);
+                    // Immediately after the fill, the line must hit.
+                    match llc.access(now + NS, addr, false, 2) {
+                        AccessResult::Hit { .. } => {}
+                        r => return Err(format!("no hit after fill: {r:?}")),
+                    }
+                }
+                _ => {}
+            }
+            if llc.resident_lines() > 256 {
+                return Err("LLC exceeded its capacity".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulation_is_deterministic_across_runs() {
+    use cxl_gpu::coordinator::config::SystemConfig;
+    use cxl_gpu::coordinator::system::System;
+    use cxl_gpu::media::MediaKind;
+    use cxl_gpu::workloads::table1b::ALL_WORKLOADS;
+    check("sim-determinism", 0xDE7, 6, |g| {
+        let wl = g.choose("workload", &["vadd", "bfs", "sort", "gnn"]);
+        let spec = ALL_WORKLOADS.iter().find(|w| w.name == *wl).unwrap();
+        let cfg_name = g.choose("config", &["cxl", "cxl-sr", "cxl-ds"]);
+        let mut cfg = SystemConfig::named(cfg_name, MediaKind::Znand);
+        cfg.total_ops = 6_000;
+        cfg.ssd_scale();
+        cfg.seed = g.u64("seed", 0, 1 << 30);
+        let a = System::new(spec, &cfg).run();
+        let b = System::new(spec, &cfg).run();
+        if a.exec_time != b.exec_time || a.events != b.events {
+            return Err(format!(
+                "nondeterminism: {} vs {} exec, {} vs {} events",
+                a.exec_time, b.exec_time, a.events, b.events
+            ));
+        }
+        Ok(())
+    });
+}
