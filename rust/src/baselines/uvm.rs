@@ -11,9 +11,10 @@
 //! whole 256 KiB regions; isolated faults migrate a single 16 KiB page.
 //! Old pages are evicted FIFO, dirty victims write back over PCIe.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::sim::{transfer_time, Time};
+use crate::util::hash::FxHashMap;
 use crate::util::stats::Summary;
 
 use super::HOST_RUNTIME;
@@ -50,7 +51,7 @@ pub struct UvmManager {
     pub capacity: u64,
     /// PCIe bandwidth, GB/s.
     pub pcie_gbps: f64,
-    pages: HashMap<u64, PageState>,
+    pages: FxHashMap<u64, PageState>,
     fifo: VecDeque<u64>,
     /// Current intervention window's close time.
     win_end: Time,
@@ -67,7 +68,7 @@ impl UvmManager {
             block_bytes: block_bytes.max(4096),
             capacity,
             pcie_gbps: 32.0,
-            pages: HashMap::new(),
+            pages: FxHashMap::default(),
             fifo: VecDeque::new(),
             win_end: 0,
             pcie_free: 0,

@@ -13,7 +13,9 @@ use crate::workloads::table1b::{spec, ALL_WORKLOADS};
 use crate::workloads::{generate, Category, TraceMix, TraceParams};
 
 use super::config::SystemConfig;
-use super::runner::{category_geomean, overall_geomean, run_suite, run_with, RunResult};
+use super::runner::{
+    category_geomean, overall_geomean, par_map, run_jobs, run_suites, RunResult, SweepJob,
+};
 
 /// Scale knob: total dynamic ops per run. The DRAM-geometry experiments
 /// (40 MiB footprint) need more ops for full footprint coverage than the
@@ -95,14 +97,14 @@ pub fn fig3b(print: bool) -> Fig3b {
 // Table 1b — workload mixes
 // ---------------------------------------------------------------------------
 
-/// Regenerate Table 1b from the trace generators.
+/// Regenerate Table 1b from the trace generators (one workload per
+/// worker; trace generation is embarrassingly parallel).
 pub fn table1b(print: bool) -> Vec<(&'static str, f64, f64)> {
     let p = TraceParams { total_ops: 130_000, ..Default::default() };
-    let mut rows = Vec::new();
-    for w in ALL_WORKLOADS {
+    let rows: Vec<(&'static str, f64, f64)> = par_map(ALL_WORKLOADS, |_, w| {
         let mix = TraceMix::of(&generate(w, &p));
-        rows.push((w.name, mix.compute_ratio(), mix.load_ratio()));
-    }
+        (w.name, mix.compute_ratio(), mix.load_ratio())
+    });
     if print {
         let mut t = Table::new(
             "Table 1b — workload instruction mixes (generated vs paper)",
@@ -138,11 +140,13 @@ pub struct Fig9a {
 }
 
 /// Fig. 9a: UVM vs CXL vs GPU-DRAM with a DRAM EP, all 13 workloads.
+/// The 3×13 grid runs as one flat parallel batch.
 pub fn fig9a(scale: Scale, print: bool) -> Fig9a {
     let ops = Some(scale.total_ops);
-    let baseline = run_suite("gpu-dram", MediaKind::Ddr5, ops);
-    let uvm = run_suite("uvm", MediaKind::Ddr5, ops);
-    let cxl = run_suite("cxl", MediaKind::Ddr5, ops);
+    let mut suites = run_suites(&["gpu-dram", "uvm", "cxl"], MediaKind::Ddr5, ops);
+    let cxl = suites.pop().unwrap();
+    let uvm = suites.pop().unwrap();
+    let baseline = suites.pop().unwrap();
 
     let res = Fig9a {
         uvm_over_ideal: overall_geomean(&uvm, &baseline),
@@ -200,22 +204,30 @@ pub struct Fig9b {
 /// GPU-DRAM (log scale in the paper). Uses the SSD scale (see
 /// `SystemConfig::ssd_scale`).
 pub fn fig9b(scale: Scale, print: bool) -> Fig9b {
-    let suite = |name: &str, media: MediaKind| -> Vec<RunResult> {
-        crate::workloads::table1b::ALL_WORKLOADS
-            .iter()
-            .map(|w| {
-                let mut cfg = SystemConfig::named(name, media);
-                cfg.total_ops = scale.ssd_ops;
-                cfg.ssd_scale();
-                run_with(w, &cfg)
-            })
-            .collect()
-    };
-    let baseline = suite("gpu-dram", MediaKind::Ddr5);
-    let gds = suite("gds", MediaKind::Znand);
-    let cxl = suite("cxl", MediaKind::Znand);
-    let sr = suite("cxl-sr", MediaKind::Znand);
-    let ds = suite("cxl-ds", MediaKind::Znand);
+    // All five suites (5×13 cells) as one flat parallel batch.
+    let grid: [(&str, MediaKind); 5] = [
+        ("gpu-dram", MediaKind::Ddr5),
+        ("gds", MediaKind::Znand),
+        ("cxl", MediaKind::Znand),
+        ("cxl-sr", MediaKind::Znand),
+        ("cxl-ds", MediaKind::Znand),
+    ];
+    let mut jobs: Vec<SweepJob> = Vec::new();
+    for (name, media) in grid {
+        for w in ALL_WORKLOADS {
+            let mut cfg = SystemConfig::named(name, media);
+            cfg.total_ops = scale.ssd_ops;
+            cfg.ssd_scale();
+            jobs.push((w, cfg));
+        }
+    }
+    let mut flat = run_jobs(&jobs);
+    let n = ALL_WORKLOADS.len();
+    let ds = flat.split_off(4 * n);
+    let sr = flat.split_off(3 * n);
+    let cxl = flat.split_off(2 * n);
+    let gds = flat.split_off(n);
+    let baseline = flat;
 
     let res = Fig9b {
         sr_over_cxl: overall_geomean(&cxl, &sr),
@@ -273,22 +285,38 @@ pub struct Fig9cCell {
 pub fn fig9c(scale: Scale, print: bool) -> Vec<Fig9cCell> {
     let medias = [MediaKind::Optane, MediaKind::Znand, MediaKind::Nand];
     let workloads = ["vadd", "path", "bfs"];
-    let mut cells = Vec::new();
+    // Flatten the whole grid — per workload: one GPU-DRAM baseline plus
+    // 3 medias × 3 configs — into a single parallel batch, then index the
+    // ordered results back into cells.
+    let per_wl = 1 + medias.len() * 3;
+    let mut jobs: Vec<SweepJob> = Vec::new();
     for &wl in &workloads {
         let mut base_cfg = SystemConfig::named("gpu-dram", MediaKind::Ddr5);
         base_cfg.total_ops = scale.ssd_ops;
         base_cfg.ssd_scale();
-        let base = run_with(spec(wl), &base_cfg);
+        jobs.push((spec(wl), base_cfg));
         for &media in &medias {
-            let mut row = [0.0f64; 3];
-            for (i, cfg_name) in ["cxl", "cxl-sr", "cxl-ds"].iter().enumerate() {
+            for cfg_name in ["cxl", "cxl-sr", "cxl-ds"] {
                 let mut cfg = SystemConfig::named(cfg_name, media);
                 cfg.total_ops = scale.ssd_ops;
                 cfg.ssd_scale();
-                let r = run_with(spec(wl), &cfg);
-                row[i] = r.normalized_to(&base);
+                jobs.push((spec(wl), cfg));
             }
-            cells.push(Fig9cCell { workload: wl, media, cxl: row[0], sr: row[1], ds: row[2] });
+        }
+    }
+    let results = run_jobs(&jobs);
+    let mut cells = Vec::new();
+    for (wi, &wl) in workloads.iter().enumerate() {
+        let base = &results[wi * per_wl];
+        for (mi, &media) in medias.iter().enumerate() {
+            let off = wi * per_wl + 1 + mi * 3;
+            cells.push(Fig9cCell {
+                workload: wl,
+                media,
+                cxl: results[off].normalized_to(base),
+                sr: results[off + 1].normalized_to(base),
+                ds: results[off + 2].normalized_to(base),
+            });
         }
     }
     if print {
@@ -351,21 +379,37 @@ pub fn fig9d(scale: Scale, print: bool) -> Vec<Fig9dRow> {
         ("Around", &["sort", "gauss"]),
         ("Rand", &["path", "bfs"]),
     ];
-    let mut rows = Vec::new();
-    for (class, wls) in classes {
-        let mut norm = [0.0f64; 4]; // cxl, naive, dyn, sr
-        let mut hits = [0.0f64; 4];
+    // Flatten (class × workload × [baseline + 4 ablation points]) into
+    // one parallel batch; aggregate from the ordered results.
+    let ablations = ["cxl", "cxl-naive", "cxl-dyn", "cxl-sr"];
+    let mut jobs: Vec<SweepJob> = Vec::new();
+    for (_, wls) in classes {
         for &wl in wls {
             let mut base_cfg = SystemConfig::named("gpu-dram", MediaKind::Ddr5);
             base_cfg.total_ops = scale.ssd_ops;
             base_cfg.ssd_scale();
-            let base = run_with(spec(wl), &base_cfg);
-            for (i, cfg_name) in ["cxl", "cxl-naive", "cxl-dyn", "cxl-sr"].iter().enumerate() {
+            jobs.push((spec(wl), base_cfg));
+            for cfg_name in ablations {
                 let mut cfg = SystemConfig::named(cfg_name, MediaKind::Znand);
                 cfg.total_ops = scale.ssd_ops;
                 cfg.ssd_scale();
-                let r = run_with(spec(wl), &cfg);
-                norm[i] += r.normalized_to(&base).ln();
+                jobs.push((spec(wl), cfg));
+            }
+        }
+    }
+    let results = run_jobs(&jobs);
+    let mut rows = Vec::new();
+    let mut idx = 0;
+    for (class, wls) in classes {
+        let mut norm = [0.0f64; 4]; // cxl, naive, dyn, sr
+        let mut hits = [0.0f64; 4];
+        for &_wl in wls {
+            let base = &results[idx];
+            idx += 1;
+            for i in 0..ablations.len() {
+                let r = &results[idx];
+                idx += 1;
+                norm[i] += r.normalized_to(base).ln();
                 hits[i] += r.metrics.ep_hit_rate();
             }
         }
@@ -429,15 +473,20 @@ pub struct Fig9e {
 /// Fig. 9e: bfs on Z-NAND; load/store latency + ingress occupancy time
 /// series, CXL-SR vs CXL-DS. GC pressure comes from the store stream.
 pub fn fig9e(scale: Scale, print: bool) -> Fig9e {
-    let mk = |cfg_name: &str| {
-        let mut cfg = SystemConfig::named(cfg_name, MediaKind::Znand);
-        cfg.total_ops = scale.ssd_ops;
-        cfg.ssd_scale();
-        cfg.timeline = true;
-        run_with(spec("bfs"), &cfg)
-    };
-    let sr = mk("cxl-sr");
-    let ds = mk("cxl-ds");
+    // Two timeline runs, side by side on the pool.
+    let jobs: Vec<SweepJob> = ["cxl-sr", "cxl-ds"]
+        .iter()
+        .map(|cfg_name| {
+            let mut cfg = SystemConfig::named(cfg_name, MediaKind::Znand);
+            cfg.total_ops = scale.ssd_ops;
+            cfg.ssd_scale();
+            cfg.timeline = true;
+            (spec("bfs"), cfg)
+        })
+        .collect();
+    let mut results = run_jobs(&jobs);
+    let ds = results.pop().unwrap();
+    let sr = results.pop().unwrap();
     let convert = |tl: &crate::sim::Timeline| -> Vec<(f64, f64)> {
         tl.series().iter().map(|&(t, v)| (ps_to_ns(t), v)).collect()
     };
@@ -496,9 +545,10 @@ pub struct Headline {
 /// both comparators support).
 pub fn headline(scale: Scale, print: bool) -> Headline {
     let ops = Some(scale.total_ops);
-    let uvm = run_suite("uvm", MediaKind::Ddr5, ops);
-    let cxl = run_suite("cxl", MediaKind::Ddr5, ops);
-    let smt = run_suite("cxl-smt", MediaKind::Ddr5, ops);
+    let mut suites = run_suites(&["uvm", "cxl", "cxl-smt"], MediaKind::Ddr5, ops);
+    let smt = suites.pop().unwrap();
+    let cxl = suites.pop().unwrap();
+    let uvm = suites.pop().unwrap();
     let res = Headline {
         cxl_over_uvm: overall_geomean(&uvm, &cxl),
         cxl_over_smt: overall_geomean(&smt, &cxl),

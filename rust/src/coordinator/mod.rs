@@ -14,5 +14,5 @@ pub mod system;
 
 pub use config::{MemStrategy, SystemConfig};
 pub use metrics::RunMetrics;
-pub use runner::{run_workload, RunResult};
+pub use runner::{par_map, run_suite, run_workload, thread_count, RunResult};
 pub use system::System;

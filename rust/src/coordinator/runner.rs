@@ -1,5 +1,17 @@
-//! Experiment runner: named-config × workload execution plus the
-//! aggregation helpers the figure benches share.
+//! Experiment runner: named-config × workload execution, the std-only
+//! parallel sweep executor, and the aggregation helpers the figure
+//! benches share.
+//!
+//! Every figure sweep is a bag of *independent* `System` runs (each owns
+//! its queue, RNG and metrics), so the sweep layer fans them across cores
+//! with [`par_map`]: scoped threads pulling job indices from one atomic
+//! counter (work stealing — a slow UVM cell never blocks the cheap DRAM
+//! cells behind it), results re-sorted into submission order so every
+//! caller sees exactly the serial path's deterministic table order.
+//! Worker count comes from `CXL_GPU_THREADS` (unset/0 → all cores, 1 →
+//! fully serial in the calling thread).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::media::MediaKind;
 use crate::workloads::table1b::{spec, ALL_WORKLOADS};
@@ -8,6 +20,63 @@ use crate::workloads::{Category, WorkloadSpec};
 use super::config::SystemConfig;
 use super::metrics::RunMetrics;
 use super::system::System;
+
+/// Worker count for [`par_map`]: the `CXL_GPU_THREADS` override, else
+/// every available core. `CXL_GPU_THREADS=1` forces the serial path
+/// (useful for profiling and for apples-to-apples determinism checks).
+pub fn thread_count() -> usize {
+    match std::env::var("CXL_GPU_THREADS").ok().and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(n) if n > 0 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Map `f` over `items` on a scoped worker pool, returning results in
+/// input order.
+///
+/// Scheduling is a shared atomic cursor: each worker claims the next
+/// unstarted index, so load imbalance self-corrects without any queue or
+/// channel machinery. Results carry their index and are sorted back, so
+/// the output is bit-identical to the serial `items.iter().map(f)` path
+/// (each job must be independent of the others — true for `System` runs,
+/// which share no mutable state).
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let workers = thread_count().min(items.len());
+    if workers <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut tagged: Vec<(usize, R)> = Vec::with_capacity(items.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        out.push((i, f(i, &items[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            tagged.extend(h.join().expect("parallel sweep worker panicked"));
+        }
+    });
+    tagged.sort_unstable_by_key(|&(i, _)| i);
+    tagged.into_iter().map(|(_, r)| r).collect()
+}
 
 /// One (workload, config) run result.
 #[derive(Debug, Clone)]
@@ -36,19 +105,54 @@ pub fn run_with(w: &'static WorkloadSpec, cfg: &SystemConfig) -> RunResult {
     RunResult { workload: w.name, config: cfg.name.clone(), media: cfg.media, metrics }
 }
 
-/// Run every Table 1b workload under a config; returns results in table
-/// order.
+/// A prepared (workload, config) cell for the parallel executor.
+pub type SweepJob = (&'static WorkloadSpec, SystemConfig);
+
+/// Run a batch of prepared (workload, config) cells across cores; results
+/// come back in `jobs` order.
+pub fn run_jobs(jobs: &[SweepJob]) -> Vec<RunResult> {
+    par_map(jobs, |_, job| run_with(job.0, &job.1))
+}
+
+/// Run every Table 1b workload under a config on the parallel executor;
+/// returns results in table order.
 pub fn run_suite(config_name: &str, media: MediaKind, shrink: Option<usize>) -> Vec<RunResult> {
-    ALL_WORKLOADS
+    let jobs: Vec<SweepJob> = ALL_WORKLOADS
         .iter()
         .map(|w| {
             let mut cfg = SystemConfig::named(config_name, media);
             if let Some(ops) = shrink {
                 cfg.total_ops = ops;
             }
-            run_with(w, &cfg)
+            (w, cfg)
         })
-        .collect()
+        .collect();
+    run_jobs(&jobs)
+}
+
+/// Run several full suites as ONE flat parallel batch (a figure's whole
+/// grid saturates the pool instead of syncing per config). Returns one
+/// `Vec<RunResult>` per config name, each in table order.
+pub fn run_suites(
+    config_names: &[&str],
+    media: MediaKind,
+    shrink: Option<usize>,
+) -> Vec<Vec<RunResult>> {
+    let jobs: Vec<SweepJob> = config_names
+        .iter()
+        .flat_map(|name| {
+            ALL_WORKLOADS.iter().map(move |w| {
+                let mut cfg = SystemConfig::named(name, media);
+                if let Some(ops) = shrink {
+                    cfg.total_ops = ops;
+                }
+                (w, cfg)
+            })
+        })
+        .collect();
+    let flat = run_jobs(&jobs);
+    let n = ALL_WORKLOADS.len();
+    (0..config_names.len()).map(|i| flat[i * n..(i + 1) * n].to_vec()).collect()
 }
 
 /// Geometric mean of normalized exec times across a category.
@@ -87,7 +191,7 @@ mod tests {
     use super::*;
 
     fn small(config: &str, media: MediaKind) -> Vec<RunResult> {
-        ALL_WORKLOADS
+        let jobs: Vec<SweepJob> = ALL_WORKLOADS
             .iter()
             .take(2)
             .map(|w| {
@@ -100,9 +204,10 @@ mod tests {
                 } else {
                     cfg.local_bytes = cfg.footprint;
                 }
-                run_with(w, &cfg)
+                (w, cfg)
             })
-            .collect()
+            .collect();
+        run_jobs(&jobs)
     }
 
     #[test]
@@ -123,5 +228,47 @@ mod tests {
         assert!(g >= 1.0);
         let cg = category_geomean(&cxl, &base, Category::ComputeIntensive);
         assert!(cg > 0.0);
+    }
+
+    #[test]
+    fn par_map_keeps_input_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = par_map(&items, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * 3 + 1
+        });
+        assert_eq!(out.len(), items.len());
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u64 * 3 + 1);
+        }
+    }
+
+    #[test]
+    fn par_map_handles_empty_and_single() {
+        let none: Vec<u32> = Vec::new();
+        assert!(par_map(&none, |_, x| *x).is_empty());
+        assert_eq!(par_map(&[7u32], |_, x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn suite_order_matches_table() {
+        let r = run_suite("cxl", MediaKind::Ddr5, Some(2_000));
+        assert_eq!(r.len(), ALL_WORKLOADS.len());
+        for (res, w) in r.iter().zip(ALL_WORKLOADS) {
+            assert_eq!(res.workload, w.name);
+        }
+    }
+
+    #[test]
+    fn run_suites_chunks_in_config_order() {
+        let suites = run_suites(&["gpu-dram", "cxl"], MediaKind::Ddr5, Some(2_000));
+        assert_eq!(suites.len(), 2);
+        assert!(suites[0].iter().all(|r| r.config == "gpu-dram"));
+        assert!(suites[1].iter().all(|r| r.config == "cxl"));
+        for s in &suites {
+            for (res, w) in s.iter().zip(ALL_WORKLOADS) {
+                assert_eq!(res.workload, w.name);
+            }
+        }
     }
 }

@@ -58,6 +58,12 @@ pub struct System {
     /// polling: a retry loop here melts the event queue on multi-second
     /// UVM runs).
     mshr_blocked: Vec<usize>,
+    /// Scratch for draining LLC fill waiters ([`Llc::fill_into`]): one
+    /// buffer reused across every fill instead of a `Vec` per event.
+    fill_scratch: Vec<u64>,
+    /// Second buffer for the MSHR wake path; swapped with `mshr_blocked`
+    /// so neither side's capacity is ever dropped.
+    wake_scratch: Vec<usize>,
     pub metrics: RunMetrics,
 }
 
@@ -134,6 +140,8 @@ impl System {
             q: EventQueue::new(),
             active_warps: warps.len(),
             mshr_blocked: Vec::new(),
+            fill_scratch: Vec::new(),
+            wake_scratch: Vec::new(),
             warps,
             llc: Llc::new(cfg.llc),
             memmap,
@@ -162,16 +170,29 @@ impl System {
                     self.complete_load(now, warp);
                 }
                 Ev::Fill { line, issued } => {
-                    let waiters = self.llc.fill(line, now);
+                    // Waiters drain into the reusable scratch buffer —
+                    // the old per-fill `Vec` was the hot path's dominant
+                    // allocation. Index loops keep the borrows disjoint
+                    // from `complete_load`/`push_at` (which never touch
+                    // the scratch buffers).
+                    self.llc.fill_into(line, now, &mut self.fill_scratch);
                     self.metrics.load_latency.add((now - issued) as f64);
-                    for req in waiters {
+                    for i in 0..self.fill_scratch.len() {
+                        let req = self.fill_scratch[i];
                         if req != STORE_REQ {
                             self.complete_load(now, (req - 1) as usize);
                         }
                     }
-                    // An MSHR just freed: wake warps blocked on exhaustion.
-                    for w in std::mem::take(&mut self.mshr_blocked) {
-                        self.q.push_at(now, Ev::Resume(w));
+                    // An MSHR just freed: wake warps blocked on
+                    // exhaustion. Swapping with the second scratch buffer
+                    // preserves both capacities (no `mem::take` churn).
+                    if !self.mshr_blocked.is_empty() {
+                        std::mem::swap(&mut self.mshr_blocked, &mut self.wake_scratch);
+                        for i in 0..self.wake_scratch.len() {
+                            let w = self.wake_scratch[i];
+                            self.q.push_at(now, Ev::Resume(w));
+                        }
+                        self.wake_scratch.clear();
                     }
                 }
                 Ev::FlushTick => {
@@ -292,7 +313,10 @@ impl System {
                         AccessResult::Hit { done } => {
                             self.warps[w].pop();
                             self.warps[w].stats.stores += 1;
-                            now = now.max(done - self.cfg.llc.hit_lat);
+                            // saturating: u64 time must clamp, not wrap,
+                            // if `done` ever lands before `hit_lat` has
+                            // elapsed (zero-/low-latency LLC configs).
+                            now = now.max(done.saturating_sub(self.cfg.llc.hit_lat));
                         }
                         AccessResult::MergedMiss => {
                             self.warps[w].pop();

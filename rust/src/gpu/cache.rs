@@ -5,10 +5,15 @@
 //! Dirty victims produce writebacks that the memory system must absorb —
 //! the path that makes SSD tail latency visible to reads (Fig. 9e) and
 //! that the DS engine exists to decouple.
-
-use std::collections::HashMap;
+//!
+//! Hot-path discipline (see DESIGN.md §7): the steady state allocates
+//! nothing. Ways live in one flat array (set-major), MSHR waiters are
+//! intrusive chains over a free-listed arena instead of a `Vec` per miss,
+//! fills drain into a caller-owned scratch buffer ([`Llc::fill_into`]),
+//! and the MSHR map uses the deterministic Fx hasher.
 
 use crate::sim::{Time, NS};
+use crate::util::hash::FxHashMap;
 
 use super::{line_of, LINE};
 
@@ -61,14 +66,67 @@ pub enum AccessResult {
     MshrFull { free_at: Time },
 }
 
+/// Sentinel for "no next waiter" in the arena chains.
+const NIL: u32 = u32::MAX;
+
+/// One MSHR's waiter chain: head/tail indices into the arena. Appending
+/// at the tail and draining from the head preserves request order, which
+/// is part of the deterministic-wakeup contract.
+#[derive(Debug, Clone, Copy)]
+struct WaiterChain {
+    head: u32,
+    tail: u32,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct WaiterNode {
+    req: u64,
+    next: u32,
+}
+
+/// Free-listed arena of waiter nodes: misses and merges reuse slots freed
+/// by earlier fills, so the steady state never touches the allocator.
+#[derive(Debug)]
+struct WaiterArena {
+    nodes: Vec<WaiterNode>,
+    free_head: u32,
+}
+
+impl WaiterArena {
+    fn new() -> WaiterArena {
+        WaiterArena { nodes: Vec::new(), free_head: NIL }
+    }
+
+    fn alloc(&mut self, req: u64) -> u32 {
+        if self.free_head != NIL {
+            let i = self.free_head;
+            self.free_head = self.nodes[i as usize].next;
+            self.nodes[i as usize] = WaiterNode { req, next: NIL };
+            i
+        } else {
+            self.nodes.push(WaiterNode { req, next: NIL });
+            (self.nodes.len() - 1) as u32
+        }
+    }
+
+    fn free(&mut self, i: u32) {
+        self.nodes[i as usize].next = self.free_head;
+        self.free_head = i;
+    }
+}
+
 /// The last-level cache.
 #[derive(Debug)]
 pub struct Llc {
     cfg: LlcConfig,
-    sets: Vec<Vec<WayState>>,
+    num_sets: usize,
+    /// Flat set-major way array (`set * cfg.ways + way`): one allocation,
+    /// cache-friendly scans.
+    ways: Vec<WayState>,
     tick: u64,
-    /// line -> waiters (request ids) for in-flight fills.
-    mshr: HashMap<u64, Vec<u64>>,
+    /// line -> waiter chain for in-flight fills.
+    mshr: FxHashMap<u64, WaiterChain>,
+    waiters: WaiterArena,
     /// Earliest time an MSHR frees (conservative bookkeeping for retry).
     mshr_free_hint: Time,
     pub stats: LlcStats,
@@ -96,38 +154,50 @@ impl LlcStats {
 
 impl Llc {
     pub fn new(cfg: LlcConfig) -> Llc {
-        let sets = cfg.sets();
-        assert!(sets.is_power_of_two(), "set count must be a power of two");
+        let num_sets = cfg.sets();
+        assert!(num_sets.is_power_of_two(), "set count must be a power of two");
         Llc {
             cfg,
-            sets: vec![vec![WayState::default(); cfg.ways]; sets],
+            num_sets,
+            ways: vec![WayState::default(); num_sets * cfg.ways],
             tick: 0,
-            mshr: HashMap::new(),
+            mshr: FxHashMap::default(),
+            waiters: WaiterArena::new(),
             mshr_free_hint: 0,
             stats: LlcStats::default(),
         }
     }
 
     fn set_and_tag(&self, line: u64) -> (usize, u64) {
-        let idx = (line / LINE) as usize & (self.sets.len() - 1);
+        let idx = (line / LINE) as usize & (self.num_sets - 1);
         (idx, line)
+    }
+
+    #[inline]
+    fn set_mut(&mut self, set_idx: usize) -> &mut [WayState] {
+        let w = self.cfg.ways;
+        &mut self.ways[set_idx * w..(set_idx + 1) * w]
     }
 
     /// Look up `addr` at time `now`. For writes, a hit marks the line
     /// dirty; a write miss write-allocates (fill then dirty).
     pub fn access(&mut self, now: Time, addr: u64, is_write: bool, req_id: u64) -> AccessResult {
         self.tick += 1;
+        let tick = self.tick;
         let line = line_of(addr);
         let (set_idx, tag) = self.set_and_tag(line);
 
         // In-flight? Must be checked before the hit scan: lines are
         // installed at allocate time but their data arrives with the
         // fill, so accesses to a pending line merge into its MSHR.
-        if let Some(waiters) = self.mshr.get_mut(&line) {
-            waiters.push(req_id);
+        let ways = self.cfg.ways;
+        if let Some(chain) = self.mshr.get_mut(&line) {
+            let node = self.waiters.alloc(req_id);
+            self.waiters.nodes[chain.tail as usize].next = node;
+            chain.tail = node;
             self.stats.merged += 1;
             if is_write {
-                for way in self.sets[set_idx].iter_mut() {
+                for way in &mut self.ways[set_idx * ways..(set_idx + 1) * ways] {
                     if way.valid && way.tag == tag {
                         way.dirty = true;
                     }
@@ -136,11 +206,10 @@ impl Llc {
             return AccessResult::MergedMiss;
         }
 
-        let set = &mut self.sets[set_idx];
-        // Hit?
-        for way in set.iter_mut() {
+        // Hit? (field-level slice borrow so stats stay accessible)
+        for way in &mut self.ways[set_idx * ways..(set_idx + 1) * ways] {
             if way.valid && way.tag == tag {
-                way.last_use = self.tick;
+                way.last_use = tick;
                 if is_write {
                     way.dirty = true;
                 }
@@ -165,7 +234,8 @@ impl Llc {
             let hint = self.mshr_free_hint.max(now + self.cfg.hit_lat);
             return AccessResult::MshrFull { free_at: hint };
         }
-        self.mshr.insert(line, vec![req_id]);
+        let node = self.waiters.alloc(req_id);
+        self.mshr.insert(line, WaiterChain { head: node, tail: node });
         self.stats.misses += 1;
 
         // Victim selection happens now so the writeback can start with the
@@ -178,7 +248,7 @@ impl Llc {
     /// dirty victim's line address, if any.
     fn evict_for(&mut self, set_idx: usize, tag: u64, incoming_dirty: bool) -> Option<u64> {
         let tick = self.tick;
-        let set = &mut self.sets[set_idx];
+        let set = self.set_mut(set_idx);
         // Prefer an invalid way.
         let way_idx = if let Some(i) = set.iter().position(|w| !w.valid) {
             i
@@ -198,11 +268,30 @@ impl Llc {
         wb
     }
 
-    /// A fill returned from memory: release the MSHR and return the
-    /// waiting request ids (the line was installed at `access` time).
-    pub fn fill(&mut self, line: u64, fill_done: Time) -> Vec<u64> {
+    /// A fill returned from memory: release the MSHR and append the
+    /// waiting request ids, in arrival order, to `out` (cleared first).
+    /// The line itself was installed at `access` time. Waiter nodes go
+    /// straight back to the free list — no allocation either way.
+    pub fn fill_into(&mut self, line: u64, fill_done: Time, out: &mut Vec<u64>) {
+        out.clear();
         self.mshr_free_hint = self.mshr_free_hint.max(fill_done);
-        self.mshr.remove(&line_of(line)).unwrap_or_default()
+        if let Some(chain) = self.mshr.remove(&line_of(line)) {
+            let mut i = chain.head;
+            while i != NIL {
+                let node = self.waiters.nodes[i as usize];
+                out.push(node.req);
+                self.waiters.free(i);
+                i = node.next;
+            }
+        }
+    }
+
+    /// Allocating convenience wrapper around [`Llc::fill_into`] for tests
+    /// and cold paths.
+    pub fn fill(&mut self, line: u64, fill_done: Time) -> Vec<u64> {
+        let mut out = Vec::new();
+        self.fill_into(line, fill_done, &mut out);
+        out
     }
 
     pub fn inflight(&self) -> usize {
@@ -211,7 +300,7 @@ impl Llc {
 
     /// Number of valid lines (for occupancy assertions).
     pub fn resident_lines(&self) -> usize {
-        self.sets.iter().flatten().filter(|w| w.valid).count()
+        self.ways.iter().filter(|w| w.valid).count()
     }
 }
 
@@ -321,5 +410,34 @@ mod tests {
         assert_eq!(c.stats.hits, 2);
         assert_eq!(c.stats.misses, 1);
         assert!((c.stats.hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn waiter_arena_recycles_nodes() {
+        let mut c = llc();
+        let mut scratch = Vec::new();
+        // Churn misses + merges through fills: the arena must stop
+        // growing once the first generation of nodes is freed.
+        for round in 0..50u64 {
+            let addr = round * 0x10000;
+            c.access(0, addr, false, 1);
+            c.access(0, addr + 8, false, 2);
+            c.access(0, addr + 16, false, 3);
+            c.fill_into(addr, 10, &mut scratch);
+            assert_eq!(scratch, vec![1, 2, 3], "round {round}: waiter order");
+        }
+        assert!(
+            c.waiters.nodes.len() <= 3,
+            "arena grew to {} nodes despite recycling",
+            c.waiters.nodes.len()
+        );
+    }
+
+    #[test]
+    fn fill_into_clears_stale_scratch() {
+        let mut c = llc();
+        let mut scratch = vec![42, 43];
+        c.fill_into(0x5000, 10, &mut scratch); // no such MSHR
+        assert!(scratch.is_empty());
     }
 }

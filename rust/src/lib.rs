@@ -26,6 +26,10 @@ pub mod cxl;
 pub mod gpu;
 pub mod media;
 pub mod rootcomplex;
+/// PJRT artifact execution. Needs the vendored `xla` closure (plus
+/// `anyhow`), which offline builds don't ship — hence feature-gated; the
+/// simulator and coordinator never depend on it.
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod util;

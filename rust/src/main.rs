@@ -171,6 +171,7 @@ fn cmd_experiments(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_execute(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
     let dir = args.get_or("artifacts", "artifacts");
     let workload = args.get_or("workload", "vadd");
@@ -181,6 +182,11 @@ fn cmd_execute(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
         out.outputs, out.checksum, out.elements
     );
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_execute(_args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
+    Err("this build has no PJRT runtime; rebuild with `--features pjrt` to execute artifacts".into())
 }
 
 fn cmd_list() {

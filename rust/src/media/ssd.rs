@@ -8,9 +8,8 @@
 //! wear-leveling for PRAM) produce tail latencies. All three behaviours
 //! are modeled here because SR and DS exist to hide exactly them.
 
-use std::collections::HashMap;
-
 use crate::sim::{transfer_time, Time, MS, NS, US};
+use crate::util::hash::FxHashMap;
 use crate::util::prng::Pcg32;
 
 use super::{MediaKind, MediaStats};
@@ -129,7 +128,7 @@ impl SsdParams {
 #[derive(Debug, Clone)]
 struct LruSet {
     cap: usize,
-    map: HashMap<u64, usize>, // frame -> arena slot
+    map: FxHashMap<u64, usize>, // frame -> arena slot
     keys: Vec<u64>,
     prev: Vec<usize>,
     next: Vec<usize>,
@@ -144,7 +143,7 @@ impl LruSet {
     fn new(cap: usize) -> LruSet {
         LruSet {
             cap: cap.max(1),
-            map: HashMap::new(),
+            map: FxHashMap::default(),
             keys: Vec::new(),
             prev: Vec::new(),
             next: Vec::new(),
@@ -235,7 +234,7 @@ pub struct SsdModel {
     /// In-flight prefetches: frame -> completion time, plus a min-heap
     /// of (completion, frame) so settling is O(log n) per event instead
     /// of a full-map scan.
-    inflight: HashMap<u64, Time>,
+    inflight: FxHashMap<u64, Time>,
     inflight_by_time: std::collections::BinaryHeap<std::cmp::Reverse<(Time, u64)>>,
     /// Backend channel availability.
     chan_free: Vec<Time>,
@@ -260,7 +259,7 @@ impl SsdModel {
         SsdModel {
             params,
             cache: LruSet::new(frames),
-            inflight: HashMap::new(),
+            inflight: FxHashMap::default(),
             inflight_by_time: std::collections::BinaryHeap::new(),
             chan_free: vec![0; params.channels],
             rr: 0,

@@ -1,0 +1,127 @@
+//! Deterministic fast hashing for simulator-internal maps.
+//!
+//! `std`'s default SipHash shows up prominently in the simulator profile:
+//! every LLC access probes the MSHR map, every UVM/GDS touch probes the
+//! page table, every SSD cache lookup probes the frame map. Those keys are
+//! line/page/frame numbers — not attacker-controlled input — so DoS
+//! resistance buys nothing, and SipHash's per-process random seed is
+//! actively wrong for a simulator that promises bit-reproducible runs.
+//! This is the rustc-internal multiplicative ("Fx") hash: one rotate, one
+//! xor, one multiply per word, identical on every run.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Word-at-a-time multiplicative hasher.
+#[derive(Debug, Clone, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+/// Knuth-style golden-ratio multiplier (as used by rustc's FxHash).
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        // Fold the (well-mixed) high half into the low half: hashbrown
+        // indexes buckets by the LOW hash bits, and a bare multiplicative
+        // hash of 64 B-aligned keys (LLC line addresses) leaves the low 6
+        // bits constant — every key would probe one cluster.
+        self.hash ^ (self.hash >> 32)
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add(n as u64);
+    }
+    #[inline]
+    fn write_u16(&mut self, n: u16) {
+        self.add(n as u64);
+    }
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+    #[inline]
+    fn write_u128(&mut self, n: u128) {
+        self.add(n as u64);
+        self.add((n >> 64) as u64);
+    }
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+/// Seed-free builder: every map hashes identically on every run.
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// `HashMap` with the deterministic fast hasher (`FxHashMap::default()`).
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+/// `HashSet` with the deterministic fast hasher.
+pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hash::{BuildHasher, Hash};
+
+    fn hash_one<T: Hash>(v: &T) -> u64 {
+        let mut h = FxBuildHasher::default().build_hasher();
+        v.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn map_works_like_std() {
+        let mut m: FxHashMap<u64, u64> = FxHashMap::default();
+        for i in 0..1000u64 {
+            m.insert(i * 64, i);
+        }
+        assert_eq!(m.len(), 1000);
+        for i in 0..1000u64 {
+            assert_eq!(m.get(&(i * 64)), Some(&i));
+        }
+        assert_eq!(m.remove(&(999 * 64)), Some(999));
+        assert!(m.get(&(999 * 64)).is_none());
+    }
+
+    #[test]
+    fn hashing_is_deterministic_and_spreads() {
+        assert_eq!(hash_one(&0xDEAD_BEEFu64), hash_one(&0xDEAD_BEEFu64));
+        // Sequential line addresses must not collapse to one bucket.
+        let mut low_bits = FxHashSet::default();
+        for i in 0..64u64 {
+            low_bits.insert(hash_one(&(i * 64)) >> 57);
+        }
+        assert!(low_bits.len() > 16, "only {} distinct top-7-bit values", low_bits.len());
+    }
+
+    #[test]
+    fn byte_slices_hash_consistently() {
+        assert_eq!(hash_one(&"abcdefghij"), hash_one(&"abcdefghij"));
+        assert_ne!(hash_one(&"abcdefghij"), hash_one(&"abcdefghik"));
+    }
+}

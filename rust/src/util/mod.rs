@@ -5,10 +5,12 @@
 //! crates.io are implemented here from scratch: a deterministic PRNG
 //! ([`prng`]), summary statistics ([`stats`]), a TOML-subset config parser
 //! ([`toml`]), a tiny CLI argument parser ([`cli`]), a micro-benchmark
-//! harness ([`bench`]) and a property-test runner ([`prop`]).
+//! harness ([`bench`]), a property-test runner ([`prop`]) and a
+//! deterministic fast hasher for hot simulator maps ([`hash`]).
 
 pub mod bench;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prng;
 pub mod prop;

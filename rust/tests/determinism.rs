@@ -1,0 +1,104 @@
+//! Determinism regression: the engine rebuild (bucketed event queue,
+//! arena waiter chains, parallel sweep runner) must keep runs
+//! bit-reproducible. Each scenario runs twice back to back and once
+//! through the parallel runner; every `RunMetrics` fingerprint must be
+//! identical — this guards both the queue swap and the threaded runner.
+
+use cxl_gpu::coordinator::config::SystemConfig;
+use cxl_gpu::coordinator::runner::{run_jobs, run_suite, run_with, SweepJob};
+use cxl_gpu::coordinator::system::System;
+use cxl_gpu::coordinator::RunMetrics;
+use cxl_gpu::media::MediaKind;
+use cxl_gpu::workloads::table1b::{spec, ALL_WORKLOADS};
+
+/// Everything deterministic about a run (wall-clock excluded, of course).
+/// Latency summaries are compared through their exact f64 bits: the same
+/// event order must produce the same accumulator states.
+fn fingerprint(m: &RunMetrics) -> Vec<u64> {
+    vec![
+        m.exec_time,
+        m.events,
+        m.expander_loads,
+        m.expander_stores,
+        m.ds_intercepts,
+        m.ep_cache_hits,
+        m.media_reads,
+        m.faults,
+        m.gc_episodes,
+        m.sr_issued,
+        m.llc.hits,
+        m.llc.misses,
+        m.llc.merged,
+        m.llc.writebacks,
+        m.load_latency.count(),
+        m.load_latency.mean().to_bits(),
+        m.load_latency.max().to_bits(),
+        m.store_latency.count(),
+        m.store_latency.mean().to_bits(),
+    ]
+}
+
+fn small(name: &str, media: MediaKind) -> SystemConfig {
+    let mut c = SystemConfig::named(name, media);
+    c.total_ops = 6_000;
+    c.ssd_scale();
+    c
+}
+
+#[test]
+fn repeated_runs_are_bit_identical() {
+    for (name, media, wl) in
+        [("cxl-sr", MediaKind::Znand, "bfs"), ("uvm", MediaKind::Ddr5, "vadd")]
+    {
+        let cfg = small(name, media);
+        let a = System::new(spec(wl), &cfg).run();
+        let b = System::new(spec(wl), &cfg).run();
+        assert_eq!(fingerprint(&a), fingerprint(&b), "{name}/{wl} diverged across runs");
+    }
+}
+
+#[test]
+fn parallel_runner_matches_direct_runs() {
+    // The same (workload, config) cells, once executed directly in this
+    // thread and once through the work-stealing pool: identical metrics,
+    // identical order.
+    let mk = |name: &str, media: MediaKind, wl: &str| -> SweepJob {
+        (spec(wl), small(name, media))
+    };
+    let jobs = vec![
+        mk("cxl-sr", MediaKind::Znand, "bfs"),
+        mk("uvm", MediaKind::Ddr5, "vadd"),
+        mk("cxl-ds", MediaKind::Znand, "sort"),
+        mk("cxl", MediaKind::Ddr5, "gnn"),
+    ];
+    let direct: Vec<_> = jobs.iter().map(|j| run_with(j.0, &j.1)).collect();
+    let pooled = run_jobs(&jobs);
+    assert_eq!(direct.len(), pooled.len());
+    for (d, p) in direct.iter().zip(&pooled) {
+        assert_eq!(d.workload, p.workload, "parallel runner reordered results");
+        assert_eq!(d.config, p.config);
+        assert_eq!(
+            fingerprint(&d.metrics),
+            fingerprint(&p.metrics),
+            "{}/{} diverged under the parallel runner",
+            d.workload,
+            d.config
+        );
+    }
+}
+
+#[test]
+fn suite_is_deterministic_and_table_ordered() {
+    let a = run_suite("cxl", MediaKind::Ddr5, Some(3_000));
+    let b = run_suite("cxl", MediaKind::Ddr5, Some(3_000));
+    assert_eq!(a.len(), ALL_WORKLOADS.len());
+    for ((ra, rb), w) in a.iter().zip(&b).zip(ALL_WORKLOADS) {
+        assert_eq!(ra.workload, w.name, "suite order must match Table 1b");
+        assert_eq!(
+            fingerprint(&ra.metrics),
+            fingerprint(&rb.metrics),
+            "{} diverged across suite runs",
+            w.name
+        );
+    }
+}

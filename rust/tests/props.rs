@@ -31,6 +31,76 @@ fn prop_event_queue_pops_in_nondecreasing_time() {
     });
 }
 
+/// The bucketed calendar queue must be observationally identical to a
+/// plain (time, seq)-keyed min-heap: same pop order under random
+/// interleaved push/pop (ties broken by insertion sequence), same `now`,
+/// same pushed/popped counters. Delays are drawn from three regimes so
+/// cases exercise the active bucket (0), the near-horizon ring, and the
+/// overflow heap + migration (far future).
+#[test]
+fn prop_bucketed_queue_matches_reference_heap() {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    check("queue-vs-heap", 0xCA1E, 120, |g| {
+        let mut q = EventQueue::new();
+        let mut model: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let mut now = 0u64;
+        let ops = g.usize("ops", 1, 300);
+        for i in 0..ops {
+            let push = g.bool(&format!("push{i}"), 0.6);
+            if push || model.is_empty() {
+                let regime = g.u64(&format!("regime{i}"), 0, 9);
+                let delay = match regime {
+                    0..=1 => 0,                                          // active bucket
+                    2..=7 => g.u64(&format!("near{i}"), 1, 60_000),      // ring
+                    _ => g.u64(&format!("far{i}"), 60_000, 300_000_000), // overflow
+                };
+                // A burst of same-time pushes stresses tie-breaking.
+                let burst = g.usize(&format!("burst{i}"), 1, 3);
+                for _ in 0..burst {
+                    q.push_at(now + delay, seq);
+                    model.push(Reverse((now + delay, seq)));
+                    seq += 1;
+                }
+            } else {
+                let got = q.pop();
+                let want = model.pop().map(|Reverse((t, s))| (t, s));
+                if got != want {
+                    return Err(format!("pop diverged: got {got:?}, want {want:?}"));
+                }
+                if let Some((t, _)) = got {
+                    now = t;
+                }
+                if q.now() != now {
+                    return Err(format!("now diverged: {} vs {}", q.now(), now));
+                }
+            }
+            if q.len() != model.len() {
+                return Err(format!("len diverged: {} vs {}", q.len(), model.len()));
+            }
+        }
+        // Drain: the tail order must match exactly too.
+        while let Some(Reverse((t, s))) = model.pop() {
+            let got = q.pop();
+            if got != Some((t, s)) {
+                return Err(format!("drain diverged: got {got:?}, want ({t}, {s})"));
+            }
+        }
+        if q.pop().is_some() {
+            return Err("queue held events the reference did not".into());
+        }
+        if q.pushed() != seq || q.popped() != seq {
+            return Err(format!(
+                "counters diverged: pushed {} popped {} expected {seq}",
+                q.pushed(),
+                q.popped()
+            ));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_hdm_decode_is_total_and_consistent_over_programmed_space() {
     check("hdm-total", 0xD0, 100, |g| {

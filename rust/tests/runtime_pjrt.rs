@@ -1,5 +1,8 @@
 //! Integration: the PJRT runtime loads and executes every AOT artifact.
 //! Skips (with a message) when `make artifacts` has not been run.
+//! Compiled only with `--features pjrt` (the runtime needs the vendored
+//! `xla` closure, absent from offline builds).
+#![cfg(feature = "pjrt")]
 
 use cxl_gpu::runtime::Runtime;
 
