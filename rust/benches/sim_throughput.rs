@@ -33,7 +33,10 @@ fn main() {
         ("cxl-ds", MediaKind::Znand, "bfs"),
     ] {
         let mut cfg = SystemConfig::named(cfg_name, media);
-        cfg.total_ops = 300_000;
+        // 10x the pre-streaming budget: op streams freed the O(total_ops)
+        // trace memory, so the throughput probe runs at long-scenario
+        // scale (the floor is per-event and scale-independent).
+        cfg.total_ops = 3_000_000;
         if media.is_ssd() {
             cfg.ssd_scale();
         }

@@ -1,9 +1,10 @@
 //! E2 — Table 1b: regenerate the workload instruction mixes and check
-//! them against the paper's columns; bench trace generation throughput.
+//! them against the paper's columns; bench trace generation throughput,
+//! streamed vs materialized.
 use cxl_gpu::coordinator::experiments;
 use cxl_gpu::util::bench::Bench;
 use cxl_gpu::workloads::table1b::spec;
-use cxl_gpu::workloads::{generate, TraceParams};
+use cxl_gpu::workloads::{collect_trace, OpStream, TraceParams};
 
 fn main() {
     let rows = experiments::table1b(true);
@@ -13,9 +14,20 @@ fn main() {
         assert!((compute - s.compute_ratio).abs() < 0.03, "{name}: compute ratio drift");
         assert!((load - s.load_ratio).abs() < 0.04, "{name}: load ratio drift");
     }
+    // Streamed generation at the 10x budget vs the old eager path at the
+    // old budget: the stream never allocates per-op, so it also serves as
+    // the allocation-free reference number.
+    let p10 = TraceParams { total_ops: 1_200_000, ..Default::default() };
+    Bench::new("workloads/stream(vadd,1.2M)").iters(1, 5, 3).run(|| {
+        for w in 0..p10.warps {
+            for op in OpStream::new(spec("vadd"), &p10, w) {
+                std::hint::black_box(op);
+            }
+        }
+    });
     let p = TraceParams { total_ops: 120_000, ..Default::default() };
-    Bench::new("workloads/generate(vadd,120k)").iters(1, 5, 3).run(|| {
-        std::hint::black_box(generate(spec("vadd"), &p));
+    Bench::new("workloads/collect_trace(vadd,120k)").iters(1, 5, 3).run(|| {
+        std::hint::black_box(collect_trace(spec("vadd"), &p));
     });
     println!("table1b bench OK");
 }

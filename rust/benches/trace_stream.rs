@@ -1,0 +1,143 @@
+//! §Perf — scenario scaling under streamed traces: events per
+//! wall-second and resident trace memory vs `total_ops`.
+//!
+//! Before op streaming, `workloads::generate` materialized every dynamic
+//! instruction up front, so a scenario's memory grew linearly with its
+//! op budget (x sweep threads). With lazy `OpStream`s the per-scenario
+//! trace state is O(warps); this bench sweeps the op budget over 1.5
+//! decades (0.3M..10M), records throughput plus both memory models, and
+//! asserts that peak RSS no longer scales with `total_ops`.
+//!
+//! Emits `BENCH_trace_stream.json` alongside `BENCH_sim_throughput.json`.
+use std::collections::BTreeMap;
+
+use cxl_gpu::coordinator::config::SystemConfig;
+use cxl_gpu::coordinator::system::System;
+use cxl_gpu::gpu::Op;
+use cxl_gpu::media::MediaKind;
+use cxl_gpu::util::bench::Table;
+use cxl_gpu::util::json::Json;
+use cxl_gpu::workloads::table1b::spec;
+use cxl_gpu::workloads::{OpStream, TraceParams};
+
+/// Same per-event floor as `sim_throughput` — scaling the scenario up
+/// must not cost per-event throughput.
+const FLOOR_EVENTS_PER_SEC: f64 = 2.0e6;
+
+/// Peak-RSS growth allowed across the whole sweep. The 10M-op run would
+/// have materialized ≥160 MB of trace (10M x 16 B ops) under the old
+/// generator; streamed, the growth is a few MB of allocator noise.
+const MAX_RSS_GROWTH_KB: u64 = 40 * 1024;
+
+/// `VmHWM` (peak resident set) in kB from /proc/self/status; None off
+/// Linux or in sandboxes that hide procfs.
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+fn main() {
+    let budgets: [usize; 4] = [300_000, 1_000_000, 3_000_000, 10_000_000];
+    let wl = spec("vadd");
+
+    // Warm up allocator + code paths at the smallest budget so the HWM
+    // baseline includes every fixed cost (LLC arrays, queue ring, maps).
+    let mut warm = SystemConfig::named("cxl", MediaKind::Ddr5);
+    warm.total_ops = budgets[0];
+    System::new(wl, &warm).run();
+    let rss_base_kb = peak_rss_kb();
+
+    let mut t = Table::new(
+        "scenario scaling — streamed traces (cxl/vadd/ddr5)",
+        &["total_ops", "events", "M events/s", "stream state", "materialized would-be", "peak RSS"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut worst = f64::INFINITY;
+    let mut last_rss_kb = rss_base_kb;
+    for &ops in &budgets {
+        let mut cfg = SystemConfig::named("cxl", MediaKind::Ddr5);
+        cfg.total_ops = ops;
+        let p = TraceParams {
+            footprint: cfg.footprint,
+            warps: cfg.warps,
+            total_ops: cfg.total_ops,
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        // O(warps) side of the memory model: the full resident trace
+        // state of a streamed scenario...
+        let stream_bytes: usize =
+            (0..cfg.warps).map(|w| OpStream::new(wl, &p, w).state_bytes()).sum();
+        // ...vs what the old eager generator would have kept resident.
+        let materialized_bytes = ops * std::mem::size_of::<Op>()
+            + cfg.warps * std::mem::size_of::<Vec<Op>>();
+
+        let m = System::new(wl, &cfg).run();
+        let eps = m.events_per_sec();
+        worst = worst.min(eps);
+        last_rss_kb = peak_rss_kb();
+
+        t.rowv(vec![
+            format!("{}k", ops / 1000),
+            m.events.to_string(),
+            format!("{:.2}", eps / 1e6),
+            format!("{:.1} KiB", stream_bytes as f64 / 1024.0),
+            format!("{:.1} MiB", materialized_bytes as f64 / (1 << 20) as f64),
+            match last_rss_kb {
+                Some(kb) => format!("{:.1} MiB", kb as f64 / 1024.0),
+                None => "n/a".into(),
+            },
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("total_ops".into(), Json::Num(ops as f64));
+        row.insert("events".into(), Json::Num(m.events as f64));
+        row.insert("wall_ns".into(), Json::Num(m.wall_ns as f64));
+        row.insert("events_per_sec".into(), Json::Num(eps));
+        row.insert("stream_state_bytes".into(), Json::Num(stream_bytes as f64));
+        row.insert("materialized_bytes".into(), Json::Num(materialized_bytes as f64));
+        if let Some(kb) = last_rss_kb {
+            row.insert("peak_rss_kb".into(), Json::Num(kb as f64));
+        }
+        rows.push(Json::Obj(row));
+    }
+    t.print();
+
+    // Report before asserting so regressions still leave data on disk.
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("trace_stream".into()));
+    top.insert("floor_events_per_sec".into(), Json::Num(FLOOR_EVENTS_PER_SEC));
+    top.insert("worst_events_per_sec".into(), Json::Num(worst));
+    if let Some(kb) = rss_base_kb {
+        top.insert("baseline_peak_rss_kb".into(), Json::Num(kb as f64));
+    }
+    top.insert("results".into(), Json::Arr(rows));
+    let path = "BENCH_trace_stream.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+
+    assert!(
+        worst > FLOOR_EVENTS_PER_SEC,
+        "scenario scaling dropped below {:.0}M events/s: {worst}",
+        FLOOR_EVENTS_PER_SEC / 1e6
+    );
+    if let (Some(base), Some(end)) = (rss_base_kb, last_rss_kb) {
+        let growth = end.saturating_sub(base);
+        assert!(
+            growth < MAX_RSS_GROWTH_KB,
+            "peak RSS grew {growth} kB across a 33x op-budget sweep — trace memory is \
+             scaling with total_ops again"
+        );
+        println!(
+            "trace_stream bench OK (worst {:.1} M events/s, RSS growth {growth} kB over 0.3M→10M ops)",
+            worst / 1e6
+        );
+    } else {
+        println!(
+            "trace_stream bench OK (worst {:.1} M events/s; RSS probe unavailable)",
+            worst / 1e6
+        );
+    }
+}

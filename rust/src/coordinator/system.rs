@@ -16,7 +16,7 @@ use crate::media::{DramModel, DramTimings, MediaKind, SsdModel, SsdParams};
 use crate::rootcomplex::{EpBackend, LoadPath, RootComplex, RootPort};
 use crate::sim::{EventQueue, Time, US};
 use crate::util::prng::Pcg32;
-use crate::workloads::{generate, TraceParams, WorkloadSpec};
+use crate::workloads::{OpStream, TraceParams, WorkloadSpec};
 
 use super::config::{MemStrategy, SystemConfig};
 use super::metrics::{Fig9eSeries, RunMetrics};
@@ -84,9 +84,14 @@ impl System {
             seed: cfg.seed,
             ..Default::default()
         };
-        let traces = generate(spec, &trace_params);
-        let warps: Vec<Warp> =
-            traces.into_iter().enumerate().map(|(i, ops)| Warp::new(i, ops, cfg.mlp)).collect();
+        // Each warp pulls ops lazily from its own stream: no up-front
+        // trace materialization, so memory stays O(warps) at any op
+        // budget and no generation latency precedes the first event.
+        let warps: Vec<Warp> = (0..cfg.warps)
+            .map(|i| {
+                Warp::from_source(i, Box::new(OpStream::new(spec, &trace_params, i)), cfg.mlp)
+            })
+            .collect();
 
         let expander = cfg.footprint.saturating_sub(cfg.local_bytes);
         let memmap = MemMap::new(cfg.local_bytes, expander);

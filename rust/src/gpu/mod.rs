@@ -16,7 +16,7 @@ pub mod warp;
 
 pub use cache::{AccessResult, Llc, LlcConfig};
 pub use memmap::{MemMap, Region};
-pub use warp::{Op, Warp, WarpStats};
+pub use warp::{Op, OpSource, Warp, WarpStats};
 
 /// Cache-line size used throughout (CXL.mem demand granularity).
 pub const LINE: u64 = 64;

@@ -6,6 +6,12 @@
 //! parallelism limit; stores are fire-and-forget into the LLC unless the
 //! cache backpressures. The coordinator's `System` owns the clock and
 //! drives these state machines.
+//!
+//! The instruction stream is pulled from an [`OpSource`] one op at a
+//! time — the warp holds at most a single lookahead op, so a warp's
+//! memory cost is independent of how many dynamic instructions it will
+//! execute. `workloads::OpStream` is the production source; a
+//! materialized `VecDeque<Op>` also implements the trait for tests.
 
 use std::collections::VecDeque;
 
@@ -20,6 +26,32 @@ pub enum Op {
     Load { addr: u64 },
     /// 64 B coalesced store.
     Store { addr: u64 },
+}
+
+/// Anything that can feed a warp its next dynamic instruction.
+///
+/// Sources are consumed strictly in order; `None` is final (a source must
+/// keep returning `None` once exhausted — the warp caches exhaustion via
+/// its lookahead slot either way).
+pub trait OpSource: std::fmt::Debug {
+    /// Produce the next op, advancing the source.
+    fn next_op(&mut self) -> Option<Op>;
+
+    /// Ops left, if the source knows (progress reporting only).
+    fn remaining_hint(&self) -> usize {
+        0
+    }
+}
+
+/// Materialized op list as a source (tests, hand-built scenarios).
+impl OpSource for VecDeque<Op> {
+    fn next_op(&mut self) -> Option<Op> {
+        self.pop_front()
+    }
+
+    fn remaining_hint(&self) -> usize {
+        self.len()
+    }
 }
 
 /// Per-warp execution statistics.
@@ -37,7 +69,9 @@ pub struct WarpStats {
 #[derive(Debug)]
 pub struct Warp {
     pub id: usize,
-    ops: VecDeque<Op>,
+    source: Box<dyn OpSource>,
+    /// Single-op lookahead so `peek` works over a pull-based source.
+    peeked: Option<Op>,
     /// Loads issued but not yet completed.
     pub outstanding: usize,
     /// Max outstanding loads before the warp stalls (MLP).
@@ -50,10 +84,17 @@ pub struct Warp {
 }
 
 impl Warp {
+    /// Warp over a materialized op list (tests, tools).
     pub fn new(id: usize, ops: Vec<Op>, mlp: usize) -> Warp {
+        Warp::from_source(id, Box::new(VecDeque::from(ops)), mlp)
+    }
+
+    /// Warp over any op source (the simulator feeds a lazy `OpStream`).
+    pub fn from_source(id: usize, source: Box<dyn OpSource>, mlp: usize) -> Warp {
         Warp {
             id,
-            ops: ops.into(),
+            source,
+            peeked: None,
             outstanding: 0,
             mlp: mlp.max(1),
             waiting: false,
@@ -62,14 +103,17 @@ impl Warp {
         }
     }
 
-    /// Next op without consuming it.
-    pub fn peek(&self) -> Option<&Op> {
-        self.ops.front()
+    /// Next op without consuming it (fills the lookahead slot).
+    pub fn peek(&mut self) -> Option<&Op> {
+        if self.peeked.is_none() {
+            self.peeked = self.source.next_op();
+        }
+        self.peeked.as_ref()
     }
 
     /// Consume the next op.
     pub fn pop(&mut self) -> Option<Op> {
-        self.ops.pop_front()
+        self.peeked.take().or_else(|| self.source.next_op())
     }
 
     /// True when the warp can issue another load without stalling.
@@ -96,7 +140,7 @@ impl Warp {
 
     /// Remaining ops (for progress reporting).
     pub fn remaining(&self) -> usize {
-        self.ops.len()
+        self.peeked.is_some() as usize + self.source.remaining_hint()
     }
 
     /// Mark final completion.
@@ -121,6 +165,51 @@ mod tests {
         assert_eq!(w.pop(), Some(Op::Compute { dur: NS }));
         assert_eq!(w.pop(), Some(Op::Load { addr: 64 }));
         assert_eq!(w.pop(), Some(Op::Store { addr: 128 }));
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn peek_does_not_consume() {
+        let mut w = Warp::new(0, vec![Op::Load { addr: 64 }, Op::Store { addr: 128 }], 4);
+        assert_eq!(w.remaining(), 2);
+        assert_eq!(w.peek(), Some(&Op::Load { addr: 64 }));
+        assert_eq!(w.peek(), Some(&Op::Load { addr: 64 }), "peek is idempotent");
+        // The lookahead slot holds one op pulled from the source.
+        assert_eq!(w.remaining(), 2);
+        assert_eq!(w.pop(), Some(Op::Load { addr: 64 }));
+        assert_eq!(w.pop(), Some(Op::Store { addr: 128 }));
+        assert_eq!(w.peek(), None);
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn source_backed_warp_streams_ops() {
+        /// A source that yields `Load {addr: 64*i}` for i in 0..n without
+        /// ever materializing the list.
+        #[derive(Debug)]
+        struct Counter {
+            i: u64,
+            n: u64,
+        }
+        impl OpSource for Counter {
+            fn next_op(&mut self) -> Option<Op> {
+                if self.i == self.n {
+                    return None;
+                }
+                self.i += 1;
+                Some(Op::Load { addr: 64 * (self.i - 1) })
+            }
+            fn remaining_hint(&self) -> usize {
+                (self.n - self.i) as usize
+            }
+        }
+        let mut w = Warp::from_source(0, Box::new(Counter { i: 0, n: 3 }), 4);
+        assert_eq!(w.remaining(), 3);
+        assert_eq!(w.peek(), Some(&Op::Load { addr: 0 }));
+        assert_eq!(w.remaining(), 3, "lookahead still counted");
+        assert_eq!(w.pop(), Some(Op::Load { addr: 0 }));
+        assert_eq!(w.pop(), Some(Op::Load { addr: 64 }));
+        assert_eq!(w.pop(), Some(Op::Load { addr: 128 }));
         assert_eq!(w.pop(), None);
     }
 

@@ -418,11 +418,14 @@ impl SsdModel {
         self.drain_buffer(now);
         let first = self.frame_of(addr);
         let last = self.frame_of(addr + len.saturating_sub(1));
-        // Skip frames already cached or in flight.
-        let todo: Vec<u64> = (first..=last)
-            .filter(|f| !self.cache.contains(*f) && !self.inflight.contains_key(f))
-            .collect();
-        if todo.is_empty() {
+        // A frame needs fetching if it is neither cached nor in flight.
+        // Two passes over the (≤16-frame) span instead of collecting a
+        // `todo` Vec per call — this runs on every SR window issue, so
+        // the allocation was steady-state hot-path churn. The passes see
+        // the same cache/inflight state: nothing between them mutates
+        // either map, and the span's frames are distinct.
+        let needs = |s: &SsdModel, f: u64| !s.cache.contains(f) && !s.inflight.contains_key(&f);
+        if !(first..=last).any(|f| needs(self, f)) {
             return now;
         }
         let start = self.task_free(now);
@@ -430,10 +433,12 @@ impl SsdModel {
         // One media read covers the whole contiguous span.
         let done = avail.max(start) + self.params.read_lat;
         self.chan_free[ch] = done;
-        for f in todo {
-            self.inflight.insert(f, done);
-            self.inflight_by_time.push(std::cmp::Reverse((done, f)));
-            self.stats.prefetches += 1;
+        for f in first..=last {
+            if needs(self, f) {
+                self.inflight.insert(f, done);
+                self.inflight_by_time.push(std::cmp::Reverse((done, f)));
+                self.stats.prefetches += 1;
+            }
         }
         done
     }

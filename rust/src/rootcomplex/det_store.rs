@@ -122,11 +122,14 @@ impl DetStoreEngine {
         hit
     }
 
-    /// Take up to `max` entries for a background flush, in ascending
-    /// address order (friendlier to the flash translation layer than the
-    /// LIFO stack order). Entries stay tracked until `flush_done`.
-    pub fn flush_batch(&mut self, max: usize) -> Vec<(u64, u64)> {
-        let mut out = Vec::new();
+    /// Fill `out` with up to `max` entries for a background flush, in
+    /// ascending address order (friendlier to the flash translation layer
+    /// than the LIFO stack order). `out` is cleared first and its
+    /// capacity reused — the flush tick fires every 10 µs of sim time, so
+    /// a fresh `Vec` per tick was the DS path's last steady-state
+    /// allocation. Entries stay tracked until `flush_done`.
+    pub fn flush_batch_into(&mut self, max: usize, out: &mut Vec<(u64, u64)>) {
+        out.clear();
         let mut key = 0u64;
         while out.len() < max {
             match self.sram.ceiling(key) {
@@ -138,7 +141,6 @@ impl DetStoreEngine {
                 None => break,
             }
         }
-        out
     }
 
     /// A flushed entry has reached the EP: drop it from the stack/SRAM.
@@ -232,10 +234,11 @@ mod tests {
         for addr in [0x300u64, 0x100, 0x200] {
             e.on_store(0, addr, 64, DevLoad::Severe);
         }
-        let batch = e.flush_batch(10);
+        let mut batch = Vec::new();
+        e.flush_batch_into(10, &mut batch);
         let addrs: Vec<u64> = batch.iter().map(|&(a, _)| a).collect();
         assert_eq!(addrs, vec![0x100, 0x200, 0x300]);
-        for (line, _) in batch {
+        for &(line, _) in &batch {
             e.flush_done(line);
         }
         assert_eq!(e.buffered_entries(), 0);
@@ -245,12 +248,17 @@ mod tests {
     }
 
     #[test]
-    fn flush_batch_respects_max() {
+    fn flush_batch_respects_max_and_reuses_buffer() {
         let mut e = engine();
         for i in 0..10u64 {
             e.on_store(0, i * 64, 64, DevLoad::Severe);
         }
-        assert_eq!(e.flush_batch(4).len(), 4);
+        let mut batch = vec![(0xdead, 0xbeef)]; // stale content must be cleared
+        e.flush_batch_into(4, &mut batch);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0], (0x0, 64));
+        e.flush_batch_into(0, &mut batch);
+        assert!(batch.is_empty(), "max=0 leaves a cleared buffer");
     }
 
     #[test]

@@ -87,6 +87,9 @@ pub struct RootPort {
     recent: VecDeque<u64>,
     /// Local-memory mirror latency used for DS acks and intercepts.
     pub local_ack: Time,
+    /// Scratch for [`DetStoreEngine::flush_batch_into`]: one buffer
+    /// reused across every `FlushTick` instead of a `Vec` per tick.
+    flush_scratch: Vec<(u64, u64)>,
     pub stats: PortStats,
     req_id: u64,
 }
@@ -109,6 +112,7 @@ impl RootPort {
             slots: vec![0; MEM_QUEUE_CAP],
             recent: VecDeque::with_capacity(MEM_QUEUE_CAP),
             local_ack: 200 * NS,
+            flush_scratch: Vec::new(),
             stats: PortStats::default(),
             req_id: 0,
         }
@@ -298,9 +302,13 @@ impl RootPort {
         if self.devload(now).overloaded() {
             return None; // wait for the EP to recover
         }
-        let lines = self.ds.flush_batch(batch);
+        // Move the scratch buffer out of `self` for the loop (the body
+        // borrows backend/slots/ds mutably), then put it back so its
+        // capacity survives to the next tick.
+        let mut lines = std::mem::take(&mut self.flush_scratch);
+        self.ds.flush_batch_into(batch, &mut lines);
         let mut last = now;
-        for (line, len) in lines {
+        for &(line, len) in &lines {
             let (slot, start) = self.acquire_slot(last);
             let flit = Flit { op: MemOpcode::MemWr, addr: line, len, issued_at: start, req_id: 0 };
             let at_ep = start + self.ctrl.request_leg(&flit);
@@ -312,6 +320,7 @@ impl RootPort {
             self.ds.flush_done(line);
             last = done;
         }
+        self.flush_scratch = lines;
         Some(last)
     }
 }

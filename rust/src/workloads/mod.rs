@@ -4,8 +4,13 @@
 //! Each workload is characterized by its instruction mix (compute ratio,
 //! load ratio — Table 1b's two columns) and its memory access pattern
 //! (the Seq / Around / Rand taxonomy of Fig. 9d, plus tiled reuse for the
-//! 2D kernels). Generators materialize per-warp instruction streams that
-//! the coordinator's `System` executes against any memory configuration.
+//! 2D kernels). Per-warp instruction streams are generated *lazily*: an
+//! [`OpStream`] owns the warp's RNG and pattern state and yields one `Op`
+//! at a time, so simulation memory is O(warps) — independent of the op
+//! budget — and trace generation overlaps execution instead of preceding
+//! it. [`collect_trace`] keeps the original eager materialization as the
+//! executable reference the streaming path is property-tested against
+//! (DESIGN.md §11).
 //!
 //! The *compute results* of these workloads come from the real JAX/Pallas
 //! kernels executed through PJRT (`runtime/`); the *timing* comes from
@@ -17,7 +22,7 @@ pub mod table1b;
 pub use patterns::{Pattern, PatternKind};
 pub use table1b::{WorkloadSpec, ALL_WORKLOADS};
 
-use crate::gpu::{Op, LINE};
+use crate::gpu::{Op, OpSource, LINE};
 use crate::sim::{Time, NS};
 use crate::util::prng::Pcg32;
 
@@ -41,7 +46,7 @@ impl Category {
     }
 }
 
-/// Parameters controlling trace materialization.
+/// Parameters controlling trace generation.
 #[derive(Debug, Clone, Copy)]
 pub struct TraceParams {
     /// Total data footprint in bytes (paper: 10x the GPU local memory).
@@ -68,8 +73,95 @@ impl Default for TraceParams {
     }
 }
 
-/// Materialize per-warp op streams for a workload.
-pub fn generate(spec: &WorkloadSpec, p: &TraceParams) -> Vec<Vec<Op>> {
+/// One warp's lazy op stream: the RNG + pattern state that the old
+/// materialized trace row was generated from, now owned by the stream and
+/// advanced one op per [`OpStream::next`].
+///
+/// Equivalence contract: for identical `(spec, params, warp)`, the yielded
+/// sequence is bit-identical to the corresponding [`collect_trace`] row —
+/// same RNG construction, same per-op draw order. Enforced by
+/// `tests/props.rs::prop_stream_matches_materialized_trace`.
+#[derive(Debug)]
+pub struct OpStream {
+    rng: Pcg32,
+    pat: Pattern,
+    compute_ratio: f64,
+    load_ratio: f64,
+    compute_ns: Time,
+    remaining: usize,
+}
+
+impl OpStream {
+    /// Stream for warp `warp` of `spec` under `p`.
+    pub fn new(spec: &WorkloadSpec, p: &TraceParams, warp: usize) -> OpStream {
+        let mut rng = Pcg32::new(p.seed ^ spec.seed_salt(), warp as u64);
+        let pat = Pattern::new(spec.pattern, p.footprint, warp, p.warps, &mut rng);
+        OpStream {
+            rng,
+            pat,
+            compute_ratio: spec.compute_ratio,
+            load_ratio: spec.load_ratio,
+            compute_ns: p.compute_ns,
+            remaining: p.total_ops / p.warps,
+        }
+    }
+
+    /// Ops not yet yielded.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    /// Resident state in bytes (inline struct + pattern heap): the whole
+    /// per-warp memory cost of a streamed scenario, independent of
+    /// `total_ops`. Reported by the `trace_stream` bench.
+    pub fn state_bytes(&self) -> usize {
+        std::mem::size_of::<OpStream>() - std::mem::size_of::<Pattern>()
+            + self.pat.state_bytes()
+    }
+}
+
+impl Iterator for OpStream {
+    type Item = Op;
+
+    fn next(&mut self) -> Option<Op> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        Some(if self.rng.chance(self.compute_ratio) {
+            // Compute burst: base +/- 50% jitter.
+            let jitter = (self.rng.f64() - 0.5) * self.compute_ns as f64;
+            let dur = (self.compute_ns as f64 + jitter).max(500.0) as Time;
+            Op::Compute { dur }
+        } else if self.rng.chance(self.load_ratio) {
+            Op::Load { addr: self.pat.next_load(&mut self.rng) }
+        } else {
+            Op::Store { addr: self.pat.next_store(&mut self.rng) }
+        })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl OpSource for OpStream {
+    fn next_op(&mut self) -> Option<Op> {
+        self.next()
+    }
+
+    fn remaining_hint(&self) -> usize {
+        self.remaining
+    }
+}
+
+/// Materialize the full per-warp traces eagerly.
+///
+/// This keeps the *original* generator loop verbatim as the executable
+/// specification the streaming path is checked against; it is also the
+/// convenient form for tests and trace analyses. The simulator itself
+/// never calls this — `System` builds one [`OpStream`] per warp.
+pub fn collect_trace(spec: &WorkloadSpec, p: &TraceParams) -> Vec<Vec<Op>> {
     let per_warp = p.total_ops / p.warps;
     let mut out = Vec::with_capacity(p.warps);
     for w in 0..p.warps {
@@ -78,7 +170,6 @@ pub fn generate(spec: &WorkloadSpec, p: &TraceParams) -> Vec<Vec<Op>> {
         let mut ops = Vec::with_capacity(per_warp);
         for _ in 0..per_warp {
             if rng.chance(spec.compute_ratio) {
-                // Compute burst: base +/- 50% jitter.
                 let jitter = (rng.f64() - 0.5) * p.compute_ns as f64;
                 let dur = (p.compute_ns as f64 + jitter).max(500.0) as Time;
                 ops.push(Op::Compute { dur });
@@ -93,7 +184,7 @@ pub fn generate(spec: &WorkloadSpec, p: &TraceParams) -> Vec<Vec<Op>> {
     out
 }
 
-/// Measured instruction mix of a generated trace (for the Table 1b bench).
+/// Measured instruction mix of a trace (for the Table 1b bench).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct TraceMix {
     pub computes: u64,
@@ -106,14 +197,31 @@ impl TraceMix {
         let mut m = TraceMix::default();
         for ops in trace {
             for op in ops {
-                match op {
-                    Op::Compute { .. } => m.computes += 1,
-                    Op::Load { .. } => m.loads += 1,
-                    Op::Store { .. } => m.stores += 1,
-                }
+                m.count(op);
             }
         }
         m
+    }
+
+    /// Mix of a workload's full streamed trace, without materializing it:
+    /// every warp's stream is consumed and tallied on the fly, so the
+    /// accounting runs in O(warps) memory at any op budget.
+    pub fn of_stream(spec: &WorkloadSpec, p: &TraceParams) -> TraceMix {
+        let mut m = TraceMix::default();
+        for w in 0..p.warps {
+            for op in spec.stream(p, w) {
+                m.count(&op);
+            }
+        }
+        m
+    }
+
+    fn count(&mut self, op: &Op) {
+        match op {
+            Op::Compute { .. } => self.computes += 1,
+            Op::Load { .. } => self.loads += 1,
+            Op::Store { .. } => self.stores += 1,
+        }
     }
 
     pub fn total(&self) -> u64 {
@@ -160,8 +268,7 @@ mod tests {
     fn mix_matches_table1b_within_tolerance() {
         let p = TraceParams { total_ops: 64_000, ..Default::default() };
         for spec in ALL_WORKLOADS {
-            let trace = generate(spec, &p);
-            let mix = TraceMix::of(&trace);
+            let mix = TraceMix::of_stream(spec, &p);
             assert!(
                 (mix.compute_ratio() - spec.compute_ratio).abs() < 0.03,
                 "{}: compute ratio {} vs spec {}",
@@ -180,18 +287,42 @@ mod tests {
     }
 
     #[test]
+    fn streamed_mix_equals_materialized_mix() {
+        let p = TraceParams { total_ops: 20_000, ..Default::default() };
+        for spec in ALL_WORKLOADS {
+            let eager = TraceMix::of(&collect_trace(spec, &p));
+            let lazy = TraceMix::of_stream(spec, &p);
+            assert_eq!(eager.computes, lazy.computes, "{}", spec.name);
+            assert_eq!(eager.loads, lazy.loads, "{}", spec.name);
+            assert_eq!(eager.stores, lazy.stores, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn stream_matches_trace_row_for_row() {
+        let p = TraceParams { total_ops: 12_000, ..Default::default() };
+        for name in ["vadd", "bfs", "gnn"] {
+            let trace = collect_trace(spec(name), &p);
+            for (w, row) in trace.iter().enumerate() {
+                let streamed: Vec<Op> = OpStream::new(spec(name), &p, w).collect();
+                assert_eq!(&streamed, row, "{name} warp {w}");
+            }
+        }
+    }
+
+    #[test]
     fn traces_are_deterministic() {
         let p = TraceParams { total_ops: 10_000, ..Default::default() };
-        let a = generate(spec("vadd"), &p);
-        let b = generate(spec("vadd"), &p);
+        let a = collect_trace(spec("vadd"), &p);
+        let b = collect_trace(spec("vadd"), &p);
         assert_eq!(a, b);
     }
 
     #[test]
     fn different_workloads_differ() {
         let p = TraceParams { total_ops: 10_000, ..Default::default() };
-        let a = generate(spec("vadd"), &p);
-        let b = generate(spec("bfs"), &p);
+        let a = collect_trace(spec("vadd"), &p);
+        let b = collect_trace(spec("bfs"), &p);
         assert_ne!(a, b);
     }
 
@@ -199,11 +330,10 @@ mod tests {
     fn addresses_stay_in_footprint() {
         let p = TraceParams { total_ops: 50_000, footprint: 8 << 20, ..Default::default() };
         for name in ["vadd", "sort", "bfs", "gemm", "gnn", "mri"] {
-            let trace = generate(spec(name), &p);
-            for ops in &trace {
-                for op in ops {
+            for w in 0..p.warps {
+                for op in OpStream::new(spec(name), &p, w) {
                     if let Op::Load { addr } | Op::Store { addr } = op {
-                        assert!(*addr < p.footprint, "{name}: {addr:#x} out of range");
+                        assert!(addr < p.footprint, "{name}: {addr:#x} out of range");
                     }
                 }
             }
@@ -213,10 +343,36 @@ mod tests {
     #[test]
     fn seq_workloads_touch_many_distinct_lines() {
         let p = TraceParams { total_ops: 100_000, ..Default::default() };
-        let vadd_lines = distinct_lines(&generate(spec("vadd"), &p));
-        let gemm_lines = distinct_lines(&generate(spec("gemm"), &p));
+        let vadd_lines = distinct_lines(&collect_trace(spec("vadd"), &p));
+        let gemm_lines = distinct_lines(&collect_trace(spec("gemm"), &p));
         // Streaming vadd covers far more distinct lines than tiled gemm
         // (which re-reads its tiles).
         assert!(vadd_lines > gemm_lines, "vadd {vadd_lines} <= gemm {gemm_lines}");
+    }
+
+    #[test]
+    fn stream_state_is_small_and_op_budget_free() {
+        // The whole point: per-warp state must not scale with total_ops.
+        let small = TraceParams { total_ops: 1_000, ..Default::default() };
+        let huge = TraceParams { total_ops: 10_000_000, ..Default::default() };
+        for spec in ALL_WORKLOADS {
+            let a = OpStream::new(spec, &small, 0).state_bytes();
+            let b = OpStream::new(spec, &huge, 0).state_bytes();
+            assert_eq!(a, b, "{}: state must be op-budget independent", spec.name);
+            assert!(a < 4096, "{}: {a} B per warp is not O(1)", spec.name);
+        }
+    }
+
+    #[test]
+    fn stream_remaining_counts_down() {
+        let p = TraceParams { total_ops: 6_400, ..Default::default() };
+        let mut s = OpStream::new(spec("vadd"), &p, 3);
+        let per_warp = p.total_ops / p.warps;
+        assert_eq!(s.remaining(), per_warp);
+        assert_eq!(s.size_hint(), (per_warp, Some(per_warp)));
+        s.next().unwrap();
+        assert_eq!(s.remaining(), per_warp - 1);
+        assert_eq!(s.by_ref().count(), per_warp - 1);
+        assert_eq!(s.next(), None, "exhausted stream stays exhausted");
     }
 }

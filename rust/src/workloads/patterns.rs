@@ -126,6 +126,16 @@ impl Pattern {
         }
     }
 
+    /// Resident size of this pattern's state in bytes (inline struct plus
+    /// the composite sub-pattern heap). This — times the warp count — is
+    /// the entire address-generation memory of a streamed scenario, so
+    /// the `trace_stream` bench reports it as the O(warps) side of the
+    /// memory model (DESIGN.md §11).
+    pub fn state_bytes(&self) -> usize {
+        std::mem::size_of::<Pattern>()
+            + self.sub.iter().map(|s| s.state_bytes()).sum::<usize>()
+    }
+
     fn wrap_input(&self, a: u64) -> u64 {
         let span = self.hi - self.lo;
         self.lo + (a - self.lo) % span
@@ -360,6 +370,16 @@ mod tests {
             assert!(a >= store_base, "{a:#x} below store region");
             assert!(a < FOOT);
         }
+    }
+
+    #[test]
+    fn state_bytes_counts_composite_subpatterns() {
+        static SEQ: PatternKind = PatternKind::Seq;
+        static RAND: PatternKind = PatternKind::Rand;
+        let (seq, _) = pat(PatternKind::Seq, 0);
+        let (comp, _) = pat(PatternKind::Composite2 { a: &SEQ, b: &RAND, phase_len: 8 }, 0);
+        assert_eq!(seq.state_bytes(), std::mem::size_of::<Pattern>());
+        assert_eq!(comp.state_bytes(), 3 * std::mem::size_of::<Pattern>());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! workload (Fig. 9d's Seq/Around/Rand taxonomy, §Performance Analysis).
 
 use super::patterns::PatternKind;
-use super::Category;
+use super::{Category, OpStream, TraceParams};
 
 /// Static description of one workload.
 #[derive(Debug, Clone, Copy)]
@@ -26,6 +26,12 @@ impl WorkloadSpec {
         self.name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
             (h ^ b as u64).wrapping_mul(0x100000001b3)
         })
+    }
+
+    /// Lazy op stream for one warp of this workload (see
+    /// [`OpStream::new`]).
+    pub fn stream(&self, p: &TraceParams, warp: usize) -> OpStream {
+        OpStream::new(self, p, warp)
     }
 }
 

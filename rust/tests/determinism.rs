@@ -87,6 +87,22 @@ fn parallel_runner_matches_direct_runs() {
     }
 }
 
+/// Streamed traces advance RNG state op by op instead of in one up-front
+/// pass, so determinism must also hold at a budget far above the other
+/// tests here (50x their 6k ops). 300k is the old full-sweep scale — the
+/// benches' 3M/4M budgets are release-mode territory, too slow for a
+/// debug-mode `cargo test`; any op-by-op drift compounds well before
+/// 300k draws per run.
+#[test]
+fn large_budget_runs_are_bit_identical() {
+    let mut cfg = SystemConfig::named("cxl", MediaKind::Ddr5);
+    cfg.total_ops = 300_000;
+    let a = System::new(spec("gnn"), &cfg).run();
+    let b = System::new(spec("gnn"), &cfg).run();
+    assert_eq!(fingerprint(&a), fingerprint(&b), "cxl/gnn diverged at the large budget");
+    assert!(a.exec_time > 0 && a.events > 0);
+}
+
 #[test]
 fn suite_is_deterministic_and_table_ordered() {
     let a = run_suite("cxl", MediaKind::Ddr5, Some(3_000));

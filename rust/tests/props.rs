@@ -11,6 +11,7 @@ use cxl_gpu::rootcomplex::rbtree::RbTree;
 use cxl_gpu::rootcomplex::spec_read::{SpecReadEngine, SrPolicy};
 use cxl_gpu::sim::{EventQueue, NS};
 use cxl_gpu::util::prop::check;
+use cxl_gpu::workloads::{collect_trace, OpStream, TraceParams, ALL_WORKLOADS};
 
 #[test]
 fn prop_event_queue_pops_in_nondecreasing_time() {
@@ -101,6 +102,49 @@ fn prop_bucketed_queue_matches_reference_heap() {
     });
 }
 
+/// The streaming trace generator must be *bit-identical* to the eager
+/// reference (`collect_trace` keeps the original generator loop as the
+/// executable spec): every workload in Table 1b, random seeds, warp
+/// counts, footprints and op budgets. This is the equivalence contract
+/// that lets `System` stream traces while the tests and table analyses
+/// keep materializing them (DESIGN.md §11).
+#[test]
+fn prop_stream_matches_materialized_trace() {
+    check("stream-vs-materialized", 0x57EA, 24, |g| {
+        let p = TraceParams {
+            footprint: (g.u64("footprint_mb", 2, 16) << 20),
+            warps: g.usize("warps", 1, 32),
+            total_ops: g.usize("ops", 100, 12_000),
+            seed: g.u64("seed", 0, u64::MAX / 2),
+            ..Default::default()
+        };
+        for spec in ALL_WORKLOADS {
+            let reference = collect_trace(spec, &p);
+            for (w, row) in reference.iter().enumerate() {
+                let mut stream = OpStream::new(spec, &p, w);
+                for (i, op) in row.iter().enumerate() {
+                    match stream.next() {
+                        Some(got) if got == *op => {}
+                        other => {
+                            return Err(format!(
+                                "{} warp {w} op {i}: stream {other:?} != trace {op:?}",
+                                spec.name
+                            ))
+                        }
+                    }
+                }
+                if let Some(extra) = stream.next() {
+                    return Err(format!(
+                        "{} warp {w}: stream yields {extra:?} past the trace end",
+                        spec.name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_hdm_decode_is_total_and_consistent_over_programmed_space() {
     check("hdm-total", 0xD0, 100, |g| {
@@ -175,7 +219,9 @@ fn prop_ds_never_loses_or_duplicates_stores() {
                 _ => {}
             }
             if g.bool(&format!("flush{i}"), 0.3) {
-                for (line, _) in ds.flush_batch(4) {
+                let mut batch = Vec::new();
+                ds.flush_batch_into(4, &mut batch);
+                for &(line, _) in &batch {
                     ds.flush_done(line);
                     live.remove(&line);
                 }
