@@ -1,8 +1,9 @@
 //! §Perf — simulator throughput: events per wall-second across
 //! representative configurations (the L3 hot-path metric).
 //!
-//! Emits `BENCH_sim_throughput.json` (via `util::json`) so the perf
-//! trajectory is tracked across PRs, then asserts the floor. The floor
+//! Emits `BENCH_sim_throughput.json` (via `util::json`; schema:
+//! docs/BENCH_SCHEMA.md) so the perf trajectory is tracked across PRs,
+//! then asserts the floor. The floor
 //! was 1M events/s on the seed's binary-heap engine; the bucketed-queue +
 //! allocation-free rebuild clears ≥2x that, so the assert rides at 2M.
 use std::collections::BTreeMap;
@@ -65,6 +66,7 @@ fn main() {
     // leaves the numbers on disk for diagnosis.
     let mut top = BTreeMap::new();
     top.insert("bench".into(), Json::Str("sim_throughput".into()));
+    top.insert("schema".into(), Json::Str("docs/BENCH_SCHEMA.md".into()));
     top.insert("floor_events_per_sec".into(), Json::Num(FLOOR_EVENTS_PER_SEC));
     top.insert("worst_events_per_sec".into(), Json::Num(worst));
     top.insert("results".into(), Json::Arr(rows));

@@ -1,0 +1,77 @@
+//! §12 — tiered hybrid-port memory: hot-fraction sweep.
+//!
+//! Runs the `tiering` experiment (tiered hybrid vs. all-DRAM vs. all-SSD
+//! vs. static hybrid vs. the frozen-placement ablation, over the
+//! `hot50..hot95` synthetics), emits `BENCH_tiering.json`
+//! (schema: docs/BENCH_SCHEMA.md), and asserts the tentpole's win
+//! condition: the tiered hybrid must beat the static `cxl-hybrid` split
+//! on geomean across the sweep, with the migration engine actually
+//! moving pages.
+use std::collections::BTreeMap;
+
+use cxl_gpu::coordinator::experiments::{tiering, Scale};
+use cxl_gpu::util::json::Json;
+
+/// Geomean speedup over the static hybrid the tiered config must clear.
+const FLOOR_SPEEDUP_OVER_HYBRID: f64 = 1.0;
+
+fn main() {
+    let res = tiering(Scale::default(), true);
+
+    let rows: Vec<Json> = res
+        .rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("hot_permille".into(), Json::Num(r.hot_permille as f64));
+            m.insert("all_dram_ms".into(), Json::Num(r.all_dram_ms));
+            m.insert("all_ssd_ms".into(), Json::Num(r.all_ssd_ms));
+            m.insert("hybrid_ms".into(), Json::Num(r.hybrid_ms));
+            m.insert("tier_static_ms".into(), Json::Num(r.tier_static_ms));
+            m.insert("tier_ms".into(), Json::Num(r.tier_ms));
+            m.insert("promotions".into(), Json::Num(r.promotions as f64));
+            m.insert("migrated_bytes".into(), Json::Num(r.migrated_bytes as f64));
+            m.insert("tier_fast_ratio".into(), Json::Num(r.tier_fast_ratio));
+            m.insert("static_fast_ratio".into(), Json::Num(r.static_fast_ratio));
+            Json::Obj(m)
+        })
+        .collect();
+
+    // Report before asserting so regressions still leave data on disk.
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("tiering".into()));
+    top.insert("schema".into(), Json::Str("docs/BENCH_SCHEMA.md".into()));
+    top.insert("floor_speedup_over_hybrid".into(), Json::Num(FLOOR_SPEEDUP_OVER_HYBRID));
+    top.insert(
+        "tier_speedup_over_hybrid".into(),
+        Json::Num(res.tier_speedup_over_hybrid),
+    );
+    top.insert(
+        "tier_speedup_over_static".into(),
+        Json::Num(res.tier_speedup_over_static),
+    );
+    top.insert("results".into(), Json::Arr(rows));
+    let path = "BENCH_tiering.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+
+    assert!(
+        res.tier_speedup_over_hybrid > FLOOR_SPEEDUP_OVER_HYBRID,
+        "tiered hybrid must beat the static split: {:.3}x geomean",
+        res.tier_speedup_over_hybrid
+    );
+    assert!(
+        res.rows.iter().all(|r| r.promotions > 0),
+        "every sweep point must migrate at least one page"
+    );
+    assert!(
+        res.rows.iter().all(|r| r.tier_fast_ratio >= r.static_fast_ratio),
+        "migration must not lower the fast-tier hit ratio"
+    );
+    println!(
+        "tiering bench OK (tier over hybrid {:.2}x, over frozen placement {:.2}x)",
+        res.tier_speedup_over_hybrid, res.tier_speedup_over_static
+    );
+}

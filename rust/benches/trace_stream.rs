@@ -8,7 +8,8 @@
 //! decades (0.3M..10M), records throughput plus both memory models, and
 //! asserts that peak RSS no longer scales with `total_ops`.
 //!
-//! Emits `BENCH_trace_stream.json` alongside `BENCH_sim_throughput.json`.
+//! Emits `BENCH_trace_stream.json` alongside `BENCH_sim_throughput.json`
+//! (schema: docs/BENCH_SCHEMA.md).
 use std::collections::BTreeMap;
 
 use cxl_gpu::coordinator::config::SystemConfig;
@@ -106,6 +107,7 @@ fn main() {
     // Report before asserting so regressions still leave data on disk.
     let mut top = BTreeMap::new();
     top.insert("bench".into(), Json::Str("trace_stream".into()));
+    top.insert("schema".into(), Json::Str("docs/BENCH_SCHEMA.md".into()));
     top.insert("floor_events_per_sec".into(), Json::Num(FLOOR_EVENTS_PER_SEC));
     top.insert("worst_events_per_sec".into(), Json::Num(worst));
     if let Some(kb) = rss_base_kb {

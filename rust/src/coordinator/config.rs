@@ -6,7 +6,7 @@
 use crate::cxl::ControllerKind;
 use crate::gpu::LlcConfig;
 use crate::media::MediaKind;
-use crate::rootcomplex::SrPolicy;
+use crate::rootcomplex::{SrPolicy, TierConfig};
 use crate::util::toml::Document;
 
 /// Top-level memory-expansion strategy.
@@ -53,6 +53,10 @@ pub struct SystemConfig {
     /// Per-port media override (heterogeneous expanders, Fig. 1a's
     /// "DRAMs and/or SSDs"); `None` = every port uses `media`.
     pub media_per_port: Option<Vec<MediaKind>>,
+    /// Hot-page tiering across heterogeneous ports (DESIGN.md §12):
+    /// interleaved HDM enumeration, access tracking and (when
+    /// `tier.migrate`) epoch-based page migration.
+    pub tier: TierConfig,
 }
 
 impl SystemConfig {
@@ -80,12 +84,31 @@ impl SystemConfig {
             ds_capacity: 1 << 20,
             timeline: false,
             media_per_port: None,
+            tier: TierConfig::default(),
         }
     }
 
-    /// A named configuration from the paper. Recognized names: `gpu-dram`,
-    /// `uvm`, `gds`, `cxl`, `cxl-naive`, `cxl-dyn`, `cxl-sr`, `cxl-ds`,
-    /// `cxl-smt` (commercial-EP comparator).
+    /// A named configuration from the paper's evaluation (plus this
+    /// repo's extensions). One line per name, stating the paper artifact
+    /// it serves:
+    ///
+    /// * `gpu-dram` — the ideal baseline every figure normalizes to
+    ///   (local memory holds the whole footprint).
+    /// * `uvm` — Unified Virtual Memory comparator (Fig. 9a, headline).
+    /// * `gds` — GPUDirect Storage comparator (Fig. 9b).
+    /// * `cxl` — plain CXL expander, no SR/DS (Figs. 9a–9d).
+    /// * `cxl-naive` — SR with the naive next-line policy (Fig. 9d).
+    /// * `cxl-dyn` — SR with the dynamic-range policy (Fig. 9d).
+    /// * `cxl-sr` — SR with the full window policy (Figs. 9b–9e).
+    /// * `cxl-ds` — SR + Deterministic Store (Figs. 9b, 9c, 9e).
+    /// * `cxl-smt` — PCIe-era commercial EP controller comparator
+    ///   (Fig. 3b, headline's 1.36x).
+    /// * `cxl-hybrid` — mixed DRAM/SSD ports, static HDM split (Fig. 1a
+    ///   topology; ablation A3).
+    /// * `cxl-tier` — hybrid ports + interleaved HDM + hot-page
+    ///   migration (DESIGN.md §12, `tiering` experiment).
+    /// * `cxl-tier-static` — `cxl-tier` topology with migration disabled
+    ///   (the tiering ablation point).
     pub fn named(name: &str, media: MediaKind) -> SystemConfig {
         let mut c = SystemConfig::base();
         c.name = name.into();
@@ -133,6 +156,25 @@ impl SystemConfig {
                         .collect(),
                 );
             }
+            "cxl-tier" | "cxl-tier-static" => {
+                // The hybrid topology with the tiering subsystem: HDM
+                // windows are grouped per media class and way-interleaved
+                // within each group, and (for `cxl-tier`) the migration
+                // engine promotes hot SSD-resident pages onto the DRAM
+                // ports each epoch. `cxl-tier-static` keeps the identical
+                // topology and tracker but freezes placement — the
+                // ablation that isolates the migration win.
+                c.strategy = MemStrategy::Cxl;
+                c.sr_policy = SrPolicy::Window;
+                c.ds_enabled = true;
+                c.media_per_port = Some(
+                    (0..c.ports)
+                        .map(|i| if i % 2 == 0 { MediaKind::Ddr5 } else { media })
+                        .collect(),
+                );
+                c.tier.enabled = true;
+                c.tier.migrate = name == "cxl-tier";
+            }
             other => panic!("unknown configuration `{other}`"),
         }
         c
@@ -142,7 +184,7 @@ impl SystemConfig {
     pub fn known_names() -> &'static [&'static str] {
         &[
             "gpu-dram", "uvm", "gds", "cxl", "cxl-naive", "cxl-dyn", "cxl-sr", "cxl-ds",
-            "cxl-smt", "cxl-hybrid",
+            "cxl-smt", "cxl-hybrid", "cxl-tier", "cxl-tier-static",
         ]
     }
 
@@ -226,6 +268,21 @@ mod tests {
             SystemConfig::named("cxl-smt", MediaKind::Ddr5).controller,
             ControllerKind::Smt
         );
+    }
+
+    #[test]
+    fn tier_configs_set_topology_and_migration() {
+        let tier = SystemConfig::named("cxl-tier", MediaKind::Znand);
+        assert!(tier.tier.enabled && tier.tier.migrate);
+        assert!(tier.ds_enabled);
+        let media = tier.media_per_port.as_ref().unwrap();
+        assert!(media.iter().step_by(2).all(|m| *m == MediaKind::Ddr5));
+        assert!(media.iter().skip(1).step_by(2).all(|m| *m == MediaKind::Znand));
+        let ablation = SystemConfig::named("cxl-tier-static", MediaKind::Znand);
+        assert!(ablation.tier.enabled && !ablation.tier.migrate);
+        assert_eq!(ablation.media_per_port, tier.media_per_port);
+        // Untiered configs never enable the subsystem.
+        assert!(!SystemConfig::named("cxl-hybrid", MediaKind::Znand).tier.enabled);
     }
 
     #[test]

@@ -9,8 +9,8 @@ use crate::cxl::{ControllerKind, CxlController};
 use crate::media::MediaKind;
 use crate::sim::ps_to_ns;
 use crate::util::bench::{ratio, Table};
-use crate::workloads::table1b::{spec, ALL_WORKLOADS};
-use crate::workloads::{Category, TraceMix, TraceParams};
+use crate::workloads::table1b::{spec, ALL_WORKLOADS, HOT_SWEEP};
+use crate::workloads::{Category, PatternKind, TraceMix, TraceParams};
 
 use super::config::SystemConfig;
 use super::runner::{
@@ -533,6 +533,126 @@ pub fn fig9e(scale: Scale, print: bool) -> Fig9e {
         println!(
             "GC episodes observed: SR {} / DS {}",
             sr.metrics.gc_episodes, ds.metrics.gc_episodes
+        );
+    }
+    res
+}
+
+// ---------------------------------------------------------------------------
+// Tiering — hot-fraction sweep over the hybrid-port topology (§12)
+// ---------------------------------------------------------------------------
+
+/// One hot-fraction row of the tiering sweep. Exec times in simulated
+/// milliseconds; the tier columns carry the migration telemetry.
+#[derive(Debug, Clone)]
+pub struct TierRow {
+    /// Hot fraction of the workload's loads, in permille.
+    pub hot_permille: u32,
+    /// `cxl` with four DRAM ports (the fast ceiling).
+    pub all_dram_ms: f64,
+    /// `cxl-ds` with four Z-NAND ports (the capacity floor).
+    pub all_ssd_ms: f64,
+    /// `cxl-hybrid`: mixed ports, static contiguous HDM split.
+    pub hybrid_ms: f64,
+    /// `cxl-tier-static`: tiered topology, migration frozen.
+    pub tier_static_ms: f64,
+    /// `cxl-tier`: tiered topology with hot-page migration.
+    pub tier_ms: f64,
+    pub promotions: u64,
+    pub migrated_bytes: u64,
+    pub tier_fast_ratio: f64,
+    pub static_fast_ratio: f64,
+}
+
+/// Aggregate result of [`tiering`].
+#[derive(Debug, Clone)]
+pub struct TierSweep {
+    pub rows: Vec<TierRow>,
+    /// Geomean of `cxl-hybrid` exec over `cxl-tier` exec across the
+    /// sweep (>1 means tiering beats the static split).
+    pub tier_speedup_over_hybrid: f64,
+    /// Geomean of `cxl-tier-static` over `cxl-tier` (isolates the
+    /// migration engine from the interleaved topology).
+    pub tier_speedup_over_static: f64,
+}
+
+/// Hot-fraction sweep: tiered hybrid vs. all-DRAM vs. all-SSD vs. the
+/// static hybrid split, over the `hot50..hot95` synthetics. The whole
+/// (fraction × config) grid runs as one flat parallel batch. Backs
+/// `benches/tiering.rs` → `BENCH_tiering.json`.
+pub fn tiering(scale: Scale, print: bool) -> TierSweep {
+    const CONFIGS: [(&str, MediaKind); 5] = [
+        ("cxl", MediaKind::Ddr5),
+        ("cxl-ds", MediaKind::Znand),
+        ("cxl-hybrid", MediaKind::Znand),
+        ("cxl-tier-static", MediaKind::Znand),
+        ("cxl-tier", MediaKind::Znand),
+    ];
+    let mut jobs: Vec<SweepJob> = Vec::new();
+    for w in HOT_SWEEP {
+        for (name, media) in CONFIGS {
+            let mut cfg = SystemConfig::named(name, media);
+            cfg.total_ops = scale.ssd_ops;
+            cfg.ssd_scale();
+            jobs.push((w, cfg));
+        }
+    }
+    let results = run_jobs(&jobs);
+
+    let mut rows = Vec::new();
+    for (wi, w) in HOT_SWEEP.iter().enumerate() {
+        let cell = |ci: usize| &results[wi * CONFIGS.len() + ci];
+        let PatternKind::HotCold { hot_permille, .. } = w.pattern else {
+            unreachable!("HOT_SWEEP entries use the HotCold pattern");
+        };
+        let tier = cell(4);
+        rows.push(TierRow {
+            hot_permille,
+            all_dram_ms: cell(0).metrics.exec_ms(),
+            all_ssd_ms: cell(1).metrics.exec_ms(),
+            hybrid_ms: cell(2).metrics.exec_ms(),
+            tier_static_ms: cell(3).metrics.exec_ms(),
+            tier_ms: tier.metrics.exec_ms(),
+            promotions: tier.metrics.tier_promotions,
+            migrated_bytes: tier.metrics.tier_migrated_bytes,
+            tier_fast_ratio: tier.metrics.tier_fast_ratio(),
+            static_fast_ratio: cell(3).metrics.tier_fast_ratio(),
+        });
+    }
+    let geo = |f: &dyn Fn(&TierRow) -> f64| -> f64 {
+        (rows.iter().map(|r| f(r).ln()).sum::<f64>() / rows.len().max(1) as f64).exp()
+    };
+    let res = TierSweep {
+        tier_speedup_over_hybrid: geo(&|r| r.hybrid_ms / r.tier_ms),
+        tier_speedup_over_static: geo(&|r| r.tier_static_ms / r.tier_ms),
+        rows,
+    };
+    if print {
+        let mut t = Table::new(
+            "Tiering — hot-fraction sweep (exec ms; hybrid ports on Z-NAND)",
+            &[
+                "hot%", "all-DRAM", "all-SSD", "hybrid", "tier-static", "tier",
+                "promoted", "fast-tier hits",
+            ],
+        );
+        for r in &res.rows {
+            t.rowv(vec![
+                format!("{:.0}%", r.hot_permille as f64 / 10.0),
+                format!("{:.2}", r.all_dram_ms),
+                format!("{:.2}", r.all_ssd_ms),
+                format!("{:.2}", r.hybrid_ms),
+                format!("{:.2}", r.tier_static_ms),
+                format!("{:.2}", r.tier_ms),
+                format!("{} pages", r.promotions),
+                format!("{:.0}% (static {:.0}%)", r.tier_fast_ratio * 100.0,
+                    r.static_fast_ratio * 100.0),
+            ]);
+        }
+        t.print();
+        println!(
+            "tiered hybrid over static hybrid: {} geomean; over frozen-placement ablation: {}",
+            ratio(res.tier_speedup_over_hybrid),
+            ratio(res.tier_speedup_over_static),
         );
     }
     res

@@ -55,6 +55,18 @@ pub struct RunMetrics {
     pub gc_episodes: u64,
     /// Speculative reads issued.
     pub sr_issued: u64,
+    /// Tiering: pages promoted slow→fast (DESIGN.md §12).
+    pub tier_promotions: u64,
+    /// Tiering: pages demoted fast→slow.
+    pub tier_demotions: u64,
+    /// Tiering: bytes moved by the migration engine (both directions).
+    pub tier_migrated_bytes: u64,
+    /// Tiering: expander accesses decoded to a fast-tier (DRAM) frame.
+    pub tier_fast_accesses: u64,
+    /// Tiering: expander accesses decoded to a slow-tier (SSD) frame.
+    pub tier_slow_accesses: u64,
+    /// Tiering: epoch scans performed.
+    pub tier_epochs: u64,
     /// Simulation events processed (perf metric).
     pub events: u64,
     /// Host wall-clock for the run, nanoseconds (perf metric).
@@ -77,6 +89,17 @@ impl RunMetrics {
     /// Simulated exec time in milliseconds.
     pub fn exec_ms(&self) -> f64 {
         ps_to_ns(self.exec_time) / 1e6
+    }
+
+    /// Fraction of tier-tracked expander accesses served by the fast
+    /// (DRAM) tier; 0 when the run had no tiering subsystem.
+    pub fn tier_fast_ratio(&self) -> f64 {
+        let total = self.tier_fast_accesses + self.tier_slow_accesses;
+        if total == 0 {
+            0.0
+        } else {
+            self.tier_fast_accesses as f64 / total as f64
+        }
     }
 
     /// Events per wall second (simulator throughput).
@@ -129,5 +152,16 @@ mod tests {
     fn summary_line_formats() {
         let m = RunMetrics::default();
         assert!(m.summary_line().contains("exec"));
+    }
+
+    #[test]
+    fn tier_fast_ratio_handles_zero_and_computes() {
+        assert_eq!(RunMetrics::default().tier_fast_ratio(), 0.0);
+        let m = RunMetrics {
+            tier_fast_accesses: 9,
+            tier_slow_accesses: 1,
+            ..Default::default()
+        };
+        assert!((m.tier_fast_ratio() - 0.9).abs() < 1e-12);
     }
 }

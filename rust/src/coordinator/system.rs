@@ -32,6 +32,8 @@ enum Ev {
     Fill { line: u64, issued: Time },
     /// Background DS flush tick.
     FlushTick,
+    /// Tiering epoch boundary: scan access counters, run migrations.
+    TierTick,
 }
 
 /// Memory backend behind the system bus.
@@ -130,7 +132,16 @@ impl System {
                     })
                     .collect();
                 let mut rc = RootComplex::new(ports);
-                rc.enumerate(expander).expect("HDM enumeration");
+                if cfg.tier.enabled {
+                    // Tiered topology: media-grouped, way-interleaved HDM
+                    // windows (DRAM tier first) plus the hot-page tracker.
+                    let fast = rc
+                        .enumerate_interleaved(expander, cfg.tier.gran_bits)
+                        .expect("tiered HDM enumeration");
+                    rc.attach_tiering(cfg.tier, fast, expander);
+                } else {
+                    rc.enumerate(expander).expect("HDM enumeration");
+                }
                 Backend::Cxl(rc)
             }
         };
@@ -165,6 +176,12 @@ impl System {
         }
         if self.cfg.ds_enabled {
             self.q.push_at(10 * US, Ev::FlushTick);
+        }
+        if self.cfg.tier.enabled
+            && self.cfg.tier.migrate
+            && matches!(self.backend, Backend::Cxl(_))
+        {
+            self.q.push_at(self.cfg.tier.epoch, Ev::TierTick);
         }
 
         while let Some((now, ev)) = self.q.pop() {
@@ -208,6 +225,14 @@ impl System {
                         self.q.push_in(10 * US, Ev::FlushTick);
                     }
                 }
+                Ev::TierTick => {
+                    if let Backend::Cxl(rc) = &mut self.backend {
+                        rc.tier_tick(now, &mut self.rng);
+                    }
+                    if self.active_warps > 0 {
+                        self.q.push_in(self.cfg.tier.epoch, Ev::TierTick);
+                    }
+                }
             }
             if self.active_warps == 0 {
                 break;
@@ -224,6 +249,14 @@ impl System {
                 for p in &rc.ports {
                     self.metrics.sr_issued += p.sr.stats.sr_issued;
                     self.metrics.ds_intercepts += p.ds.stats.read_intercepts;
+                }
+                if let Some(t) = &rc.tier {
+                    self.metrics.tier_promotions = t.stats.promotions;
+                    self.metrics.tier_demotions = t.stats.demotions;
+                    self.metrics.tier_migrated_bytes = t.stats.migrated_bytes;
+                    self.metrics.tier_fast_accesses = t.stats.fast_accesses;
+                    self.metrics.tier_slow_accesses = t.stats.slow_accesses;
+                    self.metrics.tier_epochs = t.stats.epochs;
                 }
             }
             Backend::Uvm(u) => self.metrics.faults = u.stats.faults,
@@ -547,6 +580,41 @@ mod tests {
         assert_eq!(a.exec_time, b.exec_time);
         assert_eq!(a.expander_loads, b.expander_loads);
         assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn tier_migration_promotes_hot_pages_onto_the_fast_tier() {
+        let mut c = tiny("cxl-tier", MediaKind::Znand);
+        c.total_ops = 24_000;
+        // Keep the 1 MiB hot set out of the LLC so the tracker sees it.
+        c.llc.capacity = 128 << 10;
+        let mut s = c.clone();
+        s.name = "cxl-tier-static".into();
+        s.tier.migrate = false;
+        let tiered = System::new(spec("hot90"), &c).run();
+        let frozen = System::new(spec("hot90"), &s).run();
+        assert!(tiered.tier_epochs > 0, "epoch ticks must fire");
+        assert!(tiered.tier_promotions > 0, "hot SSD pages must be promoted");
+        assert_eq!(tiered.tier_promotions, tiered.tier_demotions, "swaps are symmetric");
+        assert_eq!(frozen.tier_promotions, 0, "the static ablation never migrates");
+        assert!(
+            tiered.tier_fast_ratio() > frozen.tier_fast_ratio(),
+            "migration must raise the fast-tier hit ratio: {:.3} vs {:.3}",
+            tiered.tier_fast_ratio(),
+            frozen.tier_fast_ratio()
+        );
+    }
+
+    #[test]
+    fn tier_runs_are_deterministic() {
+        let mut c = tiny("cxl-tier", MediaKind::Znand);
+        c.llc.capacity = 128 << 10;
+        let a = System::new(spec("hot90"), &c).run();
+        let b = System::new(spec("hot90"), &c).run();
+        assert_eq!(a.exec_time, b.exec_time);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.tier_promotions, b.tier_promotions);
+        assert_eq!(a.tier_migrated_bytes, b.tier_migrated_bytes);
     }
 
     #[test]

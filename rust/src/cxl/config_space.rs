@@ -81,7 +81,7 @@ impl ConfigSpace {
     }
 
     /// Decode a register image read back over CXL.io (the inverse of
-    /// [`read_dword`], as the firmware reconstructs it).
+    /// [`Self::read_dword`], as the firmware reconstructs it).
     pub fn from_dwords(d0: u32, d1: u32, d2: u32, d3: u32, media: MediaKind) -> ConfigSpace {
         ConfigSpace {
             vendor_id: (d0 & 0xFFFF) as u16,

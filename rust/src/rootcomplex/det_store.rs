@@ -38,6 +38,9 @@ pub struct DsStats {
     pub flushed: u64,
     pub read_intercepts: u64,
     pub max_stack_bytes: u64,
+    /// Entries dropped because a page migration subsumed them
+    /// ([`DetStoreEngine::invalidate_range`]).
+    pub invalidated: u64,
 }
 
 /// The per-port DS engine.
@@ -155,6 +158,31 @@ impl DetStoreEngine {
         }
     }
 
+    /// Drop every buffered line whose address falls in `[lo, hi)`.
+    ///
+    /// Used by the tiering engine when it migrates the underlying frame:
+    /// the page copy carries the freshest (GPU-memory-resident) data to
+    /// the page's new location, so the buffered entries are subsumed by
+    /// the migration transfer — and after the frame swap the same device
+    /// addresses belong to a *different* page, which stale entries must
+    /// not intercept. Returns the bytes dropped.
+    pub fn invalidate_range(&mut self, lo: u64, hi: u64) -> u64 {
+        let mut dropped = 0;
+        while let Some(line) = self.sram.ceiling(lo) {
+            if line >= hi {
+                break;
+            }
+            let len = self.sram.remove(line).expect("ceiling key present");
+            self.stack_bytes -= len;
+            dropped += len;
+            self.stats.invalidated += 1;
+            if let Some(pos) = self.stack.iter().rposition(|&(l, _)| l == line) {
+                self.stack.swap_remove(pos);
+            }
+        }
+        dropped
+    }
+
     /// Consistency probe for property tests: buffered accounting matches.
     pub fn check_invariants(&self) -> Result<(), String> {
         self.sram.check_invariants().map_err(|e| format!("sram rbtree: {e}"))?;
@@ -259,6 +287,25 @@ mod tests {
         assert_eq!(batch[0], (0x0, 64));
         e.flush_batch_into(0, &mut batch);
         assert!(batch.is_empty(), "max=0 leaves a cleared buffer");
+    }
+
+    #[test]
+    fn invalidate_range_drops_only_covered_lines() {
+        let mut e = engine();
+        for addr in [0x1000u64, 0x2000, 0x3000] {
+            e.on_store(0, addr, 64, DevLoad::Severe);
+        }
+        let dropped = e.invalidate_range(0x1000, 0x3000);
+        assert_eq!(dropped, 128, "two 64 B lines covered");
+        assert_eq!(e.buffered_entries(), 1);
+        assert_eq!(e.buffered_bytes(), 64);
+        assert!(!e.intercept_read(0x1000), "invalidated line must not intercept");
+        assert!(!e.intercept_read(0x2000));
+        assert!(e.intercept_read(0x3000), "uncovered line survives");
+        assert_eq!(e.stats.invalidated, 2);
+        e.check_invariants().unwrap();
+        // Empty range is a no-op.
+        assert_eq!(e.invalidate_range(0x5000, 0x6000), 0);
     }
 
     #[test]

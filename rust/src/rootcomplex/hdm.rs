@@ -4,22 +4,133 @@
 //! their HDM capability registers, and programs the host bridge's HDM
 //! decoder with each root port's base/size (Fig. 5a). At run time every
 //! expander request consults this decoder to pick its port.
+//!
+//! Windows come in two flavours, mirroring the CXL HDM decoder's IW/IG
+//! fields:
+//!
+//! * **Direct** ([`HdmEntry::direct`]) — one port owns the whole window;
+//!   the decoded device address is simply `hpa - base`. This is the
+//!   seed's behaviour and what [`super::RootComplex::enumerate`] programs.
+//! * **Interleaved** ([`HdmEntry::interleaved`]) — 2/4/8 same-media ports
+//!   stripe the window at a power-of-two granularity (IG). Consecutive
+//!   granules rotate across the target list (IW), so a dense request
+//!   stream engages every port's queue and media in parallel — this is
+//!   how multi-port DRAM configurations turn port fan-out into bandwidth.
+//!
+//! Interleave math (the CXL HPA→DPA convention, with the window base
+//! subtracted first): for window offset `o`, the way is
+//! `(o >> IG) % IW` and the device address drops the way-selector bits:
+//! `dpa = ((o >> (IG + log2 IW)) << IG) | (o & (2^IG - 1))`.
 
-/// One root port's HDM window.
+/// Upper bound on interleave ways per window (CXL supports up to 8-way
+/// power-of-two interleaving at the host bridge, which is all this model
+/// needs; a fixed-size target array keeps [`HdmEntry`] `Copy`).
+pub const MAX_INTERLEAVE_WAYS: usize = 8;
+
+/// One HDM window: a `[base, base+size)` HPA range owned by one port
+/// (direct) or striped across 2/4/8 ports (interleaved).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct HdmEntry {
-    pub port: usize,
     pub base: u64,
+    /// Total window bytes across all ways.
     pub size: u64,
+    /// Target root ports, one per way; only the first [`HdmEntry::ways`]
+    /// entries are meaningful.
+    pub targets: [usize; MAX_INTERLEAVE_WAYS],
+    /// Interleave ways (IW): 1 (direct), 2, 4 or 8.
+    pub ways: usize,
+    /// Interleave granularity (IG) as log2 bytes; ignored for direct
+    /// windows.
+    pub gran_bits: u32,
+    /// Device-address offset added to every decoded DPA. Lets a port own
+    /// several windows without their device-address ranges aliasing
+    /// (e.g. the direct remainder window behind an interleaved bulk
+    /// window starts its DPAs where the bulk's per-way span ends).
+    pub dpa_base: u64,
 }
 
 impl HdmEntry {
+    /// A direct (non-interleaved) window owned entirely by `port`.
+    pub fn direct(port: usize, base: u64, size: u64) -> HdmEntry {
+        let mut targets = [0usize; MAX_INTERLEAVE_WAYS];
+        targets[0] = port;
+        HdmEntry { base, size, targets, ways: 1, gran_bits: 0, dpa_base: 0 }
+    }
+
+    /// A window striped across `ports` (2, 4 or 8 of them) at
+    /// `1 << gran_bits` bytes per granule.
+    pub fn interleaved(ports: &[usize], base: u64, size: u64, gran_bits: u32) -> HdmEntry {
+        assert!(
+            matches!(ports.len(), 2 | 4 | 8),
+            "interleave ways must be 2/4/8, got {}",
+            ports.len()
+        );
+        let mut targets = [0usize; MAX_INTERLEAVE_WAYS];
+        targets[..ports.len()].copy_from_slice(ports);
+        HdmEntry { base, size, targets, ways: ports.len(), gran_bits, dpa_base: 0 }
+    }
+
+    /// Offset every decoded DPA by `dpa_base` (see the field docs).
+    pub fn with_dpa_base(mut self, dpa_base: u64) -> HdmEntry {
+        self.dpa_base = dpa_base;
+        self
+    }
+
+    /// Exclusive end of the window. Saturating: [`HdmDecoder::program`]
+    /// rejects windows whose true end would wrap past the address space,
+    /// so a saturated value can only be observed on hand-built entries.
     pub fn end(&self) -> u64 {
-        self.base + self.size
+        self.base.saturating_add(self.size)
     }
 
     pub fn contains(&self, hpa: u64) -> bool {
         (self.base..self.end()).contains(&hpa)
+    }
+
+    /// The single owner of a direct window (first target).
+    pub fn port(&self) -> usize {
+        self.targets[0]
+    }
+
+    /// Bytes decoded to each way.
+    pub fn per_way(&self) -> u64 {
+        self.size / self.ways as u64
+    }
+
+    /// One full rotation of the interleave pattern, in bytes.
+    fn stripe(&self) -> u64 {
+        (self.ways as u64) << self.gran_bits
+    }
+
+    /// Decode an in-window HPA to (port, device address).
+    pub fn decode_at(&self, hpa: u64) -> (usize, u64) {
+        debug_assert!(self.contains(hpa));
+        let off = hpa - self.base;
+        if self.ways == 1 {
+            return (self.targets[0], self.dpa_base + off);
+        }
+        let way = ((off >> self.gran_bits) as usize) & (self.ways - 1);
+        let gran_mask = (1u64 << self.gran_bits) - 1;
+        let way_bits = self.ways.trailing_zeros();
+        let dpa = ((off >> (self.gran_bits + way_bits)) << self.gran_bits) | (off & gran_mask);
+        (self.targets[way], self.dpa_base + dpa)
+    }
+
+    /// Inverse of [`HdmEntry::decode_at`]: the HPA that decodes to
+    /// `(targets[way], dpa)`. Used by firmware sanity checks and the
+    /// round-trip property test.
+    pub fn hpa_of(&self, way: usize, dpa: u64) -> u64 {
+        let dpa = dpa - self.dpa_base;
+        if self.ways == 1 {
+            return self.base + dpa;
+        }
+        debug_assert!(way < self.ways);
+        let gran_mask = (1u64 << self.gran_bits) - 1;
+        let way_bits = self.ways.trailing_zeros();
+        self.base
+            + (((dpa >> self.gran_bits) << (self.gran_bits + way_bits))
+                | ((way as u64) << self.gran_bits)
+                | (dpa & gran_mask))
     }
 }
 
@@ -34,19 +145,67 @@ impl HdmDecoder {
         HdmDecoder { entries: Vec::new() }
     }
 
-    /// Program a window. Firmware runs once at init, so overlaps are a
-    /// programming error and rejected.
+    /// Program a window. Firmware runs once at init, so malformed windows
+    /// are a programming error and rejected: zero size, an end that wraps
+    /// the 64-bit address space, a non-power-of-two way count, a size
+    /// that doesn't stripe evenly, duplicate targets, or any overlap with
+    /// an already-programmed window.
     pub fn program(&mut self, entry: HdmEntry) -> Result<(), String> {
         if entry.size == 0 {
             return Err("zero-size HDM window".into());
         }
-        for e in &self.entries {
-            if entry.base < e.end() && e.base < entry.end() {
+        // `base + size` must not wrap: a window reaching past u64::MAX
+        // would make `end()` alias low addresses and corrupt routing.
+        let end = entry
+            .base
+            .checked_add(entry.size)
+            .ok_or_else(|| {
+                format!(
+                    "HDM window [{:#x}, +{:#x}) wraps the address space",
+                    entry.base, entry.size
+                )
+            })?;
+        if entry.dpa_base.checked_add(entry.size).is_none() {
+            return Err(format!(
+                "device-address range [{:#x}, +{:#x}) wraps",
+                entry.dpa_base, entry.size
+            ));
+        }
+        if !matches!(entry.ways, 1 | 2 | 4 | 8) {
+            return Err(format!("interleave ways must be 1/2/4/8, got {}", entry.ways));
+        }
+        if entry.ways > 1 {
+            if !(6..=16).contains(&entry.gran_bits) {
                 return Err(format!(
-                    "HDM window [{:#x},{:#x}) overlaps port {} window [{:#x},{:#x})",
+                    "interleave granularity 2^{} out of the 64B..64KiB range",
+                    entry.gran_bits
+                ));
+            }
+            if entry.size % entry.stripe() != 0 {
+                return Err(format!(
+                    "window size {:#x} not a multiple of the {}x{:#x} stripe",
+                    entry.size,
+                    entry.ways,
+                    1u64 << entry.gran_bits
+                ));
+            }
+            for i in 0..entry.ways {
+                for j in (i + 1)..entry.ways {
+                    if entry.targets[i] == entry.targets[j] {
+                        return Err(format!(
+                            "duplicate interleave target port {}",
+                            entry.targets[i]
+                        ));
+                    }
+                }
+            }
+        }
+        for e in &self.entries {
+            if entry.base < e.end() && e.base < end {
+                return Err(format!(
+                    "HDM window [{:#x},{:#x}) overlaps window [{:#x},{:#x})",
                     entry.base,
-                    entry.end(),
-                    e.port,
+                    end,
                     e.base,
                     e.end()
                 ));
@@ -57,7 +216,7 @@ impl HdmDecoder {
         Ok(())
     }
 
-    /// Decode an HPA to (port, offset-within-window).
+    /// Decode an HPA to (port, device address within that port's HDM).
     pub fn decode(&self, hpa: u64) -> Option<(usize, u64)> {
         // Binary search over sorted bases.
         let idx = self.entries.partition_point(|e| e.base <= hpa);
@@ -66,12 +225,13 @@ impl HdmDecoder {
         }
         let e = &self.entries[idx - 1];
         if e.contains(hpa) {
-            Some((e.port, hpa - e.base))
+            Some(e.decode_at(hpa))
         } else {
             None
         }
     }
 
+    /// The programmed windows, sorted by base.
     pub fn entries(&self) -> &[HdmEntry] {
         &self.entries
     }
@@ -89,8 +249,8 @@ mod tests {
     #[test]
     fn program_and_decode() {
         let mut d = HdmDecoder::new();
-        d.program(HdmEntry { port: 0, base: 0x0, size: 0x1000 }).unwrap();
-        d.program(HdmEntry { port: 1, base: 0x1000, size: 0x2000 }).unwrap();
+        d.program(HdmEntry::direct(0, 0x0, 0x1000)).unwrap();
+        d.program(HdmEntry::direct(1, 0x1000, 0x2000)).unwrap();
         assert_eq!(d.decode(0x0), Some((0, 0)));
         assert_eq!(d.decode(0xfff), Some((0, 0xfff)));
         assert_eq!(d.decode(0x1000), Some((1, 0)));
@@ -101,25 +261,107 @@ mod tests {
     #[test]
     fn rejects_overlap() {
         let mut d = HdmDecoder::new();
-        d.program(HdmEntry { port: 0, base: 0x1000, size: 0x1000 }).unwrap();
-        assert!(d.program(HdmEntry { port: 1, base: 0x1800, size: 0x1000 }).is_err());
-        assert!(d.program(HdmEntry { port: 1, base: 0x0, size: 0x1001 }).is_err());
-        assert!(d.program(HdmEntry { port: 1, base: 0x2000, size: 0 }).is_err());
+        d.program(HdmEntry::direct(0, 0x1000, 0x1000)).unwrap();
+        assert!(d.program(HdmEntry::direct(1, 0x1800, 0x1000)).is_err());
+        assert!(d.program(HdmEntry::direct(1, 0x0, 0x1001)).is_err());
+        assert!(d.program(HdmEntry::direct(1, 0x2000, 0)).is_err());
+    }
+
+    #[test]
+    fn rejects_wrapping_window() {
+        // Regression: `base + size` used to wrap silently, making `end()`
+        // alias low addresses. `program` must reject the window instead.
+        let mut d = HdmDecoder::new();
+        assert!(d.program(HdmEntry::direct(0, u64::MAX - 0xfff, 0x2000)).is_err());
+        assert!(d.program(HdmEntry::direct(0, u64::MAX, 1)).is_err());
+        // A window ending exactly at the top of the space is fine.
+        d.program(HdmEntry::direct(0, u64::MAX - 0x1000, 0x1000)).unwrap();
+        assert_eq!(d.decode(u64::MAX - 1), Some((0, 0xffe)));
     }
 
     #[test]
     fn gaps_decode_to_none() {
         let mut d = HdmDecoder::new();
-        d.program(HdmEntry { port: 0, base: 0x0, size: 0x100 }).unwrap();
-        d.program(HdmEntry { port: 1, base: 0x1000, size: 0x100 }).unwrap();
+        d.program(HdmEntry::direct(0, 0x0, 0x100)).unwrap();
+        d.program(HdmEntry::direct(1, 0x1000, 0x100)).unwrap();
         assert_eq!(d.decode(0x500), None);
     }
 
     #[test]
     fn total_size_sums_windows() {
         let mut d = HdmDecoder::new();
-        d.program(HdmEntry { port: 0, base: 0, size: 10 << 20 }).unwrap();
-        d.program(HdmEntry { port: 1, base: 10 << 20, size: 30 << 20 }).unwrap();
+        d.program(HdmEntry::direct(0, 0, 10 << 20)).unwrap();
+        d.program(HdmEntry::direct(1, 10 << 20, 30 << 20)).unwrap();
         assert_eq!(d.total_size(), 40 << 20);
+    }
+
+    #[test]
+    fn two_way_interleave_alternates_granules() {
+        let mut d = HdmDecoder::new();
+        // Ports 3 and 5, 2-way, 4 KiB granules, 64 KiB window.
+        d.program(HdmEntry::interleaved(&[3, 5], 0, 64 << 10, 12)).unwrap();
+        assert_eq!(d.decode(0x0000), Some((3, 0x0000)));
+        assert_eq!(d.decode(0x1000), Some((5, 0x0000)));
+        assert_eq!(d.decode(0x2000), Some((3, 0x1000)));
+        assert_eq!(d.decode(0x3000), Some((5, 0x1000)));
+        // Intra-granule offsets survive the way-bit removal.
+        assert_eq!(d.decode(0x3040), Some((5, 0x1040)));
+    }
+
+    #[test]
+    fn four_way_interleave_covers_each_port_equally() {
+        let mut d = HdmDecoder::new();
+        let e = HdmEntry::interleaved(&[0, 1, 2, 3], 0x10000, 64 << 10, 8);
+        d.program(e).unwrap();
+        let mut per_port = [0u64; 4];
+        for g in 0..(64 << 10) / 256 {
+            let (p, _) = d.decode(0x10000 + g * 256).unwrap();
+            per_port[p] += 1;
+        }
+        assert_eq!(per_port, [64, 64, 64, 64]);
+        assert_eq!(e.per_way(), 16 << 10);
+    }
+
+    #[test]
+    fn interleave_round_trips_through_hpa_of() {
+        let e = HdmEntry::interleaved(&[2, 7], 0x4000, 32 << 10, 10);
+        for way in 0..2 {
+            for dpa in [0u64, 0x3ff, 0x400, 0x1234, (16 << 10) - 1] {
+                let hpa = e.hpa_of(way, dpa);
+                assert!(e.contains(hpa), "{hpa:#x} outside the window");
+                assert_eq!(e.decode_at(hpa), (e.targets[way], dpa));
+            }
+        }
+    }
+
+    #[test]
+    fn dpa_base_offsets_the_decoded_device_address() {
+        let mut d = HdmDecoder::new();
+        // One port, two windows: the second continues the first's DPA
+        // space instead of aliasing it back to zero.
+        d.program(HdmEntry::direct(4, 0x0, 0x1000)).unwrap();
+        d.program(HdmEntry::direct(4, 0x1000, 0x800).with_dpa_base(0x1000)).unwrap();
+        assert_eq!(d.decode(0xfff), Some((4, 0xfff)));
+        assert_eq!(d.decode(0x1000), Some((4, 0x1000)));
+        assert_eq!(d.decode(0x17ff), Some((4, 0x17ff)));
+        let e = HdmEntry::direct(4, 0x1000, 0x800).with_dpa_base(0x1000);
+        assert_eq!(e.hpa_of(0, 0x1200), 0x1200);
+    }
+
+    #[test]
+    fn rejects_malformed_interleave() {
+        let mut d = HdmDecoder::new();
+        // Unaligned size (not a stripe multiple).
+        assert!(d
+            .program(HdmEntry::interleaved(&[0, 1], 0, (8 << 10) + 256, 12))
+            .is_err());
+        // Duplicate targets.
+        assert!(d.program(HdmEntry::interleaved(&[1, 1], 0, 8 << 10, 12)).is_err());
+        // Granularity out of range.
+        assert!(d.program(HdmEntry::interleaved(&[0, 1], 0, 8 << 10, 2)).is_err());
+        // 3-way rejected by program() on a hand-built entry.
+        let mut bad = HdmEntry::interleaved(&[0, 1], 0, 96 << 10, 12);
+        bad.ways = 3;
+        assert!(d.program(bad).is_err());
     }
 }

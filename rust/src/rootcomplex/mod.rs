@@ -4,35 +4,43 @@
 //! This module is the paper's *system contribution*: the piece that lets
 //! GPU compute units reach memory expanders with plain loads/stores, no
 //! host intervention — plus the two controller optimizations, SR
-//! ([`spec_read`]) and DS ([`det_store`]).
+//! ([`spec_read`]) and DS ([`det_store`]), and the tiering subsystem
+//! ([`tiering`]) that keeps hot pages on the DRAM ports of a
+//! heterogeneous (DRAM + SSD) topology.
 
 pub mod det_store;
 pub mod hdm;
 pub mod rbtree;
 pub mod rootport;
 pub mod spec_read;
+pub mod tiering;
 
 pub use det_store::{DetStoreEngine, DsStats, StoreAction};
-pub use hdm::{HdmDecoder, HdmEntry};
+pub use hdm::{HdmDecoder, HdmEntry, MAX_INTERLEAVE_WAYS};
 pub use rbtree::RbTree;
 pub use rootport::{EpBackend, LoadOutcome, LoadPath, PortStats, RootPort, StoreOutcome};
 pub use spec_read::{SpecReadEngine, SrPolicy, SrStats};
+pub use tiering::{TierConfig, TierStats, Tiering};
 
 use crate::sim::{Time, NS};
 use crate::util::prng::Pcg32;
 
-/// The root complex: host-bridge decode + port fan-out.
+/// The root complex: host-bridge decode + port fan-out, with an optional
+/// tiering layer between the HPA space and the HDM decoder.
 #[derive(Debug)]
 pub struct RootComplex {
     pub hdm: HdmDecoder,
     pub ports: Vec<RootPort>,
     /// Host-bridge + HDM-decode traversal cost.
     pub bridge_lat: Time,
+    /// Hot-page tracker + migration engine ([`tiering`]); `None` for the
+    /// statically-partitioned configurations.
+    pub tier: Option<Tiering>,
 }
 
 impl RootComplex {
     pub fn new(ports: Vec<RootPort>) -> RootComplex {
-        RootComplex { hdm: HdmDecoder::new(), ports, bridge_lat: 2 * NS }
+        RootComplex { hdm: HdmDecoder::new(), ports, bridge_lat: 2 * NS, tier: None }
     }
 
     /// Firmware init: carve the HDM space evenly across ports (the
@@ -77,18 +85,108 @@ impl RootComplex {
             if !cs.is_hdm_capable() {
                 return Err(format!("port {i}: EP is not HDM-capable"));
             }
-            self.hdm.program(HdmEntry { port: i, base, size: cs.hdm_size })?;
+            self.hdm.program(HdmEntry::direct(i, base, cs.hdm_size))?;
             base += cs.hdm_size;
         }
         Ok(())
     }
 
+    /// Firmware init for the tiered hybrid topology: group the ports by
+    /// media class (DRAM = fast tier, SSD = slow tier), give each group a
+    /// share of the `total` decode space proportional to its port count,
+    /// and stripe each group's window across its members with `2^gran_bits`
+    /// granules (IW/IG interleaving, [`hdm`]) — DRAM group first, so the
+    /// fast tier occupies the bottom of the decode space.
+    ///
+    /// Returns the fast-tier size in bytes (0 when every port is an SSD;
+    /// `total` when every port is DRAM). Group shares that don't divide
+    /// into whole stripes leave their remainder as a small direct window
+    /// on the group's first port, so the decode space covers exactly
+    /// `total` bytes. Non-power-of-two groups fall back to per-port
+    /// direct windows.
+    pub fn enumerate_interleaved(&mut self, total: u64, gran_bits: u32) -> Result<u64, String> {
+        let n = self.ports.len() as u64;
+        assert!(n > 0);
+        let fast: Vec<usize> =
+            (0..self.ports.len()).filter(|&i| !self.ports[i].backend.is_ssd()).collect();
+        let slow: Vec<usize> =
+            (0..self.ports.len()).filter(|&i| self.ports[i].backend.is_ssd()).collect();
+        // Proportional split; the slow group absorbs the rounding
+        // remainder so the decode space covers exactly `total` bytes
+        // (System panics on decode misses).
+        let fast_bytes = if slow.is_empty() {
+            total
+        } else if fast.is_empty() {
+            0
+        } else {
+            total * fast.len() as u64 / n
+        };
+        if fast_bytes > 0 {
+            self.program_group(&fast, 0, fast_bytes, gran_bits)?;
+        }
+        if total > fast_bytes {
+            self.program_group(&slow, fast_bytes, total - fast_bytes, gran_bits)?;
+        }
+        Ok(fast_bytes)
+    }
+
+    /// Program one media group's `[base, base+share)` window: one
+    /// interleaved entry for the stripe-aligned bulk (power-of-two
+    /// groups), direct per-port windows otherwise, and a direct remainder
+    /// window on the first port for any unaligned tail.
+    fn program_group(
+        &mut self,
+        group: &[usize],
+        base: u64,
+        share: u64,
+        gran_bits: u32,
+    ) -> Result<(), String> {
+        let ways = group.len();
+        if ways > 1 && ways.is_power_of_two() && ways <= MAX_INTERLEAVE_WAYS {
+            let stripe = (ways as u64) << gran_bits;
+            let aligned = share / stripe * stripe;
+            if aligned > 0 {
+                self.hdm.program(HdmEntry::interleaved(group, base, aligned, gran_bits))?;
+            }
+            if share > aligned {
+                // The tail window continues the first port's DPA space
+                // past the bulk window's per-way span — without the
+                // offset, DPA 0 would alias between the two windows.
+                self.hdm.program(
+                    HdmEntry::direct(group[0], base + aligned, share - aligned)
+                        .with_dpa_base(aligned / ways as u64),
+                )?;
+            }
+        } else {
+            let per = share / ways as u64;
+            let mut b = base;
+            for (k, &port) in group.iter().enumerate() {
+                let sz = if k + 1 == ways { base + share - b } else { per };
+                if sz > 0 {
+                    self.hdm.program(HdmEntry::direct(port, b, sz))?;
+                }
+                b += sz;
+            }
+        }
+        Ok(())
+    }
+
+    /// Attach the hot-page tracker + migration engine. `fast_bytes` is
+    /// what [`RootComplex::enumerate_interleaved`] returned.
+    pub fn attach_tiering(&mut self, cfg: TierConfig, fast_bytes: u64, total: u64) {
+        self.tier = Some(Tiering::new(cfg, fast_bytes, total));
+    }
+
     /// Route a load at HDM-relative address `hpa_off`.
     pub fn load(&mut self, now: Time, hpa_off: u64, len: u64) -> LoadOutcome {
+        let addr = match &mut self.tier {
+            Some(t) => t.translate(hpa_off),
+            None => hpa_off,
+        };
         let (port, off) = self
             .hdm
-            .decode(hpa_off)
-            .unwrap_or_else(|| panic!("HDM decode miss at {:#x}", hpa_off));
+            .decode(addr)
+            .unwrap_or_else(|| panic!("HDM decode miss at {:#x}", addr));
         let mut out = self.ports[port].load(now + self.bridge_lat, off, len);
         out.done += self.bridge_lat;
         out
@@ -96,13 +194,60 @@ impl RootComplex {
 
     /// Route a store at HDM-relative address `hpa_off`.
     pub fn store(&mut self, now: Time, hpa_off: u64, len: u64, rng: &mut Pcg32) -> StoreOutcome {
+        let addr = match &mut self.tier {
+            Some(t) => t.translate(hpa_off),
+            None => hpa_off,
+        };
         let (port, off) = self
             .hdm
-            .decode(hpa_off)
-            .unwrap_or_else(|| panic!("HDM decode miss at {:#x}", hpa_off));
+            .decode(addr)
+            .unwrap_or_else(|| panic!("HDM decode miss at {:#x}", addr));
         let mut out = self.ports[port].store(now + self.bridge_lat, off, len, rng);
         out.ack += self.bridge_lat;
         out
+    }
+
+    /// Epoch tick for the migration engine: scan the access counters,
+    /// then execute the planned swaps. Every transferred chunk goes
+    /// through [`RootPort::migrate`], consuming a memory-queue slot and
+    /// real media time on both the source and destination ports — the
+    /// bandwidth cost of tiering is charged, not assumed away.
+    pub fn tier_tick(&mut self, now: Time, rng: &mut Pcg32) {
+        let RootComplex { hdm, ports, tier, bridge_lat } = self;
+        let Some(t) = tier.as_mut() else { return };
+        t.plan_epoch();
+        let page = t.config().page_bytes;
+        // Move data in granule-sized chunks so interleaved frames charge
+        // every port in their stripe.
+        let chunk = page.min(1u64 << t.config().gran_bits);
+        while let Some((hot_page, cold_page)) = t.pop_move() {
+            let hot_frame = t.frame_base(hot_page);
+            let cold_frame = t.frame_base(cold_page);
+            let start = now + *bridge_lat;
+            let mut off = 0;
+            while off < page {
+                let (sp, s_dpa) = hdm
+                    .decode(hot_frame + off)
+                    .unwrap_or_else(|| panic!("tier decode miss at {:#x}", hot_frame + off));
+                let (fp, f_dpa) = hdm
+                    .decode(cold_frame + off)
+                    .unwrap_or_else(|| panic!("tier decode miss at {:#x}", cold_frame + off));
+                // Any DS-buffered lines in either frame are subsumed by
+                // the page copy (which carries the freshest data) and
+                // must not intercept reads of the page that will occupy
+                // these device addresses after the swap.
+                ports[sp].ds.invalidate_range(s_dpa, s_dpa + chunk);
+                ports[fp].ds.invalidate_range(f_dpa, f_dpa + chunk);
+                // Promotion leg: slow read → fast write.
+                ports[sp].migrate(start, s_dpa, chunk, false, rng);
+                ports[fp].migrate(start, f_dpa, chunk, true, rng);
+                // Demotion leg: fast read → slow write.
+                ports[fp].migrate(start, f_dpa, chunk, false, rng);
+                ports[sp].migrate(start, s_dpa, chunk, true, rng);
+                off += chunk;
+            }
+            t.commit_swap(hot_page, cold_page);
+        }
     }
 
     /// Background DS flush across ports.
@@ -122,7 +267,7 @@ impl RootComplex {
 mod tests {
     use super::*;
     use crate::cxl::ControllerKind;
-    use crate::media::{DramModel, DramTimings};
+    use crate::media::{DramModel, DramTimings, SsdModel, SsdParams};
 
     fn complex(nports: usize) -> RootComplex {
         let ports = (0..nports)
@@ -140,6 +285,21 @@ mod tests {
         let mut rc = RootComplex::new(ports);
         rc.enumerate(64 << 20).unwrap();
         rc
+    }
+
+    /// Alternating DRAM/SSD ports (the hybrid topology).
+    fn hybrid(nports: usize) -> RootComplex {
+        let ports = (0..nports)
+            .map(|i| {
+                let ep = if i % 2 == 0 {
+                    EpBackend::Dram(DramModel::new(DramTimings::ddr5_5600()))
+                } else {
+                    EpBackend::Ssd(SsdModel::new(SsdParams::znand()))
+                };
+                RootPort::new(i, ControllerKind::Panmnesia, ep, SrPolicy::Off, false, 0)
+            })
+            .collect();
+        RootComplex::new(ports)
     }
 
     #[test]
@@ -182,5 +342,119 @@ mod tests {
     fn out_of_range_panics() {
         let mut rc = complex(1);
         rc.load(0, 128 << 20, 64);
+    }
+
+    #[test]
+    fn interleaved_enumeration_splits_tiers_dram_first() {
+        let mut rc = hybrid(4);
+        let total = 64u64 << 20;
+        let fast = rc.enumerate_interleaved(total, 12).unwrap();
+        assert_eq!(fast, 32 << 20, "2 of 4 ports are DRAM: half the space is fast");
+        assert_eq!(rc.hdm.total_size(), total, "decode space must cover the expander");
+        // Bottom half stripes over the DRAM ports (0, 2), top half over
+        // the SSD ports (1, 3).
+        assert_eq!(rc.hdm.decode(0).unwrap().0, 0);
+        assert_eq!(rc.hdm.decode(4 << 10).unwrap().0, 2);
+        let (p_lo, _) = rc.hdm.decode(32 << 20).unwrap();
+        assert!(p_lo == 1 || p_lo == 3);
+        for probe in 0..64u64 {
+            let (p, _) = rc.hdm.decode(probe * (1 << 20)).unwrap();
+            if probe < 32 {
+                assert!(p % 2 == 0, "fast half decoded to SSD port {p}");
+            } else {
+                assert!(p % 2 == 1, "slow half decoded to DRAM port {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_enumeration_stripes_bandwidth() {
+        let mut rc = hybrid(4);
+        rc.enumerate_interleaved(64 << 20, 12).unwrap();
+        // A dense 64 KiB scan of the fast tier must hit both DRAM ports.
+        for g in 0..16u64 {
+            rc.load(0, g * 4096, 64);
+        }
+        assert_eq!(rc.ports[0].stats.loads, 8);
+        assert_eq!(rc.ports[2].stats.loads, 8);
+    }
+
+    #[test]
+    fn unaligned_group_tail_does_not_alias_device_addresses() {
+        let mut rc = hybrid(4); // DRAM ports 0/2, SSD ports 1/3
+        // Fast share = 1 MiB + 4 KiB: the 4 KiB tail can't stripe over
+        // the two DRAM ports, so it becomes a direct window on port 0 —
+        // whose DPAs must continue past the bulk window's per-way span
+        // (512 KiB), not restart at zero.
+        let total = (2 << 20) + (8 << 10);
+        let fast = rc.enumerate_interleaved(total, 12).unwrap();
+        assert_eq!(fast, (1 << 20) + (4 << 10));
+        assert_eq!(rc.hdm.total_size(), total, "decode space must cover the expander");
+        assert_eq!(rc.hdm.decode(0), Some((0, 0)));
+        // Tail starts at the stripe-aligned bulk's end (1 MiB).
+        let (pt, dpat) = rc.hdm.decode(1 << 20).unwrap();
+        assert_eq!(pt, 0, "tail stays on the group's first port");
+        assert_eq!(
+            dpat,
+            (1 << 20) / 2,
+            "tail DPAs continue past the bulk per-way span"
+        );
+    }
+
+    #[test]
+    fn all_dram_group_interleaves_every_port() {
+        let mut rc = complex(4);
+        rc.hdm = HdmDecoder::new();
+        let fast = rc.enumerate_interleaved(64 << 20, 12).unwrap();
+        assert_eq!(fast, 64 << 20, "homogeneous DRAM: everything is fast tier");
+        let mut seen = [false; 4];
+        for g in 0..8u64 {
+            seen[rc.hdm.decode(g * 4096).unwrap().0] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "4-way stripe must touch all ports: {seen:?}");
+    }
+
+    #[test]
+    fn tiered_migration_moves_hot_page_to_dram_and_charges_ports() {
+        let mut rc = hybrid(2); // port 0 DRAM, port 1 SSD
+        let total = 4u64 << 20;
+        let fast = rc.enumerate_interleaved(total, 12).unwrap();
+        assert_eq!(fast, 2 << 20);
+        let cfg = TierConfig { enabled: true, migrate: true, ..TierConfig::default() };
+        rc.attach_tiering(cfg, fast, total);
+        let mut rng = Pcg32::new(9, 9);
+        // Hammer one slow-tier page.
+        let hot = 3u64 << 20;
+        for i in 0..32 {
+            rc.load(i * 1000, hot + (i % 4) * 64, 64);
+        }
+        assert!(rc.ports[1].stats.loads > 0, "hot page starts on the SSD port");
+        let before = rc.ports[0].stats.migrations + rc.ports[1].stats.migrations;
+        assert_eq!(before, 0);
+        rc.tier_tick(1_000_000, &mut rng);
+        let t = rc.tier.as_ref().unwrap();
+        assert_eq!(t.stats.promotions, 1);
+        assert!(rc.ports[0].stats.migrations > 0, "DRAM port must absorb the migration");
+        assert!(rc.ports[1].stats.migrations > 0, "SSD port must source the migration");
+        // Post-migration, the same HPA routes to the DRAM port.
+        let dram_loads = rc.ports[0].stats.loads;
+        rc.load(10_000_000, hot, 64);
+        assert_eq!(rc.ports[0].stats.loads, dram_loads + 1);
+    }
+
+    #[test]
+    fn static_tiering_counts_but_never_migrates() {
+        let mut rc = hybrid(2);
+        let total = 4u64 << 20;
+        let fast = rc.enumerate_interleaved(total, 12).unwrap();
+        let cfg = TierConfig { enabled: true, migrate: false, ..TierConfig::default() };
+        rc.attach_tiering(cfg, fast, total);
+        for i in 0..32 {
+            rc.load(i * 1000, (3u64 << 20) + (i % 4) * 64, 64);
+        }
+        // The ablation never ticks; placement stays frozen.
+        let t = rc.tier.as_ref().unwrap();
+        assert_eq!(t.stats.promotions, 0);
+        assert!(t.stats.slow_accesses > 0);
     }
 }

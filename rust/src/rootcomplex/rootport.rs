@@ -63,23 +63,37 @@ pub struct StoreOutcome {
     pub buffered: bool,
 }
 
+/// Per-port counters harvested into `RunMetrics` after a run.
 #[derive(Debug, Default, Clone)]
 pub struct PortStats {
+    /// Demand loads serviced (including DS intercepts).
     pub loads: u64,
+    /// Stores serviced (buffered, dual-written or blocked).
     pub stores: u64,
+    /// End-to-end demand-load latency distribution.
     pub load_latency: Summary,
+    /// Store ack latency distribution.
     pub store_latency: Summary,
+    /// DevLoad observations in the Severe class.
     pub devload_severe_seen: u64,
+    /// Requests that had to wait for a memory-queue slot.
     pub queue_full_waits: u64,
+    /// Background tiering transfers serviced ([`RootPort::migrate`]).
+    pub migrations: u64,
 }
 
 /// One CXL root port with its endpoint.
 #[derive(Debug)]
 pub struct RootPort {
+    /// Port index within the root complex (HDM decode target id).
     pub id: usize,
+    /// The CXL controller pair's latency model (both link legs).
     pub ctrl: CxlController,
+    /// The endpoint behind this port (DRAM- or SSD-backed).
     pub backend: EpBackend,
+    /// Speculative Read engine (MemSpecRd hints into the EP cache).
     pub sr: SpecReadEngine,
+    /// Deterministic Store engine (GPU-memory store buffering).
     pub ds: DetStoreEngine,
     /// Memory-queue slots: completion time of the request occupying each.
     slots: Vec<Time>,
@@ -291,6 +305,38 @@ impl RootPort {
         }
     }
 
+    /// Service one background tiering transfer of `len` bytes at
+    /// EP-relative address `addr` (read when `is_write` is false).
+    ///
+    /// Migration traffic rides the same machinery as demand traffic — a
+    /// memory-queue slot, the controller's request/response legs, and
+    /// real media time — so page movement contends with (and delays)
+    /// demand requests instead of teleporting. It deliberately bypasses
+    /// the SR and DS engines: a DMA-style mover neither speculates nor
+    /// needs deterministic acks, and its addresses must not pollute the
+    /// SR window detector. Returns the transfer's completion time.
+    pub fn migrate(&mut self, now: Time, addr: u64, len: u64, is_write: bool, rng: &mut Pcg32) -> Time {
+        self.stats.migrations += 1;
+        let (slot, start) = self.acquire_slot(now);
+        let op = if is_write { MemOpcode::MemWr } else { MemOpcode::MemRd };
+        let flit = Flit { op, addr, len, issued_at: start, req_id: 0 };
+        let at_ep = start + self.ctrl.request_leg(&flit);
+        let media_done = match &mut self.backend {
+            EpBackend::Dram(d) => d.access(at_ep, addr, len, is_write),
+            EpBackend::Ssd(s) => {
+                if is_write {
+                    s.write(at_ep, addr, len, rng)
+                } else {
+                    s.settle_prefetches(at_ep);
+                    s.read(at_ep, addr, len).0
+                }
+            }
+        };
+        let done = media_done + self.ctrl.response_leg(&flit);
+        self.slots[slot] = done;
+        done
+    }
+
     /// Background flush step: if the EP has recovered and the DS stack is
     /// non-empty, forward up to `batch` buffered lines. Returns the time
     /// the batch completes (slots are consumed like normal writes), or
@@ -444,6 +490,21 @@ mod tests {
         let done = p.flush_step(gc_end + 1, 8, &mut rng);
         assert!(done.is_some());
         assert_eq!(p.ds.buffered_entries(), 0);
+    }
+
+    #[test]
+    fn migration_occupies_queue_slots_and_media_time() {
+        let mut rng = Pcg32::new(5, 5);
+        let mut p = ssd_port(SrPolicy::Off, false);
+        let done = p.migrate(0, 0x4000, 4096, false, &mut rng);
+        assert!(done >= 3 * US, "SSD page read must pay media latency: {done}");
+        assert_eq!(p.stats.migrations, 1);
+        assert_eq!(p.stats.loads, 0, "migration is not demand traffic");
+        // Saturate the queue with migrations: demand sees backpressure.
+        for i in 0..MEM_QUEUE_CAP as u64 + 4 {
+            p.migrate(0, 0x100000 + i * 4096, 4096, false, &mut rng);
+        }
+        assert!(p.stats.queue_full_waits >= 1);
     }
 
     #[test]

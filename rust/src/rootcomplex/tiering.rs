@@ -1,0 +1,376 @@
+//! Hot-page tiering across heterogeneous root ports.
+//!
+//! The paper's headline topology — one host bridge fronting "DRAMs
+//! and/or SSDs" — only pays off if hot data lives on the DRAM ports and
+//! cold capacity spills to the SSD ports. A static HDM split (the
+//! `cxl-hybrid` configuration) freezes that placement at enumeration
+//! time; this module makes it adaptive:
+//!
+//! * **Tracker** — the decode path bumps a per-page access counter
+//!   ([`Tiering::translate`]); counters are epoch-scoped and reset after
+//!   every scan, so hotness is *recent* hotness.
+//! * **Migration engine** — at each epoch tick the tracker pairs the
+//!   hottest slow-tier (SSD-resident) pages with the coldest fast-tier
+//!   (DRAM-resident) pages and swaps them. A swap moves both pages
+//!   through the real port machinery ([`super::RootPort::migrate`]), so
+//!   migration traffic occupies memory-queue slots and media bandwidth —
+//!   it delays demand requests exactly the way a DMA engine would, no
+//!   free lunch.
+//!
+//! Placement is a page→frame permutation: HPA page `p` lives in frame
+//! `page_frame[p]`, and the frame address (not the HPA) is what the HDM
+//! decoder routes. Frames below [`Tiering::fast_bytes`] decode to the
+//! DRAM interleave set; the permutation starts as identity and every
+//! swap transposes two entries, so it stays a bijection — capacity on
+//! each tier is conserved by construction.
+//!
+//! Determinism and allocation discipline: decisions depend only on
+//! counters and sim time (no wall clock, no randomness beyond the
+//! System's seeded RNG used for SSD write jitter), and epoch scans reuse
+//! the `hot`/`cold`/`moves` scratch vectors — after the first epoch the
+//! steady state allocates nothing (DESIGN.md §7, §12).
+
+use crate::sim::{Time, US};
+
+/// Tiering knobs carried by `SystemConfig` (`coordinator/config.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierConfig {
+    /// Build the tiering subsystem (interleaved hybrid enumeration,
+    /// tracker, remap table). Off for every pre-tiering configuration.
+    pub enabled: bool,
+    /// Run the migration engine. `false` is the `cxl-tier-static`
+    /// ablation: same topology and tracker, placement frozen.
+    pub migrate: bool,
+    /// Migration unit (power of two). 16 KiB matches the UVM block: big
+    /// enough to amortize per-transfer protocol cost, small enough that
+    /// one swap doesn't monopolize a port.
+    pub page_bytes: u64,
+    /// Epoch length between scans of the access counters.
+    pub epoch: Time,
+    /// Minimum per-epoch accesses before a slow-tier page is a promotion
+    /// candidate.
+    pub promote_min: u32,
+    /// Migration budget: page swaps per epoch.
+    pub max_moves: usize,
+    /// HDM interleave granularity (IG, log2 bytes) used when enumerating
+    /// the tiered topology.
+    pub gran_bits: u32,
+}
+
+impl Default for TierConfig {
+    fn default() -> TierConfig {
+        TierConfig {
+            enabled: false,
+            migrate: false,
+            page_bytes: 16 << 10,
+            epoch: 100 * US,
+            promote_min: 4,
+            max_moves: 8,
+            gran_bits: 12,
+        }
+    }
+}
+
+/// Counters the tiering subsystem exports into `RunMetrics`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TierStats {
+    /// Pages moved slow→fast.
+    pub promotions: u64,
+    /// Pages moved fast→slow (always equal to promotions: swaps).
+    pub demotions: u64,
+    /// Bytes transferred by the migration engine (both directions).
+    pub migrated_bytes: u64,
+    /// Decoded accesses that landed on a fast-tier frame.
+    pub fast_accesses: u64,
+    /// Decoded accesses that landed on a slow-tier frame.
+    pub slow_accesses: u64,
+    /// Epoch scans performed.
+    pub epochs: u64,
+}
+
+/// Epoch-based hot-page tracker + page→frame remap table.
+#[derive(Debug)]
+pub struct Tiering {
+    cfg: TierConfig,
+    page_shift: u32,
+    page_mask: u64,
+    /// Pages fully covered by the remap table; the tail of the decode
+    /// space past `n_pages * page_bytes` passes through untranslated.
+    n_pages: usize,
+    /// Frames strictly below this index decode into the fast (DRAM)
+    /// interleave set.
+    fast_frames: u32,
+    /// Bytes of fast tier at the bottom of the decoded space.
+    pub fast_bytes: u64,
+    /// page → frame permutation (identity at enumeration).
+    page_frame: Vec<u32>,
+    /// frame → page inverse, kept in lock-step.
+    frame_page: Vec<u32>,
+    /// Per-page accesses this epoch.
+    counts: Vec<u32>,
+    /// Scratch: (count, page) promotion candidates, hottest first.
+    hot: Vec<(u32, u32)>,
+    /// Scratch: (count, page) fast-tier residents, coldest first.
+    cold: Vec<(u32, u32)>,
+    /// Scratch: planned (hot_page, cold_page) swaps for this epoch.
+    moves: Vec<(u32, u32)>,
+    move_cursor: usize,
+    pub stats: TierStats,
+}
+
+impl Tiering {
+    /// Tracker over `total` decoded bytes of which the first
+    /// `fast_bytes` decode to the fast tier.
+    pub fn new(cfg: TierConfig, fast_bytes: u64, total: u64) -> Tiering {
+        assert!(cfg.page_bytes.is_power_of_two(), "tier page must be a power of two");
+        let page_shift = cfg.page_bytes.trailing_zeros();
+        let n_pages = (total >> page_shift) as usize;
+        Tiering {
+            cfg,
+            page_shift,
+            page_mask: cfg.page_bytes - 1,
+            n_pages,
+            fast_frames: (fast_bytes >> page_shift) as u32,
+            fast_bytes,
+            page_frame: (0..n_pages as u32).collect(),
+            frame_page: (0..n_pages as u32).collect(),
+            counts: vec![0; n_pages],
+            hot: Vec::new(),
+            cold: Vec::new(),
+            moves: Vec::new(),
+            move_cursor: 0,
+            stats: TierStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &TierConfig {
+        &self.cfg
+    }
+
+    /// Translate a decode-space address through the page remap, counting
+    /// the access. Hot path: shift/mask plus two array reads.
+    pub fn translate(&mut self, hpa: u64) -> u64 {
+        let page = (hpa >> self.page_shift) as usize;
+        if page >= self.n_pages {
+            return hpa;
+        }
+        self.counts[page] = self.counts[page].saturating_add(1);
+        let frame = self.page_frame[page];
+        if frame < self.fast_frames {
+            self.stats.fast_accesses += 1;
+        } else {
+            self.stats.slow_accesses += 1;
+        }
+        ((frame as u64) << self.page_shift) | (hpa & self.page_mask)
+    }
+
+    /// Current frame base address of `page` (decode-space bytes).
+    pub fn frame_base(&self, page: u32) -> u64 {
+        (self.page_frame[page as usize] as u64) << self.page_shift
+    }
+
+    /// Whether `page` currently resides on the fast tier.
+    pub fn on_fast_tier(&self, page: u32) -> bool {
+        self.page_frame[page as usize] < self.fast_frames
+    }
+
+    /// Epoch boundary: rank pages, plan this epoch's swaps, reset the
+    /// counters. Scratch vectors are reused — no steady-state allocation.
+    pub fn plan_epoch(&mut self) {
+        self.stats.epochs += 1;
+        self.hot.clear();
+        self.cold.clear();
+        self.moves.clear();
+        self.move_cursor = 0;
+        for page in 0..self.n_pages {
+            let c = self.counts[page];
+            if self.page_frame[page] < self.fast_frames {
+                self.cold.push((c, page as u32));
+            } else if c >= self.cfg.promote_min {
+                self.hot.push((c, page as u32));
+            }
+        }
+        // Hottest slow pages first; coldest fast pages first. Ties break
+        // on page index so the plan is independent of scan incidentals.
+        self.hot.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        self.cold.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+        let n = self.hot.len().min(self.cold.len()).min(self.cfg.max_moves);
+        for k in 0..n {
+            let (hc, hp) = self.hot[k];
+            let (cc, cp) = self.cold[k];
+            // Swap only when clearly profitable; a 2x margin damps
+            // ping-pong between pages of similar temperature.
+            if hc <= cc.saturating_mul(2) {
+                break;
+            }
+            self.moves.push((hp, cp));
+        }
+        self.counts.fill(0);
+    }
+
+    /// Next planned swap of the current epoch, if any.
+    pub fn pop_move(&mut self) -> Option<(u32, u32)> {
+        let m = self.moves.get(self.move_cursor).copied();
+        self.move_cursor += m.is_some() as usize;
+        m
+    }
+
+    /// Transpose the two pages' frames after their data has been moved.
+    pub fn commit_swap(&mut self, hot_page: u32, cold_page: u32) {
+        let hf = self.page_frame[hot_page as usize];
+        let cf = self.page_frame[cold_page as usize];
+        self.page_frame[hot_page as usize] = cf;
+        self.page_frame[cold_page as usize] = hf;
+        self.frame_page[hf as usize] = cold_page;
+        self.frame_page[cf as usize] = hot_page;
+        self.stats.promotions += 1;
+        self.stats.demotions += 1;
+        self.stats.migrated_bytes += 2 * self.cfg.page_bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiering(fast_pages: u64, total_pages: u64) -> Tiering {
+        let cfg = TierConfig { enabled: true, migrate: true, ..TierConfig::default() };
+        Tiering::new(cfg, fast_pages * cfg.page_bytes, total_pages * cfg.page_bytes)
+    }
+
+    #[test]
+    fn identity_before_any_migration() {
+        let mut t = tiering(4, 16);
+        for hpa in [0u64, 0x3fff, 0x4000, (16 << 14) - 1] {
+            assert_eq!(t.translate(hpa), hpa);
+        }
+        // Tail past the last whole page passes through.
+        let tail = 16 * t.cfg.page_bytes + 5;
+        assert_eq!(t.translate(tail), tail);
+    }
+
+    #[test]
+    fn accesses_split_by_tier() {
+        let mut t = tiering(4, 16);
+        t.translate(0); // frame 0: fast
+        t.translate(10 * t.cfg.page_bytes); // frame 10: slow
+        assert_eq!(t.stats.fast_accesses, 1);
+        assert_eq!(t.stats.slow_accesses, 1);
+    }
+
+    #[test]
+    fn hot_slow_page_gets_promoted_over_cold_fast_page() {
+        let mut t = tiering(4, 16);
+        let page = t.cfg.page_bytes;
+        // Page 9 (slow) is hammered; fast pages 0..4 stay cold.
+        for _ in 0..50 {
+            t.translate(9 * page);
+        }
+        t.plan_epoch();
+        let (hot, cold) = t.pop_move().expect("one swap planned");
+        assert_eq!(hot, 9);
+        assert!(cold < 4, "victim must come from the fast tier, got {cold}");
+        t.commit_swap(hot, cold);
+        assert!(t.on_fast_tier(9));
+        assert!(!t.on_fast_tier(cold));
+        // The remap now routes page 9 into the victim's old frame.
+        assert_eq!(t.translate(9 * page + 7), (cold as u64) * page + 7);
+        assert_eq!(t.translate(cold as u64 * page), 9 * page);
+        assert_eq!(t.stats.promotions, 1);
+        assert_eq!(t.stats.demotions, 1);
+        assert_eq!(t.stats.migrated_bytes, 2 * page);
+    }
+
+    #[test]
+    fn lukewarm_pages_do_not_thrash() {
+        let mut t = tiering(2, 4);
+        let page = t.cfg.page_bytes;
+        // Slow page 3 is no hotter than either fast resident: swapping
+        // would only churn bandwidth, so no move may be planned.
+        for _ in 0..10 {
+            t.translate(3 * page);
+            t.translate(0);
+            t.translate(page);
+        }
+        t.plan_epoch();
+        assert_eq!(t.pop_move(), None);
+    }
+
+    #[test]
+    fn counts_reset_each_epoch() {
+        let mut t = tiering(2, 8);
+        let page = t.cfg.page_bytes;
+        for _ in 0..50 {
+            t.translate(5 * page);
+        }
+        t.plan_epoch();
+        while let Some((h, c)) = t.pop_move() {
+            t.commit_swap(h, c);
+        }
+        // Next epoch starts cold: nothing qualifies.
+        t.plan_epoch();
+        assert_eq!(t.pop_move(), None);
+    }
+
+    #[test]
+    fn move_budget_is_respected() {
+        let mut t = tiering(8, 32);
+        let page = t.cfg.page_bytes;
+        // Make every slow page hot.
+        for p in 8..32u64 {
+            for _ in 0..20 {
+                t.translate(p * page);
+            }
+        }
+        t.plan_epoch();
+        let mut n = 0;
+        while t.pop_move().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, t.cfg.max_moves);
+    }
+
+    #[test]
+    fn permutation_stays_a_bijection() {
+        let mut t = tiering(4, 16);
+        let page = t.cfg.page_bytes;
+        for round in 0..6u64 {
+            for p in 4..16u64 {
+                for _ in 0..(p + round) % 7 * 3 {
+                    t.translate(p * page);
+                }
+            }
+            t.plan_epoch();
+            while let Some((h, c)) = t.pop_move() {
+                t.commit_swap(h, c);
+            }
+            let mut seen = vec![false; 16];
+            for p in 0..16u32 {
+                let f = t.frame_base(p) / page;
+                assert!(!seen[f as usize], "frame {f} mapped twice");
+                seen[f as usize] = true;
+                assert_eq!(t.frame_page[f as usize], p);
+            }
+        }
+    }
+
+    #[test]
+    fn planning_is_deterministic() {
+        let run = || {
+            let mut t = tiering(4, 32);
+            let page = t.cfg.page_bytes;
+            for p in 4..32u64 {
+                for _ in 0..(p * 7) % 13 {
+                    t.translate(p * page);
+                }
+            }
+            t.plan_epoch();
+            let mut out = Vec::new();
+            while let Some(m) = t.pop_move() {
+                out.push(m);
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+}

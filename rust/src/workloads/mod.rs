@@ -75,7 +75,7 @@ impl Default for TraceParams {
 
 /// One warp's lazy op stream: the RNG + pattern state that the old
 /// materialized trace row was generated from, now owned by the stream and
-/// advanced one op per [`OpStream::next`].
+/// advanced one op per `OpStream::next` call.
 ///
 /// Equivalence contract: for identical `(spec, params, warp)`, the yielded
 /// sequence is bit-identical to the corresponding [`collect_trace`] row —

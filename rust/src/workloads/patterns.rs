@@ -15,6 +15,11 @@
 use crate::gpu::LINE;
 use crate::util::prng::Pcg32;
 
+/// Page size of the [`PatternKind::HotCold`] hot set. Matches the
+/// tiering subsystem's default migration unit (`TierConfig::page_bytes`)
+/// so one hot page is exactly one migratable unit.
+pub const HOT_PAGE_BYTES: u64 = 16 << 10;
+
 /// Pattern taxonomy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PatternKind {
@@ -31,6 +36,13 @@ pub enum PatternKind {
     /// 2D tiled with intra-tile reuse (gemm, conv3, stencil): warps
     /// cooperate on a shared tile that is swept `reuse` times.
     Tiled { tile_bytes: u64, reuse: u32 },
+    /// Skewed hot/cold mix for the tiering sweep (DESIGN.md §12):
+    /// `hot_permille`/1000 of the loads land uniformly on a hot set of
+    /// `hot_pages` pages ([`HOT_PAGE_BYTES`] each) spread evenly across
+    /// the input region; the rest scatter uniformly. The scatter keeps
+    /// any static placement honest — hot pages land on both tiers of a
+    /// hybrid topology, so only migration can concentrate them on DRAM.
+    HotCold { hot_permille: u32, hot_pages: u32 },
     /// Phase composite (gnn = bfs+vadd+gemm, mri = sort+conv3): cycles
     /// through sub-patterns every `phase_len` accesses.
     Composite2 { a: &'static PatternKind, b: &'static PatternKind, phase_len: u32 },
@@ -62,6 +74,10 @@ pub struct Pattern {
     /// Around state (per-warp local region).
     around_lo: u64,
     around_hi: u64,
+    /// HotCold state: hot pages sit at page indices `0, stride, 2*stride,
+    /// ...` of the input region ([`HOT_PAGE_BYTES`] pages).
+    hot_stride: u64,
+    hot_n: u64,
     /// Composite state.
     phase: u32,
     count: u32,
@@ -106,6 +122,14 @@ impl Pattern {
             PatternKind::Around => (around_lo + around_span / 2) & !(LINE - 1),
             _ => w * LINE,
         };
+        let (hot_stride, hot_n) = match kind {
+            PatternKind::HotCold { hot_pages, .. } => {
+                let input_pages = (store_base / HOT_PAGE_BYTES).max(1);
+                let n = (hot_pages as u64).clamp(1, input_pages);
+                ((input_pages / n).max(1), n)
+            }
+            _ => (0, 0),
+        };
         Pattern {
             kind,
             lo: 0,
@@ -120,6 +144,8 @@ impl Pattern {
             visits: 0,
             around_lo,
             around_hi,
+            hot_stride,
+            hot_n,
             phase: 0,
             count: 0,
             sub,
@@ -197,6 +223,18 @@ impl Pattern {
                 // The frontier drifts forward slowly.
                 self.cursor += LINE / 4 + 16;
                 a
+            }
+            PatternKind::HotCold { hot_permille, .. } => {
+                // Draw order is fixed (hot-Bernoulli, then one address
+                // draw) so streams stay bit-reproducible.
+                if rng.chance(hot_permille as f64 / 1000.0) {
+                    let page = rng.below(self.hot_n) * self.hot_stride;
+                    let line = rng.below(HOT_PAGE_BYTES / LINE);
+                    self.lo + page * HOT_PAGE_BYTES + line * LINE
+                } else {
+                    let span_lines = (self.hi - self.lo) / LINE;
+                    self.lo + rng.below(span_lines.max(1)) * LINE
+                }
             }
             PatternKind::Tiled { tile_bytes, reuse } => {
                 // All warps sweep the shared tile cooperatively; each tile
@@ -359,6 +397,42 @@ mod tests {
         assert!(addrs.iter().all(|&a| a < tile), "left tile early: {addrs:?}");
         let next = p.next_load(&mut rng);
         assert!(next >= tile, "should advance to next tile, got {next:#x}");
+    }
+
+    #[test]
+    fn hotcold_respects_the_hot_fraction() {
+        let kind = PatternKind::HotCold { hot_permille: 900, hot_pages: 16 };
+        let (mut p, mut rng) = pat(kind, 0);
+        // Reconstruct the hot set the same way Pattern::new does.
+        let store_base = FOOT - FOOT / 6;
+        let input_pages = store_base / HOT_PAGE_BYTES;
+        let stride = input_pages / 16;
+        let is_hot = |a: u64| (a / HOT_PAGE_BYTES) % stride == 0;
+        let mut hot = 0;
+        let n = 4000;
+        for _ in 0..n {
+            let a = p.next_load(&mut rng);
+            assert!(a < store_base, "{a:#x} outside the input region");
+            if is_hot(a) {
+                hot += 1;
+            }
+        }
+        // 90% targeted + the sliver of uniform scatter that happens to
+        // land on hot pages; 2σ of a 0.9 Bernoulli over 4000 draws ≈ 1%.
+        let frac = hot as f64 / n as f64;
+        assert!((0.87..=0.97).contains(&frac), "hot fraction {frac}");
+    }
+
+    #[test]
+    fn hotcold_hot_set_spans_few_distinct_pages() {
+        let kind = PatternKind::HotCold { hot_permille: 1000, hot_pages: 16 };
+        let (mut p, mut rng) = pat(kind, 1);
+        let mut pages = std::collections::HashSet::new();
+        for _ in 0..2000 {
+            pages.insert(p.next_load(&mut rng) / HOT_PAGE_BYTES);
+        }
+        assert!(pages.len() <= 16, "hot set leaked: {} pages", pages.len());
+        assert!(pages.len() >= 12, "hot set barely sampled: {} pages", pages.len());
     }
 
     #[test]

@@ -141,10 +141,48 @@ pub static ALL_WORKLOADS: &[WorkloadSpec] = &[
     },
 ];
 
-/// Look up a workload by name (panics on unknown: test/bench-time input).
+/// Synthetic hot-fraction sweep for the tiering experiment (DESIGN.md
+/// §12): `hotNN` directs NN% of loads at a 64-page (1 MiB) hot set
+/// scattered evenly over the input region, the rest at a uniform cold
+/// scatter. Not part of Table 1b — the figure suites never run these.
+pub static HOT_SWEEP: &[WorkloadSpec] = &[
+    WorkloadSpec {
+        name: "hot50",
+        category: Category::LoadIntensive,
+        compute_ratio: 0.15,
+        load_ratio: 0.85,
+        pattern: PatternKind::HotCold { hot_permille: 500, hot_pages: 64 },
+    },
+    WorkloadSpec {
+        name: "hot75",
+        category: Category::LoadIntensive,
+        compute_ratio: 0.15,
+        load_ratio: 0.85,
+        pattern: PatternKind::HotCold { hot_permille: 750, hot_pages: 64 },
+    },
+    WorkloadSpec {
+        name: "hot90",
+        category: Category::LoadIntensive,
+        compute_ratio: 0.15,
+        load_ratio: 0.85,
+        pattern: PatternKind::HotCold { hot_permille: 900, hot_pages: 64 },
+    },
+    WorkloadSpec {
+        name: "hot95",
+        category: Category::LoadIntensive,
+        compute_ratio: 0.15,
+        load_ratio: 0.85,
+        pattern: PatternKind::HotCold { hot_permille: 950, hot_pages: 64 },
+    },
+];
+
+/// Look up a workload by name (panics on unknown: test/bench-time
+/// input). Resolves the Table 1b roster first, then the [`HOT_SWEEP`]
+/// synthetics.
 pub fn spec(name: &str) -> &'static WorkloadSpec {
     ALL_WORKLOADS
         .iter()
+        .chain(HOT_SWEEP)
         .find(|w| w.name == name)
         .unwrap_or_else(|| panic!("unknown workload `{name}`"))
 }
@@ -194,9 +232,19 @@ mod tests {
     #[test]
     fn salts_are_distinct() {
         let mut seen = std::collections::HashSet::new();
-        for w in ALL_WORKLOADS {
+        for w in ALL_WORKLOADS.iter().chain(HOT_SWEEP) {
             assert!(seen.insert(w.seed_salt()), "salt collision for {}", w.name);
         }
+    }
+
+    #[test]
+    fn hot_sweep_resolves_by_name_but_stays_out_of_the_roster() {
+        assert_eq!(
+            spec("hot90").pattern,
+            PatternKind::HotCold { hot_permille: 900, hot_pages: 64 }
+        );
+        assert_eq!(ALL_WORKLOADS.len(), 13, "Table 1b roster must not grow");
+        assert!(ALL_WORKLOADS.iter().all(|w| !w.name.starts_with("hot")));
     }
 
     #[test]

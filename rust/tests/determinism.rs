@@ -35,6 +35,14 @@ fn fingerprint(m: &RunMetrics) -> Vec<u64> {
         m.load_latency.max().to_bits(),
         m.store_latency.count(),
         m.store_latency.mean().to_bits(),
+        // Tiering counters: migration decisions are part of the
+        // deterministic surface (zero for untiered configs).
+        m.tier_promotions,
+        m.tier_demotions,
+        m.tier_migrated_bytes,
+        m.tier_fast_accesses,
+        m.tier_slow_accesses,
+        m.tier_epochs,
     ]
 }
 
@@ -47,9 +55,14 @@ fn small(name: &str, media: MediaKind) -> SystemConfig {
 
 #[test]
 fn repeated_runs_are_bit_identical() {
-    for (name, media, wl) in
-        [("cxl-sr", MediaKind::Znand, "bfs"), ("uvm", MediaKind::Ddr5, "vadd")]
-    {
+    for (name, media, wl) in [
+        ("cxl-sr", MediaKind::Znand, "bfs"),
+        ("uvm", MediaKind::Ddr5, "vadd"),
+        // Tiered configs: the migration engine's decisions (epoch scans,
+        // swap plans, per-chunk transfers) must be bit-reproducible too.
+        ("cxl-tier", MediaKind::Znand, "hot90"),
+        ("cxl-tier-static", MediaKind::Znand, "hot90"),
+    ] {
         let cfg = small(name, media);
         let a = System::new(spec(wl), &cfg).run();
         let b = System::new(spec(wl), &cfg).run();
@@ -70,6 +83,8 @@ fn parallel_runner_matches_direct_runs() {
         mk("uvm", MediaKind::Ddr5, "vadd"),
         mk("cxl-ds", MediaKind::Znand, "sort"),
         mk("cxl", MediaKind::Ddr5, "gnn"),
+        mk("cxl-tier", MediaKind::Znand, "hot90"),
+        mk("cxl-tier-static", MediaKind::Znand, "hot75"),
     ];
     let direct: Vec<_> = jobs.iter().map(|j| run_with(j.0, &j.1)).collect();
     let pooled = run_jobs(&jobs);

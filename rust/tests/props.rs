@@ -152,7 +152,7 @@ fn prop_hdm_decode_is_total_and_consistent_over_programmed_space() {
         let ports = g.usize("ports", 1, 8);
         let size = g.u64("win", 1, 64) * 4096;
         for p in 0..ports {
-            d.program(HdmEntry { port: p, base: p as u64 * size, size })
+            d.program(HdmEntry::direct(p, p as u64 * size, size))
                 .map_err(|e| e.to_string())?;
         }
         let total = ports as u64 * size;
@@ -168,6 +168,102 @@ fn prop_hdm_decode_is_total_and_consistent_over_programmed_space() {
         }
         if d.decode(total).is_some() {
             return Err("decoded past the programmed space".into());
+        }
+        Ok(())
+    });
+}
+
+/// Decode edges: for any pair of adjacent windows plus a detached one,
+/// the boundary addresses land in the right window, the first address
+/// past a window's end either misses or belongs to its neighbour, and
+/// everything outside all windows misses.
+#[test]
+fn prop_hdm_decode_edges_are_exact() {
+    check("hdm-edges", 0xED6E, 100, |g| {
+        let mut d = HdmDecoder::new();
+        let a_size = g.u64("a", 1, 64) * 4096;
+        let b_size = g.u64("b", 1, 64) * 4096;
+        let gap = g.u64("gap", 1, 16) * 4096;
+        // [0, a) and [a, a+b) adjacent; [a+b+gap, ...) detached.
+        d.program(HdmEntry::direct(0, 0, a_size)).map_err(|e| e.to_string())?;
+        d.program(HdmEntry::direct(1, a_size, b_size)).map_err(|e| e.to_string())?;
+        let c_base = a_size + b_size + gap;
+        let c_size = g.u64("c", 1, 16) * 4096;
+        d.program(HdmEntry::direct(2, c_base, c_size)).map_err(|e| e.to_string())?;
+        let cases = [
+            (a_size - 1, Some((0, a_size - 1))),    // last byte of A
+            (a_size, Some((1, 0))),                 // first byte of B
+            (a_size + b_size - 1, Some((1, b_size - 1))),
+            (a_size + b_size, None),                // gap starts
+            (c_base - 1, None),                     // last gap byte
+            (c_base, Some((2, 0))),
+            (c_base + c_size - 1, Some((2, c_size - 1))),
+            (c_base + c_size, None),                // past everything
+        ];
+        for (hpa, want) in cases {
+            let got = d.decode(hpa);
+            if got != want {
+                return Err(format!("decode({hpa:#x}) = {got:?}, want {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Interleaved decode round-trip: decode is stable, covers the window
+/// totally, balances granules exactly across the ways, and inverts
+/// through `hpa_of`.
+#[test]
+fn prop_hdm_interleaved_decode_round_trips_and_balances() {
+    check("hdm-interleave", 0x11EA, 100, |g| {
+        let ways = *g.choose("ways", &[2usize, 4, 8]);
+        let gran_bits = g.u64("gran", 6, 13) as u32;
+        let gran = 1u64 << gran_bits;
+        let stripes = g.u64("stripes", 1, 32);
+        let base = g.u64("base", 0, 1 << 30) & !(gran - 1);
+        let size = stripes * ways as u64 * gran;
+        // Distinct, not-necessarily-contiguous target ports.
+        let first = g.usize("port0", 0, 4);
+        let step = g.usize("step", 1, 3);
+        let ports: Vec<usize> = (0..ways).map(|k| first + k * step).collect();
+        let e = HdmEntry::interleaved(&ports, base, size, gran_bits);
+        let mut d = HdmDecoder::new();
+        d.program(e).map_err(|err| err.to_string())?;
+
+        // Balance: one full sweep at granule steps hits each way exactly
+        // `stripes` times.
+        let mut per_way = vec![0u64; ways];
+        for gidx in 0..(size / gran) {
+            let hpa = base + gidx * gran;
+            let (port, _) = d.decode(hpa).ok_or("decode hole inside the window")?;
+            let way = ports.iter().position(|&p| p == port).ok_or("unknown port")?;
+            per_way[way] += 1;
+        }
+        if per_way.iter().any(|&c| c != stripes) {
+            return Err(format!("unbalanced stripe: {per_way:?}, want {stripes} each"));
+        }
+
+        for i in 0..24 {
+            let hpa = base + g.u64(&format!("hpa{i}"), 0, size - 1);
+            let (port, dpa) = d.decode(hpa).ok_or("decode hole inside the window")?;
+            // Stability: the same HPA decodes identically.
+            if d.decode(hpa) != Some((port, dpa)) {
+                return Err(format!("decode({hpa:#x}) is not stable"));
+            }
+            // Each way owns size/ways bytes.
+            if dpa >= e.per_way() {
+                return Err(format!("dpa {dpa:#x} beyond the per-way capacity"));
+            }
+            // Round trip through the inverse.
+            let way = ports.iter().position(|&p| p == port).unwrap();
+            if e.hpa_of(way, dpa) != hpa {
+                return Err(format!(
+                    "hpa_of(way {way}, {dpa:#x}) != {hpa:#x}",
+                ));
+            }
+        }
+        if d.decode(base + size).is_some() {
+            return Err("decoded past the interleaved window".into());
         }
         Ok(())
     });
