@@ -1,0 +1,81 @@
+//! §13 — pooled CXL fabric: multi-tenant QoS floors.
+//!
+//! Runs the `multi-tenant` experiment (victim solo / shared pool /
+//! shared pool + QoS over the 2/4/8-tenant hog mixes), emits
+//! `BENCH_fabric.json` (schema: docs/BENCH_SCHEMA.md), and asserts the
+//! tentpole's win condition: with QoS enabled the victim tenant's p99
+//! expander-load slowdown under hog co-tenants is bounded (≤ 2x its
+//! solo run) while pooled geomean throughput stays within 5% of the
+//! no-QoS pool — i.e. isolation is nearly free.
+use std::collections::BTreeMap;
+
+use cxl_gpu::coordinator::experiments::{multi_tenant, Scale};
+use cxl_gpu::util::json::Json;
+
+/// Victim p99 slowdown ceiling under QoS (x solo).
+const FLOOR_VICTIM_P99_X: f64 = 2.0;
+/// Pooled geomean throughput floor, QoS vs no-QoS.
+const FLOOR_QOS_TPUT_RATIO: f64 = 0.95;
+
+fn main() {
+    let res = multi_tenant(Scale::default(), true);
+
+    let rows: Vec<Json> = res
+        .rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("mix".into(), Json::Str(r.mix.into()));
+            m.insert("tenants".into(), Json::Num(r.tenants as f64));
+            m.insert("victim_solo_p99_us".into(), Json::Num(r.victim_solo_p99_us));
+            m.insert("victim_pool_p99_x".into(), Json::Num(r.victim_pool_p99_x));
+            m.insert("victim_qos_p99_x".into(), Json::Num(r.victim_qos_p99_x));
+            m.insert("pool_geo_tput_mops".into(), Json::Num(r.pool_geo_tput_mops));
+            m.insert("qos_geo_tput_mops".into(), Json::Num(r.qos_geo_tput_mops));
+            m.insert("qos_tput_ratio".into(), Json::Num(r.qos_tput_ratio));
+            m.insert("qos_throttle_waits".into(), Json::Num(r.qos_throttle_waits as f64));
+            m.insert("qos_ingress_hwm".into(), Json::Num(r.qos_ingress_hwm as f64));
+            m.insert("pool_backpressure".into(), Json::Num(r.pool_backpressure as f64));
+            Json::Obj(m)
+        })
+        .collect();
+
+    // Report before asserting so regressions still leave data on disk.
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("fabric".into()));
+    top.insert("schema".into(), Json::Str("docs/BENCH_SCHEMA.md".into()));
+    top.insert("floor_victim_p99_x".into(), Json::Num(FLOOR_VICTIM_P99_X));
+    top.insert("floor_qos_tput_ratio".into(), Json::Num(FLOOR_QOS_TPUT_RATIO));
+    top.insert("results".into(), Json::Arr(rows));
+    let path = "BENCH_fabric.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+
+    for r in &res.rows {
+        assert!(
+            r.victim_qos_p99_x <= FLOOR_VICTIM_P99_X,
+            "{}: QoS must bound the victim's p99 slowdown: {:.2}x > {FLOOR_VICTIM_P99_X}x",
+            r.mix,
+            r.victim_qos_p99_x
+        );
+        assert!(
+            r.qos_tput_ratio >= FLOOR_QOS_TPUT_RATIO,
+            "{}: QoS must not tax pooled throughput: {:.3} < {FLOOR_QOS_TPUT_RATIO}",
+            r.mix,
+            r.qos_tput_ratio
+        );
+        assert!(
+            r.qos_ingress_hwm >= 1,
+            "{}: multi-tenant traffic must transit the switch ingress",
+            r.mix
+        );
+    }
+    println!(
+        "fabric bench OK ({} mixes; worst QoS p99 {:.2}x, worst QoS tput ratio {:.3})",
+        res.rows.len(),
+        res.rows.iter().map(|r| r.victim_qos_p99_x).fold(0.0, f64::max),
+        res.rows.iter().map(|r| r.qos_tput_ratio).fold(f64::INFINITY, f64::min),
+    );
+}

@@ -4,9 +4,10 @@
 //! comparator built on a PCIe-era controller (CXL-SMT).
 
 use crate::cxl::ControllerKind;
+use crate::fabric::FabricSpec;
 use crate::gpu::LlcConfig;
-use crate::media::MediaKind;
-use crate::rootcomplex::{SrPolicy, TierConfig};
+use crate::media::{DramModel, DramTimings, MediaKind, SsdModel, SsdParams};
+use crate::rootcomplex::{EpBackend, RootPort, SrPolicy, TierConfig};
 use crate::util::toml::Document;
 
 /// Top-level memory-expansion strategy.
@@ -57,6 +58,10 @@ pub struct SystemConfig {
     /// interleaved HDM enumeration, access tracking and (when
     /// `tier.migrate`) epoch-based page migration.
     pub tier: TierConfig,
+    /// Pooled-fabric attachment (DESIGN.md §13): route the expander
+    /// through a virtual CXL switch instead of direct root ports, with
+    /// optional per-tenant QoS. Mutually exclusive with `tier`.
+    pub fabric: FabricSpec,
 }
 
 impl SystemConfig {
@@ -85,7 +90,38 @@ impl SystemConfig {
             timeline: false,
             media_per_port: None,
             tier: TierConfig::default(),
+            fabric: FabricSpec::default(),
         }
+    }
+
+    /// Construct the root-port (or pooled-endpoint) set this
+    /// configuration describes: one port per `ports`, media from
+    /// `media_per_port` (fallback `media`), shared SR policy, DS only
+    /// on SSD media. The direct and fabric topologies build their
+    /// endpoints through this one helper so a pooled endpoint is
+    /// port-for-port identical to its direct-attached twin.
+    pub fn build_ports(&self) -> Vec<RootPort> {
+        (0..self.ports)
+            .map(|i| {
+                let media = self
+                    .media_per_port
+                    .as_ref()
+                    .and_then(|m| m.get(i).copied())
+                    .unwrap_or(self.media);
+                let ep = match media {
+                    MediaKind::Ddr5 => EpBackend::Dram(DramModel::new(DramTimings::ddr5_5600())),
+                    ssd => EpBackend::Ssd(SsdModel::new(SsdParams::for_kind(ssd))),
+                };
+                RootPort::new(
+                    i,
+                    self.controller,
+                    ep,
+                    self.sr_policy,
+                    self.ds_enabled && media.is_ssd(),
+                    self.ds_capacity,
+                )
+            })
+            .collect()
     }
 
     /// A named configuration from the paper's evaluation (plus this
@@ -109,7 +145,22 @@ impl SystemConfig {
     ///   migration (DESIGN.md §12, `tiering` experiment).
     /// * `cxl-tier-static` — `cxl-tier` topology with migration disabled
     ///   (the tiering ablation point).
+    /// * `cxl-pool` — the expander behind a pooled virtual CXL switch
+    ///   (DESIGN.md §13, `multi-tenant` experiment); engines mirror
+    ///   `cxl`, so a single-tenant pool is bit-identical to direct
+    ///   attachment (the passthrough invariant).
+    /// * `cxl-pool-qos` — `cxl-pool` plus the per-tenant QoS token
+    ///   bucket on switch ingress (the QoS ablation point).
+    ///
+    /// Panics on an unknown name; [`SystemConfig::try_named`] is the
+    /// message-not-panic variant for CLI/config paths.
     pub fn named(name: &str, media: MediaKind) -> SystemConfig {
+        Self::try_named(name, media).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// [`SystemConfig::named`], but an unknown name is a `Result` error
+    /// with the known-name catalog instead of a panic.
+    pub fn try_named(name: &str, media: MediaKind) -> Result<SystemConfig, String> {
         let mut c = SystemConfig::base();
         c.name = name.into();
         c.media = media;
@@ -175,16 +226,32 @@ impl SystemConfig {
                 c.tier.enabled = true;
                 c.tier.migrate = name == "cxl-tier";
             }
-            other => panic!("unknown configuration `{other}`"),
+            "cxl-pool" | "cxl-pool-qos" => {
+                // Pooled fabric (DESIGN.md §13): the expander endpoints
+                // sit behind a shared virtual CXL switch. Engines stay
+                // exactly as in `cxl` so the single-tenant, no-QoS pool
+                // reproduces direct attachment bit-identically; the
+                // `-qos` variant arms the per-tenant token bucket.
+                c.strategy = MemStrategy::Cxl;
+                c.fabric.enabled = true;
+                c.fabric.qos = name == "cxl-pool-qos";
+            }
+            other => {
+                return Err(format!(
+                    "unknown configuration `{other}` (known: {})",
+                    Self::known_names().join(", ")
+                ))
+            }
         }
-        c
+        Ok(c)
     }
 
     /// All evaluation-relevant configuration names.
     pub fn known_names() -> &'static [&'static str] {
         &[
             "gpu-dram", "uvm", "gds", "cxl", "cxl-naive", "cxl-dyn", "cxl-sr", "cxl-ds",
-            "cxl-smt", "cxl-hybrid", "cxl-tier", "cxl-tier-static",
+            "cxl-smt", "cxl-hybrid", "cxl-tier", "cxl-tier-static", "cxl-pool",
+            "cxl-pool-qos",
         ]
     }
 
@@ -289,6 +356,38 @@ mod tests {
     #[should_panic(expected = "unknown configuration")]
     fn unknown_name_panics() {
         SystemConfig::named("bogus", MediaKind::Ddr5);
+    }
+
+    #[test]
+    fn try_named_reports_the_catalog_instead_of_panicking() {
+        let err = SystemConfig::try_named("bogus", MediaKind::Ddr5).unwrap_err();
+        assert!(err.contains("unknown configuration `bogus`"));
+        assert!(err.contains("cxl-pool"), "error should list known names: {err}");
+    }
+
+    #[test]
+    fn pool_configs_mirror_cxl_plus_fabric() {
+        let cxl = SystemConfig::named("cxl", MediaKind::Znand);
+        let pool = SystemConfig::named("cxl-pool", MediaKind::Znand);
+        assert!(pool.fabric.enabled && !pool.fabric.qos);
+        assert_eq!(pool.strategy, cxl.strategy);
+        assert_eq!(pool.sr_policy, cxl.sr_policy);
+        assert_eq!(pool.ds_enabled, cxl.ds_enabled);
+        assert_eq!(pool.ports, cxl.ports);
+        let qos = SystemConfig::named("cxl-pool-qos", MediaKind::Znand);
+        assert!(qos.fabric.enabled && qos.fabric.qos);
+        assert!(!SystemConfig::named("cxl", MediaKind::Znand).fabric.enabled);
+    }
+
+    #[test]
+    fn build_ports_follows_media_per_port_and_gates_ds_on_ssd() {
+        let c = SystemConfig::named("cxl-hybrid", MediaKind::Znand);
+        let ports = c.build_ports();
+        assert_eq!(ports.len(), c.ports);
+        for (i, p) in ports.iter().enumerate() {
+            assert_eq!(p.backend.is_ssd(), i % 2 == 1, "port {i} media");
+            assert_eq!(p.ds.enabled, p.backend.is_ssd(), "DS only fronts SSD media");
+        }
     }
 
     #[test]

@@ -6,11 +6,13 @@
 //! who wins, by roughly what factor, where the crossovers fall.
 
 use crate::cxl::{ControllerKind, CxlController};
+use crate::fabric::{run_pool, PoolResult, Tenant};
 use crate::media::MediaKind;
+use crate::rootcomplex::SrPolicy;
 use crate::sim::ps_to_ns;
 use crate::util::bench::{ratio, Table};
 use crate::workloads::table1b::{spec, ALL_WORKLOADS, HOT_SWEEP};
-use crate::workloads::{Category, PatternKind, TraceMix, TraceParams};
+use crate::workloads::{Category, PatternKind, TenantMix, TraceMix, TraceParams, TENANT_MIXES};
 
 use super::config::SystemConfig;
 use super::runner::{
@@ -653,6 +655,163 @@ pub fn tiering(scale: Scale, print: bool) -> TierSweep {
             "tiered hybrid over static hybrid: {} geomean; over frozen-placement ablation: {}",
             ratio(res.tier_speedup_over_hybrid),
             ratio(res.tier_speedup_over_static),
+        );
+    }
+    res
+}
+
+// ---------------------------------------------------------------------------
+// Multi-tenant — pooled fabric with per-tenant QoS (§13)
+// ---------------------------------------------------------------------------
+
+/// One hog/victim mix of the multi-tenant sweep. Slowdowns are the
+/// victim's p99 expander-load latency normalized to its *solo* run on
+/// the same pool; throughputs are geomeans of per-tenant Mops/s.
+#[derive(Debug, Clone)]
+pub struct MtRow {
+    pub mix: &'static str,
+    pub tenants: usize,
+    /// Victim p99 expander-load latency, alone on the pool (µs).
+    pub victim_solo_p99_us: f64,
+    /// Victim p99 slowdown under the hogs, QoS off.
+    pub victim_pool_p99_x: f64,
+    /// Victim p99 slowdown under the hogs, QoS on.
+    pub victim_qos_p99_x: f64,
+    /// Geomean per-tenant throughput, QoS off (Mops/s).
+    pub pool_geo_tput_mops: f64,
+    /// Geomean per-tenant throughput, QoS on (Mops/s).
+    pub qos_geo_tput_mops: f64,
+    /// `qos_geo_tput_mops / pool_geo_tput_mops` — the price of QoS.
+    pub qos_tput_ratio: f64,
+    /// Token-bucket delays suffered by the hogs under QoS.
+    pub qos_throttle_waits: u64,
+    /// Max switch-ingress high-water mark across tenants (QoS run).
+    pub qos_ingress_hwm: u64,
+    /// Moderate+ DevLoad observations returned to tenants, QoS off.
+    pub pool_backpressure: u64,
+}
+
+/// Aggregate result of [`multi_tenant`].
+#[derive(Debug, Clone)]
+pub struct MtSweep {
+    pub rows: Vec<MtRow>,
+}
+
+/// Build one scenario's tenant list. `solo` drops the hogs (the
+/// victim-alone baseline); `qos` arms the token bucket.
+fn mt_tenants(mix: &TenantMix, qos: bool, solo: bool, scale: Scale) -> Vec<Tenant> {
+    let config = if qos { "cxl-pool-qos" } else { "cxl-pool" };
+    let mk = |wl: &'static str, warps: usize, mlp: usize, ops: usize| {
+        let mut cfg = SystemConfig::named(config, MediaKind::Znand);
+        // The pool is an LMB-style shared flash buffer: pooled Z-NAND
+        // endpoints running the paper's full SR + DS stack (mirroring
+        // `cxl-ds` engine settings on the shared ports).
+        cfg.sr_policy = SrPolicy::Window;
+        cfg.ds_enabled = true;
+        cfg.total_ops = ops;
+        cfg.ssd_scale();
+        cfg.warps = warps;
+        cfg.mlp = mlp;
+        Tenant { workload: spec(wl), cfg }
+    };
+    // The victim's budget is a quarter of a hog's, so its whole run
+    // executes while the hogs are still hammering the pool.
+    let mut out = vec![mk(mix.victim, mix.victim_warps, mix.victim_mlp, scale.ssd_ops / 4)];
+    if !solo {
+        for _ in 1..mix.tenants {
+            out.push(mk(mix.hog, mix.hog_warps, mix.hog_mlp, scale.ssd_ops));
+        }
+    }
+    out
+}
+
+/// Geomean per-tenant throughput of a pool run, in Mops/s.
+fn geo_tput_mops(run: &PoolResult, tenants: &[Tenant]) -> f64 {
+    let logs: f64 = run
+        .tenants
+        .iter()
+        .zip(tenants)
+        .map(|(r, t)| {
+            let secs = (r.metrics.exec_time as f64 / 1e12).max(1e-12);
+            (t.cfg.total_ops as f64 / secs / 1e6).ln()
+        })
+        .sum();
+    (logs / run.tenants.len().max(1) as f64).exp()
+}
+
+/// The multi-tenant experiment: for each [`TENANT_MIXES`] scenario, run
+/// the victim solo, the shared pool without QoS, and the shared pool
+/// with QoS — a flat parallel batch of pool runs (each pool is a serial
+/// merge inside). Backs `benches/fabric.rs` → `BENCH_fabric.json`.
+pub fn multi_tenant(scale: Scale, print: bool) -> MtSweep {
+    // (mix, variant): 0 = solo victim, 1 = pool, 2 = pool + QoS.
+    let scen: Vec<(usize, usize)> = (0..TENANT_MIXES.len())
+        .flat_map(|m| (0..3usize).map(move |v| (m, v)))
+        .collect();
+    let runs: Vec<(PoolResult, f64)> = par_map(&scen, |_, &(mi, v)| {
+        let tenants = mt_tenants(&TENANT_MIXES[mi], v == 2, v == 0, scale);
+        let run = run_pool(&tenants).unwrap_or_else(|e| panic!("multi-tenant pool: {e}"));
+        let tput = geo_tput_mops(&run, &tenants);
+        (run, tput)
+    });
+
+    let mut rows = Vec::new();
+    for (mi, mix) in TENANT_MIXES.iter().enumerate() {
+        let (solo, _) = &runs[mi * 3];
+        let (pool, pool_tput) = &runs[mi * 3 + 1];
+        let (qos, qos_tput) = &runs[mi * 3 + 2];
+        let solo_p99 = solo.tenants[0].metrics.load_p99_us().max(1e-9);
+        rows.push(MtRow {
+            mix: mix.name,
+            tenants: mix.tenants,
+            victim_solo_p99_us: solo_p99,
+            victim_pool_p99_x: pool.tenants[0].metrics.load_p99_us() / solo_p99,
+            victim_qos_p99_x: qos.tenants[0].metrics.load_p99_us() / solo_p99,
+            pool_geo_tput_mops: *pool_tput,
+            qos_geo_tput_mops: *qos_tput,
+            qos_tput_ratio: qos_tput / pool_tput,
+            qos_throttle_waits: qos.tenants[1..]
+                .iter()
+                .map(|t| t.metrics.qos_throttle_waits)
+                .sum(),
+            qos_ingress_hwm: qos
+                .tenants
+                .iter()
+                .map(|t| t.metrics.ingress_hwm)
+                .max()
+                .unwrap_or(0),
+            pool_backpressure: pool
+                .tenants
+                .iter()
+                .map(|t| t.metrics.fabric_backpressure)
+                .sum(),
+        });
+    }
+    let res = MtSweep { rows };
+    if print {
+        let mut t = Table::new(
+            "Multi-tenant — pooled Z-NAND fabric: victim p99 + geomean throughput",
+            &[
+                "mix", "tenants", "solo p99", "pool p99", "QoS p99", "pool tput",
+                "QoS tput", "QoS/pool", "throttled",
+            ],
+        );
+        for r in &res.rows {
+            t.rowv(vec![
+                r.mix.into(),
+                r.tenants.to_string(),
+                format!("{:.1} µs", r.victim_solo_p99_us),
+                format!("{:.2}x", r.victim_pool_p99_x),
+                format!("{:.2}x", r.victim_qos_p99_x),
+                format!("{:.2} M/s", r.pool_geo_tput_mops),
+                format!("{:.2} M/s", r.qos_geo_tput_mops),
+                ratio(r.qos_tput_ratio),
+                r.qos_throttle_waits.to_string(),
+            ]);
+        }
+        t.print();
+        println!(
+            "QoS bound: victim p99 ≤ 2x solo with hogs co-resident; throughput within 5% of the no-QoS pool (benches/fabric.rs floors)"
         );
     }
     res

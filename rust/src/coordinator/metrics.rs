@@ -3,7 +3,7 @@
 use crate::gpu::cache::LlcStats;
 use crate::sim::{ps_to_ns, Time, US};
 use crate::sim::Timeline;
-use crate::util::stats::Summary;
+use crate::util::stats::{Percentiles, Summary};
 
 /// Fig. 9e's three time series.
 #[derive(Debug, Clone)]
@@ -67,6 +67,26 @@ pub struct RunMetrics {
     pub tier_slow_accesses: u64,
     /// Tiering: epoch scans performed.
     pub tier_epochs: u64,
+    /// Expander-load latency reservoir (issue → data, queueing
+    /// included) for percentile queries — the multi-tenant experiments'
+    /// p99 victim-slowdown metric. Deterministic (index-hashed
+    /// reservoir), but not fingerprinted: the summary above already
+    /// pins the distribution bit-for-bit.
+    pub load_pctl: Percentiles,
+    /// Root-port memory-queue occupancy high-water mark, maxed across
+    /// this system's ports (pooled endpoints when this tenant is a
+    /// pool's sole upstream).
+    pub port_queue_hwm: u64,
+    /// Fabric: this tenant's switch-ingress-queue high-water mark
+    /// (0 for direct topologies and passthrough pools).
+    pub ingress_hwm: u64,
+    /// Fabric QoS: requests delayed by this tenant's token bucket.
+    pub qos_throttle_waits: u64,
+    /// Fabric QoS: total token-bucket delay, picoseconds.
+    pub qos_throttle_ps: u64,
+    /// Fabric: endpoint DevLoad observations of Moderate or worse
+    /// returned to this tenant (originating-tenant-only backpressure).
+    pub fabric_backpressure: u64,
     /// Simulation events processed (perf metric).
     pub events: u64,
     /// Host wall-clock for the run, nanoseconds (perf metric).
@@ -100,6 +120,12 @@ impl RunMetrics {
         } else {
             self.tier_fast_accesses as f64 / total as f64
         }
+    }
+
+    /// p99 expander-load latency in microseconds (0 when the run had no
+    /// expander loads).
+    pub fn load_p99_us(&self) -> f64 {
+        self.load_pctl.percentile(99.0) / 1e6
     }
 
     /// Events per wall second (simulator throughput).

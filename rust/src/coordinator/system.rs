@@ -10,11 +10,14 @@
 //!   root port queue logic, CXL controller, EP media), with optional SR
 //!   and DS engines.
 
+use std::sync::{Arc, Mutex};
+
 use crate::baselines::{GdsManager, UvmManager};
+use crate::fabric::{CxlSwitch, FabricLink};
 use crate::gpu::{line_of, AccessResult, Llc, MemMap, Op, Region, Warp, LINE};
 use crate::media::{DramModel, DramTimings, MediaKind, SsdModel, SsdParams};
-use crate::rootcomplex::{EpBackend, LoadPath, RootComplex, RootPort};
-use crate::sim::{EventQueue, Time, US};
+use crate::rootcomplex::{EpBackend, LoadPath, RootComplex};
+use crate::sim::{EventQueue, Steppable, Time, US};
 use crate::util::prng::Pcg32;
 use crate::workloads::{OpStream, TraceParams, WorkloadSpec};
 
@@ -66,6 +69,9 @@ pub struct System {
     /// Second buffer for the MSHR wake path; swapped with `mshr_blocked`
     /// so neither side's capacity is ever dropped.
     wake_scratch: Vec<usize>,
+    /// Construction instant, for the wall-clock perf metric (the
+    /// stepping API means `run()` no longer brackets the whole run).
+    started: std::time::Instant,
     pub metrics: RunMetrics,
 }
 
@@ -77,8 +83,51 @@ fn load_req(warp: usize) -> u64 {
 const STORE_REQ: u64 = 0;
 
 impl System {
-    /// Build a system for `spec` under `cfg`.
+    /// Build a system for `spec` under `cfg`. Panics on an invalid
+    /// topology; [`System::try_new`] is the message-not-panic variant.
     pub fn new(spec: &WorkloadSpec, cfg: &SystemConfig) -> System {
+        Self::try_new(spec, cfg).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Build a system for `spec` under `cfg`, failing with a contextful
+    /// message (instead of a panic) on bad topologies: zero warps/MLP,
+    /// a port-less CXL config, tiering combined with the fabric, a
+    /// non-power-of-two tier page, or an enumeration rejection.
+    pub fn try_new(spec: &WorkloadSpec, cfg: &SystemConfig) -> Result<System, String> {
+        Self::build(spec, cfg, None)
+    }
+
+    /// Build a pool tenant attached to an existing fabric switch as
+    /// upstream port `upstream`, with its device addresses offset by
+    /// `dpa_base` (the tenant's slice of the shared pool).
+    pub fn new_tenant(
+        spec: &WorkloadSpec,
+        cfg: &SystemConfig,
+        link: FabricLink,
+        upstream: usize,
+        dpa_base: u64,
+    ) -> Result<System, String> {
+        if cfg.strategy != MemStrategy::Cxl || !cfg.fabric.enabled {
+            return Err(format!(
+                "config `{}`: pool tenants need a fabric-enabled CXL configuration",
+                cfg.name
+            ));
+        }
+        Self::build(spec, cfg, Some((link, upstream, dpa_base)))
+    }
+
+    fn build(
+        spec: &WorkloadSpec,
+        cfg: &SystemConfig,
+        attach: Option<(FabricLink, usize, u64)>,
+    ) -> Result<System, String> {
+        let ctx = |e: String| format!("config `{}`: {e}", cfg.name);
+        if cfg.warps == 0 {
+            return Err(ctx("warps must be > 0".into()));
+        }
+        if cfg.mlp == 0 {
+            return Err(ctx("mlp must be > 0".into()));
+        }
         let trace_params = TraceParams {
             footprint: cfg.footprint,
             warps: cfg.warps,
@@ -106,43 +155,58 @@ impl System {
                 cfg.local_bytes,
                 SsdModel::new(SsdParams::for_kind(pick_ssd(cfg.media))),
             )),
-            MemStrategy::Cxl if expander == 0 => Backend::None,
+            MemStrategy::Cxl if expander == 0 && attach.is_none() => Backend::None,
             MemStrategy::Cxl => {
-                let ports = (0..cfg.ports)
-                    .map(|i| {
-                        let media = cfg
-                            .media_per_port
-                            .as_ref()
-                            .and_then(|m| m.get(i).copied())
-                            .unwrap_or(cfg.media);
-                        let ep = match media {
-                            MediaKind::Ddr5 => {
-                                EpBackend::Dram(DramModel::new(DramTimings::ddr5_5600()))
-                            }
-                            ssd => EpBackend::Ssd(SsdModel::new(SsdParams::for_kind(ssd))),
-                        };
-                        RootPort::new(
-                            i,
-                            cfg.controller,
-                            ep,
-                            cfg.sr_policy,
-                            cfg.ds_enabled && media.is_ssd(),
-                            cfg.ds_capacity,
-                        )
-                    })
-                    .collect();
-                let mut rc = RootComplex::new(ports);
-                if cfg.tier.enabled {
-                    // Tiered topology: media-grouped, way-interleaved HDM
-                    // windows (DRAM tier first) plus the hot-page tracker.
-                    let fast = rc
-                        .enumerate_interleaved(expander, cfg.tier.gran_bits)
-                        .expect("tiered HDM enumeration");
-                    rc.attach_tiering(cfg.tier, fast, expander);
-                } else {
-                    rc.enumerate(expander).expect("HDM enumeration");
+                if cfg.ports == 0 {
+                    return Err(ctx("a CXL topology needs at least one root port".into()));
                 }
-                Backend::Cxl(rc)
+                if cfg.tier.enabled && (cfg.fabric.enabled || attach.is_some()) {
+                    return Err(ctx(
+                        "tiering and the pooled fabric are mutually exclusive".into(),
+                    ));
+                }
+                if cfg.tier.enabled && !cfg.tier.page_bytes.is_power_of_two() {
+                    return Err(ctx(format!(
+                        "tier.page_bytes {:#x} is not a power of two",
+                        cfg.tier.page_bytes
+                    )));
+                }
+                if cfg.fabric.enabled || attach.is_some() {
+                    // Pooled fabric: endpoints live behind the shared
+                    // switch. A standalone fabric config builds its own
+                    // single-upstream switch (bit-transparent without
+                    // QoS); pool tenants attach to the coordinator's.
+                    let (link, upstream, dpa_base) = match attach {
+                        Some(t) => t,
+                        None => (
+                            Arc::new(Mutex::new(CxlSwitch::new(
+                                cfg.build_ports(),
+                                cfg.fabric,
+                                &[cfg.fabric.weight],
+                            ))),
+                            0,
+                            0,
+                        ),
+                    };
+                    let mut rc = RootComplex::new(Vec::new());
+                    rc.attach_fabric(link, upstream);
+                    rc.enumerate_fabric(expander, dpa_base).map_err(&ctx)?;
+                    Backend::Cxl(rc)
+                } else {
+                    let mut rc = RootComplex::new(cfg.build_ports());
+                    if cfg.tier.enabled {
+                        // Tiered topology: media-grouped, way-interleaved
+                        // HDM windows (DRAM tier first) plus the hot-page
+                        // tracker.
+                        let fast = rc
+                            .enumerate_interleaved(expander, cfg.tier.gran_bits)
+                            .map_err(&ctx)?;
+                        rc.attach_tiering(cfg.tier, fast, expander);
+                    } else {
+                        rc.enumerate(expander).map_err(&ctx)?;
+                    }
+                    Backend::Cxl(rc)
+                }
             }
         };
 
@@ -151,7 +215,7 @@ impl System {
             metrics.series = Some(Fig9eSeries::new());
         }
 
-        System {
+        Ok(System {
             cfg: cfg.clone(),
             q: EventQueue::new(),
             active_warps: warps.len(),
@@ -164,13 +228,15 @@ impl System {
             local: DramModel::new(DramTimings::gddr_local()),
             backend,
             rng: Pcg32::new(cfg.seed, 0xD15C),
+            started: std::time::Instant::now(),
             metrics,
-        }
+        })
     }
 
-    /// Run to completion; returns the collected metrics.
-    pub fn run(mut self) -> RunMetrics {
-        let wall_start = std::time::Instant::now();
+    /// Seed the calendar: one `Resume` per warp plus the background
+    /// ticks. Must run once before [`System::step_one`]; [`System::run`]
+    /// calls it for you.
+    pub fn prime(&mut self) {
         for w in 0..self.warps.len() {
             self.q.push_at(0, Ev::Resume(w));
         }
@@ -183,9 +249,29 @@ impl System {
         {
             self.q.push_at(self.cfg.tier.epoch, Ev::TierTick);
         }
+    }
 
-        while let Some((now, ev)) = self.q.pop() {
-            match ev {
+    /// All warps retired (pending background events no longer matter).
+    pub fn finished(&self) -> bool {
+        self.active_warps == 0
+    }
+
+    /// Time of the next pending event; `None` once finished or drained.
+    /// This is the multi-tenant coordinator's merge key
+    /// ([`crate::sim::interleave()`]).
+    pub fn next_event_time(&self) -> Option<Time> {
+        if self.finished() {
+            None
+        } else {
+            self.q.peek_time()
+        }
+    }
+
+    /// Pop and process exactly one event; `false` if the queue was
+    /// empty.
+    pub fn step_one(&mut self) -> bool {
+        let Some((now, ev)) = self.q.pop() else { return false };
+        match ev {
                 Ev::Resume(w) => self.resume(now, w),
                 Ev::LoadDone { warp, issued } => {
                     self.metrics.load_latency.add((now - issued) as f64);
@@ -233,13 +319,21 @@ impl System {
                         self.q.push_in(self.cfg.tier.epoch, Ev::TierTick);
                     }
                 }
-            }
-            if self.active_warps == 0 {
-                break;
-            }
         }
+        true
+    }
 
-        // Harvest component stats.
+    /// Run to completion; returns the collected metrics. Equivalent to
+    /// `prime` + `step_one` until finished + `harvest` — the pooled
+    /// coordinator drives the same pieces with its own merge loop.
+    pub fn run(mut self) -> RunMetrics {
+        self.prime();
+        while !self.finished() && self.step_one() {}
+        self.harvest()
+    }
+
+    /// Collect component stats into the final [`RunMetrics`].
+    pub fn harvest(mut self) -> RunMetrics {
         self.metrics.exec_time =
             self.warps.iter().map(|w| w.stats.finish).max().unwrap_or(self.q.now());
         self.metrics.llc = self.llc.stats.clone();
@@ -249,6 +343,26 @@ impl System {
                 for p in &rc.ports {
                     self.metrics.sr_issued += p.sr.stats.sr_issued;
                     self.metrics.ds_intercepts += p.ds.stats.read_intercepts;
+                    self.metrics.port_queue_hwm =
+                        self.metrics.port_queue_hwm.max(p.stats.queue_hwm);
+                }
+                if let Some(fh) = rc.fabric_harvest() {
+                    self.metrics.ingress_hwm = fh.upstream.ingress_hwm;
+                    self.metrics.qos_throttle_waits = fh.upstream.throttle_waits;
+                    self.metrics.qos_throttle_ps = fh.upstream.throttle_ps;
+                    self.metrics.fabric_backpressure = fh.upstream.backpressure;
+                    // A pool's endpoint counters are shared; only a sole
+                    // tenant may claim them (which is exactly what makes
+                    // the single-tenant pool report what direct `cxl`
+                    // reports). Multi-tenant pools report them at the
+                    // pool level instead (`fabric::PoolResult`).
+                    if let Some(pool) = fh.sole_pool {
+                        self.metrics.sr_issued += pool.sr_issued;
+                        self.metrics.ds_intercepts += pool.ds_intercepts;
+                        self.metrics.port_queue_hwm =
+                            self.metrics.port_queue_hwm.max(pool.queue_hwm);
+                        self.metrics.gc_episodes += pool.gc_episodes;
+                    }
                 }
                 if let Some(t) = &rc.tier {
                     self.metrics.tier_promotions = t.stats.promotions;
@@ -270,11 +384,13 @@ impl System {
                         self.metrics.gc_episodes += s.stats.gc_episodes;
                     }
                 }
+                // Pooled-endpoint GC joined the sole-tenant fabric
+                // harvest above (one lock, one pool_sums scan).
             }
             Backend::Gds(g) => self.metrics.gc_episodes = g.ssd.stats.gc_episodes,
             _ => {}
         }
-        self.metrics.wall_ns = wall_start.elapsed().as_nanos();
+        self.metrics.wall_ns = self.started.elapsed().as_nanos();
         self.metrics
     }
 
@@ -428,10 +544,13 @@ impl System {
                 }
             }
         };
+        // Tail reservoir: the multi-tenant experiments' p99 victim
+        // metric is the expander path only (LLC hits would drown it).
+        self.metrics.load_pctl.add((done - now) as f64);
         if let Some(series) = &mut self.metrics.series {
             series.load_latency.record(now, (done - now) as f64 / 1000.0);
             if let Backend::Cxl(rc) = &self.backend {
-                series.ingress_occupancy.record(now, rc.ports[0].occupancy(now) as f64);
+                series.ingress_occupancy.record(now, rc.ingress_occupancy(now) as f64);
             }
         }
         done
@@ -493,6 +612,17 @@ impl System {
                 }
             }
         }
+    }
+}
+
+/// The multi-tenant pool coordinator steps tenants one event at a time
+/// in global (time, tenant) order (`fabric::pool`, [`crate::sim::interleave()`]).
+impl Steppable for System {
+    fn next_time(&self) -> Option<Time> {
+        self.next_event_time()
+    }
+    fn step(&mut self) -> bool {
+        self.step_one()
     }
 }
 
@@ -615,6 +745,57 @@ mod tests {
         assert_eq!(a.events, b.events);
         assert_eq!(a.tier_promotions, b.tier_promotions);
         assert_eq!(a.tier_migrated_bytes, b.tier_migrated_bytes);
+    }
+
+    #[test]
+    fn single_tenant_pool_runs_and_touches_the_fabric() {
+        let m = System::new(spec("vadd"), &tiny("cxl-pool", MediaKind::Ddr5)).run();
+        assert!(m.expander_loads > 0);
+        assert_eq!(m.ingress_hwm, 0, "no-QoS single-tenant pool is passthrough");
+        assert!(m.port_queue_hwm >= 1, "pooled endpoints saw traffic");
+    }
+
+    #[test]
+    fn single_tenant_qos_pool_tracks_ingress() {
+        let m = System::new(spec("vadd"), &tiny("cxl-pool-qos", MediaKind::Ddr5)).run();
+        assert!(m.expander_loads > 0);
+        assert!(m.ingress_hwm >= 1, "QoS pool must track its ingress queue");
+    }
+
+    #[test]
+    fn try_new_rejects_bad_topologies_with_context() {
+        let mut c = tiny("cxl", MediaKind::Ddr5);
+        c.ports = 0;
+        let err = System::try_new(spec("vadd"), &c).unwrap_err();
+        assert!(err.contains("config `cxl`"), "no context: {err}");
+        assert!(err.contains("root port"), "wrong message: {err}");
+
+        let mut c = tiny("cxl-pool", MediaKind::Ddr5);
+        c.tier.enabled = true;
+        let err = System::try_new(spec("vadd"), &c).unwrap_err();
+        assert!(err.contains("mutually exclusive"), "wrong message: {err}");
+
+        let mut c = tiny("cxl-tier", MediaKind::Znand);
+        c.tier.page_bytes = 3000;
+        let err = System::try_new(spec("vadd"), &c).unwrap_err();
+        assert!(err.contains("power of two"), "wrong message: {err}");
+
+        let mut c = tiny("cxl", MediaKind::Ddr5);
+        c.warps = 0;
+        assert!(System::try_new(spec("vadd"), &c).is_err());
+    }
+
+    #[test]
+    fn stepping_api_matches_run() {
+        let cfg = tiny("cxl-sr", MediaKind::Znand);
+        let whole = System::new(spec("bfs"), &cfg).run();
+        let mut s = System::new(spec("bfs"), &cfg);
+        s.prime();
+        while !s.finished() && s.step_one() {}
+        let stepped = s.harvest();
+        assert_eq!(whole.exec_time, stepped.exec_time);
+        assert_eq!(whole.events, stepped.events);
+        assert_eq!(whole.expander_loads, stepped.expander_loads);
     }
 
     #[test]

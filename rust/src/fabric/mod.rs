@@ -1,0 +1,80 @@
+//! Pooled CXL fabric: a virtual switch between N tenant GPUs and M
+//! shared memory expanders, plus the multi-tenant pool coordinator.
+//!
+//! The paper's topology stops at one GPU with direct-attached root
+//! ports; this subsystem models the next system tier the CXL roadmap
+//! (and the LMB line of work) describes — *switch-attached pooling*,
+//! where several GPUs reach one set of DRAM/SSD expanders through a
+//! shared virtual CXL switch:
+//!
+//! * [`switch`] — the switch itself: per-upstream ingress queues,
+//!   weighted-round-robin arbitration of downstream memory-queue slots,
+//!   switch-hop latency, originating-tenant-only DevLoad backpressure,
+//!   and the per-tenant QoS token bucket ([`switch::TokenBucket`]).
+//! * [`pool`] — the multi-tenant coordinator: N independent GPU
+//!   [`System`](crate::coordinator::system::System)s stepped against the
+//!   shared pool in one deterministic global event order
+//!   ([`crate::sim::interleave()`]).
+//!
+//! Tenants address disjoint device-address slices of the pooled
+//! endpoints (per-tenant `dpa_base` in the HDM walk), so pooling is a
+//! *capacity partition with shared bandwidth* — contention is modeled,
+//! aliasing is not. Design notes: DESIGN.md §13.
+
+pub mod pool;
+pub mod switch;
+
+pub use pool::{run_pool, PoolResult, Tenant, TenantResult};
+pub use switch::{CxlSwitch, PoolSums, TenantFabricStats, TokenBucket};
+
+use std::sync::{Arc, Mutex};
+
+use crate::sim::{Time, NS};
+
+/// Shared handle to the pool's switch. `Arc<Mutex<..>>` rather than
+/// `Rc<RefCell<..>>` so a fabric-backed `RootComplex` stays `Send`
+/// (examples serve one over a socket); within a pool run the lock is
+/// uncontended — the coordinator steps tenants one event at a time.
+pub type FabricLink = Arc<Mutex<CxlSwitch>>;
+
+/// Fabric knobs carried by `SystemConfig` (one copy per tenant; the
+/// pool builds the switch from the first tenant's spec and each
+/// tenant's `weight`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FabricSpec {
+    /// Route this configuration's expander through a fabric switch
+    /// instead of direct-attached root ports.
+    pub enabled: bool,
+    /// Enable the per-tenant QoS token bucket on switch ingress.
+    pub qos: bool,
+    /// Switch traversal cost per direction (charged only when the
+    /// switch is not in passthrough mode).
+    pub hop_lat: Time,
+    /// Ingress-queue slots per upstream port.
+    pub ingress_cap: usize,
+    /// This tenant's WRR weight (share of each endpoint's memory-queue
+    /// slots under contention).
+    pub weight: u32,
+    /// QoS token-bucket rate floor, bytes/s (AIMD never cuts below).
+    pub min_rate: u64,
+    /// Rate ceiling, bytes/s. The bucket starts here, so QoS is inert
+    /// until congestion feedback walks the rate down.
+    pub max_rate: u64,
+    /// Bucket depth in bytes (burst tolerance before pacing).
+    pub burst_bytes: u64,
+}
+
+impl Default for FabricSpec {
+    fn default() -> FabricSpec {
+        FabricSpec {
+            enabled: false,
+            qos: false,
+            hop_lat: 12 * NS,
+            ingress_cap: 64,
+            weight: 1,
+            min_rate: 1 << 26,  // 64 MiB/s floor
+            max_rate: 1 << 42,  // ~4.4 TB/s: effectively unthrottled
+            burst_bytes: 2048,  // 32 cache lines
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! The multi-tenant pool coordinator: N independent GPU [`System`]s
+//! stepped against one shared switch on a single global event order.
+//!
+//! Each tenant keeps its own calendar queue, RNG, warps and metrics —
+//! everything the single-GPU simulator owns — while the switch and its
+//! pooled endpoints are shared through the [`FabricLink`]. The
+//! coordinator merges the tenants' calendars with
+//! [`crate::sim::interleave()`]: always step the tenant whose next event
+//! is earliest (ties to the lowest tenant index), which is exactly the
+//! order one global queue would produce — so pool runs are
+//! bit-reproducible (guarded in `tests/determinism.rs`).
+//!
+//! Tenants receive disjoint device-address slices of the pool (stacked
+//! `dpa_base` offsets in each tenant's HDM walk): pooling shares
+//! *bandwidth and queues*, never aliases *data*.
+
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::config::{MemStrategy, SystemConfig};
+use crate::coordinator::metrics::RunMetrics;
+use crate::coordinator::system::System;
+use crate::sim::interleave;
+use crate::workloads::WorkloadSpec;
+
+use super::switch::{CxlSwitch, PoolSums};
+use super::FabricLink;
+
+/// One tenant of a pool run: a workload bound to a fabric-enabled
+/// configuration (the config's `fabric.weight` is the tenant's WRR
+/// weight on the shared switch).
+pub struct Tenant {
+    pub workload: &'static WorkloadSpec,
+    pub cfg: SystemConfig,
+}
+
+/// One tenant's outcome.
+#[derive(Debug, Clone)]
+pub struct TenantResult {
+    pub workload: &'static str,
+    pub config: String,
+    pub metrics: RunMetrics,
+}
+
+/// A pool run's outcome: per-tenant metrics plus the shared endpoints'
+/// pool-level sums (which no single tenant may claim — see
+/// `System::harvest`).
+#[derive(Debug, Clone)]
+pub struct PoolResult {
+    pub tenants: Vec<TenantResult>,
+    pub pool: PoolSums,
+    /// Total simulation events across every tenant.
+    pub events: u64,
+}
+
+/// Run `tenants` against one shared pool to completion.
+///
+/// Validation: every tenant must be a fabric-enabled CXL configuration
+/// with an expander footprint, and all tenants must agree on the pool
+/// topology (port count and media) and the switch spec (QoS on/off,
+/// hop, ingress depth) — the switch is built once from tenant 0's
+/// config plus every tenant's weight.
+pub fn run_pool(tenants: &[Tenant]) -> Result<PoolResult, String> {
+    let base = &tenants
+        .first()
+        .ok_or_else(|| "pool needs at least one tenant".to_string())?
+        .cfg;
+    for t in tenants {
+        let c = &t.cfg;
+        let name = &c.name;
+        if c.strategy != MemStrategy::Cxl || !c.fabric.enabled {
+            return Err(format!(
+                "tenant config `{name}` is not a pooled-fabric configuration"
+            ));
+        }
+        if c.footprint <= c.local_bytes {
+            return Err(format!("tenant config `{name}` has no expander footprint"));
+        }
+        if c.ports != base.ports || c.media != base.media || c.media_per_port != base.media_per_port
+        {
+            return Err(format!(
+                "tenant config `{name}` disagrees with the pool topology of `{}`",
+                base.name
+            ));
+        }
+        // The switch is built once from tenant 0's spec: every field
+        // except the per-tenant WRR weight must agree, or a tenant's
+        // QoS/topology knobs would be silently discarded.
+        let mut normalized = c.fabric;
+        normalized.weight = base.fabric.weight;
+        if normalized != base.fabric {
+            return Err(format!(
+                "tenant config `{name}` disagrees with the switch spec of `{}`",
+                base.name
+            ));
+        }
+    }
+
+    let weights: Vec<u32> = tenants.iter().map(|t| t.cfg.fabric.weight).collect();
+    let link: FabricLink =
+        Arc::new(Mutex::new(CxlSwitch::new(base.build_ports(), base.fabric, &weights)));
+
+    // Stack each tenant's device-address slice per endpoint so pooled
+    // capacity partitions cleanly.
+    let mut systems: Vec<System> = Vec::with_capacity(tenants.len());
+    let mut dpa_base = 0u64;
+    for (i, t) in tenants.iter().enumerate() {
+        let expander = t.cfg.footprint - t.cfg.local_bytes;
+        systems.push(System::new_tenant(t.workload, &t.cfg, Arc::clone(&link), i, dpa_base)?);
+        dpa_base += expander / t.cfg.ports as u64;
+    }
+
+    for s in &mut systems {
+        s.prime();
+    }
+    interleave(&mut systems);
+
+    let pool = link.lock().expect("fabric mutex poisoned").pool_sums();
+    let tenants_out: Vec<TenantResult> = systems
+        .into_iter()
+        .zip(tenants)
+        .map(|(s, t)| TenantResult {
+            workload: t.workload.name,
+            config: t.cfg.name.clone(),
+            metrics: s.harvest(),
+        })
+        .collect();
+    let events = tenants_out.iter().map(|t| t.metrics.events).sum();
+    Ok(PoolResult { tenants: tenants_out, pool, events })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::media::MediaKind;
+    use crate::workloads::table1b::spec;
+
+    fn tenant(config: &str, wl: &str, ops: usize) -> Tenant {
+        let mut cfg = SystemConfig::named(config, MediaKind::Ddr5);
+        cfg.total_ops = ops;
+        cfg.warps = 8;
+        cfg.footprint = 4 << 20;
+        cfg.local_bytes = 64 << 10;
+        Tenant { workload: spec(wl), cfg }
+    }
+
+    #[test]
+    fn two_tenant_pool_completes_and_shares_endpoints() {
+        let res = run_pool(&[
+            tenant("cxl-pool", "bfs", 6_000),
+            tenant("cxl-pool", "vadd", 6_000),
+        ])
+        .unwrap();
+        assert_eq!(res.tenants.len(), 2);
+        for t in &res.tenants {
+            assert!(t.metrics.exec_time > 0, "{} never ran", t.workload);
+            assert!(t.metrics.expander_loads > 0, "{} never hit the pool", t.workload);
+            assert!(t.metrics.ingress_hwm >= 1, "{} bypassed the switch", t.workload);
+        }
+        assert_eq!(
+            res.pool.loads,
+            res.tenants.iter().map(|t| t.metrics.expander_loads).sum::<u64>(),
+            "pooled endpoints must see exactly the tenants' expander loads"
+        );
+        assert!(res.events > 0);
+    }
+
+    #[test]
+    fn pool_rejects_mismatched_tenants() {
+        let a = tenant("cxl-pool", "bfs", 1_000);
+        let mut b = tenant("cxl-pool", "vadd", 1_000);
+        b.cfg.ports = 2;
+        assert!(run_pool(&[a, b]).unwrap_err().contains("pool topology"));
+
+        let a = tenant("cxl-pool", "bfs", 1_000);
+        let b = tenant("cxl-pool-qos", "vadd", 1_000);
+        assert!(run_pool(&[a, b]).unwrap_err().contains("switch spec"));
+
+        let direct = {
+            let mut t = tenant("cxl-pool", "bfs", 1_000);
+            t.cfg = SystemConfig::named("cxl", MediaKind::Ddr5);
+            t
+        };
+        assert!(run_pool(&[direct]).unwrap_err().contains("not a pooled-fabric"));
+        assert!(run_pool(&[]).unwrap_err().contains("at least one tenant"));
+    }
+
+    #[test]
+    fn tenants_get_disjoint_dpa_slices() {
+        // Two tenants, tiny footprints: completion implies no decode
+        // misses; the pool sums prove both reached the endpoints.
+        let res = run_pool(&[
+            tenant("cxl-pool", "vadd", 4_000),
+            tenant("cxl-pool", "saxpy", 4_000),
+        ])
+        .unwrap();
+        assert!(res.pool.loads > 0 && res.pool.queue_hwm >= 1);
+    }
+}

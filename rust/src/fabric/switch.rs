@@ -1,0 +1,616 @@
+//! The virtual CXL switch: N upstream ports (one per tenant GPU) fanned
+//! into M shared downstream endpoints.
+//!
+//! Request path (non-passthrough): per-tenant **token bucket** (QoS
+//! policing, [`TokenBucket`]) → per-upstream **ingress queue** (busy-until
+//! slots, high-water mark tracked) → **WRR arbitration** for the
+//! downstream endpoint (each tenant holds at most its weighted share of
+//! the endpoint's memory-queue slots concurrently) → switch **hop
+//! latency** → the shared [`RootPort`] (which charges its own queue,
+//! controller legs and media exactly as in the direct topology) → hop
+//! back.
+//!
+//! **DevLoad backpressure propagates to the originating tenant only**:
+//! the endpoint's DevLoad observed when a tenant's request arrives is
+//! recorded against that tenant and — when QoS is on — fed to *its*
+//! token bucket, re-classified against the tenant's own share occupancy
+//! so one tenant's congestion never throttles another.
+//!
+//! **Passthrough invariant**: a switch with exactly one upstream port
+//! and QoS off is bit-transparent — no hop, no ingress bookkeeping, no
+//! arbitration. A single-tenant `cxl-pool` therefore reproduces the
+//! direct `cxl` configuration bit-identically (guarded in
+//! `tests/determinism.rs`).
+
+use crate::cxl::DevLoad;
+use crate::media::MediaKind;
+use crate::rootcomplex::rootport::{EpBackend, LoadOutcome, RootPort, StoreOutcome};
+use crate::rootcomplex::spec_read::MEM_QUEUE_CAP;
+use crate::sim::Time;
+use crate::util::prng::Pcg32;
+
+use super::FabricSpec;
+
+/// Picoseconds per second (token-bucket fixed-point scale: one token
+/// unit is one byte·picosecond-per-second, so refill per picosecond is
+/// exactly `rate` in bytes/s).
+const PS_PER_S: u128 = 1_000_000_000_000;
+
+/// Completions per AIMD adjustment window.
+const AIMD_WINDOW: u32 = 32;
+
+/// Ingress token bucket with AIMD rate adaptation.
+///
+/// The rate starts at `max_rate` (unthrottled) and only walks down when
+/// the tenant's own completions show *real* congestion — its WRR share
+/// saturated, the endpoint overloaded, and latency inflated past 1.5x
+/// the unloaded reference. That gate keeps the bucket a shaper at the
+/// congestion knee: sustained throughput is preserved (capacity-limited
+/// tenants keep the endpoint busy; demand-limited tenants are never
+/// throttled) while queue buildup — what the victim's tail sees — is
+/// bounded. Integer fixed-point throughout, so pacing is deterministic.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    /// Current rate, bytes per second (AIMD-adapted).
+    rate: u64,
+    min_rate: u64,
+    max_rate: u64,
+    /// Bucket depth in bytes.
+    burst: u64,
+    /// Tokens, in byte·ps/s units (`bytes * PS_PER_S`).
+    tokens: u128,
+    last: Time,
+    window: u32,
+    window_congested: bool,
+}
+
+impl TokenBucket {
+    pub fn new(rate: u64, min_rate: u64, max_rate: u64, burst: u64) -> TokenBucket {
+        assert!(rate > 0 && min_rate > 0 && max_rate >= min_rate, "bad token-bucket rates");
+        TokenBucket {
+            rate: rate.clamp(min_rate, max_rate),
+            min_rate,
+            max_rate,
+            burst: burst.max(64),
+            tokens: burst.max(64) as u128 * PS_PER_S,
+            last: 0,
+            window: 0,
+            window_congested: false,
+        }
+    }
+
+    /// Earliest time a `len`-byte request may enter the switch, given
+    /// arrival at `now`. Consumes the tokens (waiting accrues exactly
+    /// the deficit, then spends it).
+    pub fn ready_at(&mut self, now: Time, len: u64) -> Time {
+        let now = now.max(self.last);
+        let dt = (now - self.last) as u128;
+        self.tokens =
+            (self.tokens + dt * self.rate as u128).min(self.burst as u128 * PS_PER_S);
+        self.last = now;
+        let need = len as u128 * PS_PER_S;
+        if self.tokens >= need {
+            self.tokens -= need;
+            now
+        } else {
+            let deficit = need - self.tokens;
+            self.tokens = 0;
+            let wait = (deficit + self.rate as u128 - 1) / self.rate as u128;
+            self.last = now + wait as Time;
+            self.last
+        }
+    }
+
+    /// AIMD feedback from one of this tenant's demand-load completions.
+    pub fn on_load_feedback(&mut self, congested: bool) {
+        self.window_congested |= congested;
+        self.window += 1;
+        if self.window >= AIMD_WINDOW {
+            self.rate = if self.window_congested {
+                // Multiplicative decrease (x0.8): gentle, so the
+                // equilibrium hovers just below the congestion knee.
+                (self.rate - self.rate / 5).max(self.min_rate)
+            } else {
+                // Fast recovery (x1.25) back toward unthrottled.
+                (self.rate + self.rate / 4).min(self.max_rate)
+            };
+            self.window = 0;
+            self.window_congested = false;
+        }
+    }
+
+    /// Current rate in bytes/s.
+    pub fn rate(&self) -> u64 {
+        self.rate
+    }
+}
+
+/// Per-tenant switch counters, harvested into that tenant's
+/// `RunMetrics` (per-tenant breakdowns).
+#[derive(Debug, Clone, Default)]
+pub struct TenantFabricStats {
+    /// Demand loads forwarded for this tenant.
+    pub loads: u64,
+    /// Stores forwarded for this tenant.
+    pub stores: u64,
+    /// Ingress-queue high-water mark (occupancy including the admitted
+    /// request; 0 in passthrough mode, which tracks nothing).
+    pub ingress_hwm: u64,
+    /// Requests that waited for an ingress slot.
+    pub ingress_waits: u64,
+    /// Requests that waited for a WRR share slot on their endpoint.
+    pub wrr_waits: u64,
+    /// Requests delayed by the QoS token bucket.
+    pub throttle_waits: u64,
+    /// Total picoseconds of token-bucket delay.
+    pub throttle_ps: u64,
+    /// Endpoint DevLoad observations of Moderate or worse, returned to
+    /// this tenant (the originating-tenant-only backpressure channel).
+    pub backpressure: u64,
+    /// The Severe subset of `backpressure`.
+    pub backpressure_severe: u64,
+}
+
+/// Pool-level sums over the shared downstream ports.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolSums {
+    pub loads: u64,
+    pub stores: u64,
+    pub sr_issued: u64,
+    pub ds_intercepts: u64,
+    pub gc_episodes: u64,
+    /// Max memory-queue high-water mark across the pooled endpoints.
+    pub queue_hwm: u64,
+}
+
+/// One tenant's side of the switch.
+#[derive(Debug)]
+struct UpstreamPort {
+    /// Ingress-queue slots (busy-until), held from admission to response.
+    slots: Vec<Time>,
+    /// Per-downstream in-flight slots bounded to this tenant's WRR share
+    /// of the endpoint's memory queue: weighted round-robin arbitration
+    /// in deficit-share form — under contention no tenant holds more
+    /// than `weight/total` of an endpoint's slots.
+    share: Vec<Vec<Time>>,
+    qos: TokenBucket,
+    stats: TenantFabricStats,
+}
+
+/// The virtual CXL switch shared by every tenant of a pool.
+#[derive(Debug)]
+pub struct CxlSwitch {
+    spec: FabricSpec,
+    /// True iff one upstream port and QoS off: the switch is
+    /// bit-transparent (see module docs).
+    passthrough: bool,
+    /// The shared pooled endpoints (same `RootPort` machinery as the
+    /// direct topology: memory queue, controller legs, SR/DS, media).
+    pub downstream: Vec<RootPort>,
+    up: Vec<UpstreamPort>,
+    /// Per-endpoint unloaded 64 B read latency (AIMD congestion
+    /// baseline).
+    unloaded: Vec<Time>,
+    /// Last pooled DS flush sweep (cadence dedup across tenants' ticks;
+    /// 0 = never flushed).
+    last_flush: Time,
+}
+
+/// Minimum spacing between pooled DS flush sweeps — the same 10 µs
+/// cadence a single `System` schedules its own `FlushTick` at.
+const FLUSH_GAP: Time = 10 * crate::sim::US;
+
+/// Acquire the earliest-free busy-until slot at or after `now`.
+fn acquire(slots: &mut [Time], now: Time) -> (usize, Time) {
+    let (idx, &free) = slots
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, &t)| t)
+        .expect("switch slot vectors are non-empty by construction");
+    (idx, free.max(now))
+}
+
+impl CxlSwitch {
+    /// Build a switch over `downstream` pooled endpoints with one
+    /// upstream port per entry of `weights` (the tenants' WRR weights).
+    pub fn new(downstream: Vec<RootPort>, spec: FabricSpec, weights: &[u32]) -> CxlSwitch {
+        assert!(!downstream.is_empty(), "fabric needs at least one downstream endpoint");
+        assert!(!weights.is_empty(), "fabric needs at least one upstream port");
+        let total: u64 = weights.iter().map(|&w| w.max(1) as u64).sum();
+        let unloaded: Vec<Time> = downstream.iter().map(|p| p.unloaded_read_ps()).collect();
+        // Weighted shares of the endpoint queue, floored at one slot so
+        // every tenant can always make progress. The floor can push the
+        // sum past the queue capacity (extreme weight skew, or more
+        // tenants than slots), so trim the largest shares back until the
+        // sum fits — deterministically, largest share first, ties to the
+        // lowest index. Only when every share is already 1 (more tenants
+        // than slots) does the sum stay oversubscribed; the endpoint's
+        // own memory queue then provides the final backpressure.
+        let mut shares: Vec<usize> = weights
+            .iter()
+            .map(|&w| ((MEM_QUEUE_CAP as u64 * w.max(1) as u64) / total).max(1) as usize)
+            .collect();
+        while shares.iter().sum::<usize>() > MEM_QUEUE_CAP {
+            let (imax, &smax) = shares
+                .iter()
+                .enumerate()
+                .max_by(|(ia, a), (ib, b)| a.cmp(b).then(ib.cmp(ia)))
+                .expect("weights non-empty");
+            if smax <= 1 {
+                break;
+            }
+            shares[imax] -= 1;
+        }
+        let up = shares
+            .iter()
+            .map(|&share| {
+                UpstreamPort {
+                    slots: vec![0; spec.ingress_cap.max(1)],
+                    share: (0..downstream.len()).map(|_| vec![0; share]).collect(),
+                    qos: TokenBucket::new(
+                        spec.max_rate,
+                        spec.min_rate,
+                        spec.max_rate,
+                        spec.burst_bytes,
+                    ),
+                    stats: TenantFabricStats::default(),
+                }
+            })
+            .collect();
+        CxlSwitch {
+            passthrough: weights.len() == 1 && !spec.qos,
+            spec,
+            downstream,
+            up,
+            unloaded,
+            last_flush: 0,
+        }
+    }
+
+    /// Number of upstream (tenant) ports.
+    pub fn upstreams(&self) -> usize {
+        self.up.len()
+    }
+
+    /// Media class of each downstream endpoint, in port order (the
+    /// fabric enumeration's config-space walk input).
+    pub fn downstream_kinds(&self) -> Vec<MediaKind> {
+        self.downstream.iter().map(|p| p.backend.kind()).collect()
+    }
+
+    /// One tenant's switch counters.
+    pub fn upstream_stats(&self, up: usize) -> &TenantFabricStats {
+        &self.up[up].stats
+    }
+
+    /// Pool-level sums over the shared endpoints.
+    pub fn pool_sums(&self) -> PoolSums {
+        let mut s = PoolSums::default();
+        for p in &self.downstream {
+            s.loads += p.stats.loads;
+            s.stores += p.stats.stores;
+            s.sr_issued += p.sr.stats.sr_issued;
+            s.ds_intercepts += p.ds.stats.read_intercepts;
+            s.queue_hwm = s.queue_hwm.max(p.stats.queue_hwm);
+            if let EpBackend::Ssd(m) = &p.backend {
+                s.gc_episodes += m.stats.gc_episodes;
+            }
+        }
+        s
+    }
+
+    /// Ingress-queue occupancy of one upstream port at `at` (downstream
+    /// port 0's memory queue in passthrough mode, where the ingress
+    /// tracks nothing).
+    pub fn ingress_occupancy(&self, up: usize, at: Time) -> usize {
+        if self.passthrough {
+            return self.downstream.first().map_or(0, |p| p.occupancy(at));
+        }
+        self.up[up].slots.iter().filter(|&&t| t > at).count()
+    }
+
+    /// Total DS-buffered bytes across the pooled endpoints.
+    pub fn ds_backlog(&self) -> u64 {
+        self.downstream.iter().map(|p| p.ds.buffered_bytes()).sum()
+    }
+
+    /// Background DS flush across the pooled endpoints. *Every* tenant's
+    /// `FlushTick` forwards here — gating on one fixed tenant would
+    /// stall the pool's flush once that tenant retires — and the switch
+    /// dedupes to one sweep per [`FLUSH_GAP`] so co-tenants don't
+    /// multiply the cadence. Deterministic: in the pool's global event
+    /// order the first tick at or past the gap wins.
+    pub fn flush_tick(&mut self, now: Time, rng: &mut Pcg32) {
+        if now < self.last_flush + FLUSH_GAP && self.last_flush != 0 {
+            return;
+        }
+        self.last_flush = now;
+        for p in &mut self.downstream {
+            p.flush_step(now, 8, rng);
+        }
+    }
+
+    /// Admission pipeline shared by loads and stores: token bucket →
+    /// ingress slot → WRR share slot. Returns (ingress slot, share
+    /// slot, start time at the switch egress) — the caller charges the
+    /// hop, runs the endpoint, then marks both slots busy until the
+    /// response time.
+    fn admit(
+        up: &mut UpstreamPort,
+        qos: bool,
+        down: usize,
+        now: Time,
+        len: u64,
+    ) -> (usize, usize, Time) {
+        let mut start = now;
+        if qos {
+            let ready = up.qos.ready_at(start, len);
+            if ready > start {
+                up.stats.throttle_waits += 1;
+                up.stats.throttle_ps += ready - start;
+                start = ready;
+            }
+        }
+        let (islot, istart) = acquire(&mut up.slots, start);
+        if istart > start {
+            up.stats.ingress_waits += 1;
+        }
+        start = istart;
+        let occ = up.slots.iter().filter(|&&t| t > start).count() as u64 + 1;
+        up.stats.ingress_hwm = up.stats.ingress_hwm.max(occ);
+        let (wslot, wstart) = acquire(&mut up.share[down], start);
+        if wstart > start {
+            up.stats.wrr_waits += 1;
+        }
+        (islot, wslot, wstart)
+    }
+
+    /// Route a demand load from upstream `up` to downstream endpoint
+    /// `down` at device address `addr`.
+    pub fn load(&mut self, up: usize, down: usize, now: Time, addr: u64, len: u64) -> LoadOutcome {
+        if self.passthrough {
+            return self.downstream[down].load(now, addr, len);
+        }
+        let CxlSwitch { spec, downstream, up: ups, unloaded, .. } = self;
+        let u = &mut ups[up];
+        u.stats.loads += 1;
+        let (islot, wslot, start) = Self::admit(u, spec.qos, down, now, len);
+        let at_port = start + spec.hop_lat;
+        // The endpoint's DevLoad as this tenant's request arrives: the
+        // backpressure channel, attributed to the originating tenant
+        // only.
+        let dl = downstream[down].devload(at_port);
+        if dl.overloaded() {
+            u.stats.backpressure += 1;
+            if dl == DevLoad::Severe {
+                u.stats.backpressure_severe += 1;
+            }
+        }
+        let out = downstream[down].load(at_port, addr, len);
+        let done = out.done + spec.hop_lat;
+        u.slots[islot] = done;
+        u.share[down][wslot] = done;
+        if spec.qos {
+            // Congestion for AIMD = this tenant's own share saturated
+            // (it is the cause) AND the endpoint overloaded AND the
+            // observed latency inflated past 1.5x the unloaded baseline
+            // (it is real queueing, not just occupancy). The own-share
+            // gate is what re-classifies the endpoint's DevLoad per
+            // tenant: a light tenant sharing a congested endpoint is
+            // never throttled for someone else's queue. The 1.5x knee
+            // keeps the equilibrium tight — co-tenants see at most
+            // ~half an unloaded service time of queue buildup.
+            let share = &u.share[down];
+            let own_busy = share.iter().filter(|&&t| t > at_port).count();
+            let own_dl = DevLoad::classify(own_busy, share.len(), false);
+            let lat = out.done.saturating_sub(at_port);
+            let infl = unloaded[down] + unloaded[down] / 2;
+            let congested = own_dl == DevLoad::Severe && dl.overloaded() && lat > infl;
+            u.qos.on_load_feedback(congested);
+        }
+        LoadOutcome { done, path: out.path }
+    }
+
+    /// Route a store (writeback) from upstream `up` to endpoint `down`.
+    pub fn store(
+        &mut self,
+        up: usize,
+        down: usize,
+        now: Time,
+        addr: u64,
+        len: u64,
+        rng: &mut Pcg32,
+    ) -> StoreOutcome {
+        if self.passthrough {
+            return self.downstream[down].store(now, addr, len, rng);
+        }
+        let CxlSwitch { spec, downstream, up: ups, .. } = self;
+        let u = &mut ups[up];
+        u.stats.stores += 1;
+        let (islot, wslot, start) = Self::admit(u, spec.qos, down, now, len);
+        let at_port = start + spec.hop_lat;
+        let dl = downstream[down].devload(at_port);
+        if dl.overloaded() {
+            u.stats.backpressure += 1;
+            if dl == DevLoad::Severe {
+                u.stats.backpressure_severe += 1;
+            }
+        }
+        let out = downstream[down].store(at_port, addr, len, rng);
+        let ack = out.ack + spec.hop_lat;
+        u.slots[islot] = ack;
+        u.share[down][wslot] = ack;
+        StoreOutcome { ack, buffered: out.buffered }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cxl::ControllerKind;
+    use crate::media::{DramModel, DramTimings, SsdModel, SsdParams};
+    use crate::rootcomplex::SrPolicy;
+    use crate::sim::{NS, US};
+
+    fn dram_port(id: usize) -> RootPort {
+        RootPort::new(
+            id,
+            ControllerKind::Panmnesia,
+            EpBackend::Dram(DramModel::new(DramTimings::ddr5_5600())),
+            SrPolicy::Off,
+            false,
+            0,
+        )
+    }
+
+    fn ssd_port(id: usize) -> RootPort {
+        RootPort::new(
+            id,
+            ControllerKind::Panmnesia,
+            EpBackend::Ssd(SsdModel::new(SsdParams::znand())),
+            SrPolicy::Off,
+            false,
+            0,
+        )
+    }
+
+    fn spec(qos: bool) -> FabricSpec {
+        FabricSpec { enabled: true, qos, ..FabricSpec::default() }
+    }
+
+    #[test]
+    fn single_upstream_no_qos_is_passthrough() {
+        let mut sw = CxlSwitch::new(vec![dram_port(0)], spec(false), &[1]);
+        let mut direct = dram_port(0);
+        let a = sw.load(0, 0, 0, 0x1000, 64);
+        let b = direct.load(0, 0x1000, 64);
+        assert_eq!(a.done, b.done, "passthrough must not add latency");
+        assert_eq!(sw.upstream_stats(0).loads, 0, "passthrough tracks nothing");
+        assert_eq!(sw.upstream_stats(0).ingress_hwm, 0);
+    }
+
+    #[test]
+    fn multi_upstream_charges_the_hop_both_ways() {
+        let mut sw = CxlSwitch::new(vec![dram_port(0)], spec(false), &[1, 1]);
+        let mut direct = dram_port(0);
+        let a = sw.load(0, 0, 0, 0x1000, 64);
+        let b = direct.load(0, 0x1000, 64);
+        assert_eq!(a.done, b.done + 2 * FabricSpec::default().hop_lat);
+        assert_eq!(sw.upstream_stats(0).loads, 1);
+        assert!(sw.upstream_stats(0).ingress_hwm >= 1);
+        assert_eq!(sw.upstream_stats(1).loads, 0, "tenant 1 never issued");
+    }
+
+    #[test]
+    fn wrr_share_caps_one_tenants_inflight() {
+        // Two equal-weight tenants: each may hold at most half the
+        // endpoint's 32 slots. The 17th concurrent request from one
+        // tenant must wait even though the endpoint has free slots.
+        let mut sw = CxlSwitch::new(vec![ssd_port(0)], spec(false), &[1, 1]);
+        let share = MEM_QUEUE_CAP / 2;
+        for i in 0..share as u64 {
+            sw.load(0, 0, 0, i * 4096 * 64, 64);
+        }
+        assert_eq!(sw.upstream_stats(0).wrr_waits, 0, "within the share: no wait");
+        sw.load(0, 0, 0, 0x400_0000, 64);
+        assert!(
+            sw.upstream_stats(0).wrr_waits >= 1,
+            "request past the share must queue behind own in-flight"
+        );
+        // The other tenant still gets served promptly off its own share.
+        let victim = sw.load(1, 0, 0, 0x10_0000, 64);
+        assert!(
+            victim.done < 100 * US,
+            "victim must not wait behind the hog's share: {}",
+            victim.done
+        );
+        assert_eq!(sw.upstream_stats(1).wrr_waits, 0);
+    }
+
+    #[test]
+    fn token_bucket_paces_and_adapts() {
+        let mut tb = TokenBucket::new(1 << 30, 1 << 26, 1 << 30, 128);
+        // Burst admits immediately, then pacing kicks in.
+        assert_eq!(tb.ready_at(0, 64), 0);
+        assert_eq!(tb.ready_at(0, 64), 0);
+        let t = tb.ready_at(0, 64);
+        assert!(t > 0, "empty bucket must delay");
+        // 64 bytes at 2^30 B/s is ~59.6 ns.
+        assert!((50 * NS..80 * NS).contains(&t), "pace delay {t} ps");
+        // AIMD: a congested window lowers the rate, clean windows raise it.
+        let r0 = tb.rate();
+        for _ in 0..AIMD_WINDOW {
+            tb.on_load_feedback(true);
+        }
+        assert!(tb.rate() < r0, "congested window must cut the rate");
+        let r1 = tb.rate();
+        for _ in 0..AIMD_WINDOW * 8 {
+            tb.on_load_feedback(false);
+        }
+        assert!(tb.rate() > r1, "clean windows must recover the rate");
+        assert!(tb.rate() <= 1 << 30, "rate stays clamped to max");
+    }
+
+    #[test]
+    fn qos_throttles_only_the_congested_tenant() {
+        // Hog weight 3: its WRR share (24 of 32 slots) is deep enough
+        // that its own in-flight pushes the endpoint solidly past the
+        // Moderate occupancy threshold.
+        let mut sw = CxlSwitch::new(vec![ssd_port(0)], spec(true), &[3, 1]);
+        // Hog: hammer far past the share and the burst from time 0.
+        for i in 0..400u64 {
+            sw.load(0, 0, 0, i * 4096 * 64, 64);
+        }
+        // Victim issues sporadically at quiet times.
+        for i in 0..8u64 {
+            sw.load(1, 0, i * 50 * US, 0x800_0000 + i * 4096 * 64, 64);
+        }
+        let hog = sw.upstream_stats(0);
+        let victim = sw.upstream_stats(1);
+        assert!(hog.backpressure > 0, "hog must observe endpoint backpressure");
+        assert_eq!(
+            victim.throttle_waits, 0,
+            "a light tenant must never be token-throttled"
+        );
+        assert!(victim.ingress_hwm <= 2, "victim ingress stays shallow");
+    }
+
+    #[test]
+    fn wrr_shares_fit_the_endpoint_queue_under_weight_skew() {
+        // Extreme skew: the max(1) floor would oversubscribe (31+1+1+1 =
+        // 34 > 32) without the largest-first trim.
+        let sw = CxlSwitch::new(vec![dram_port(0)], spec(false), &[1000, 1, 1, 1]);
+        let total: usize = (0..4).map(|u| sw.up[u].share[0].len()).sum();
+        assert!(total <= MEM_QUEUE_CAP, "shares oversubscribe: {total}");
+        assert!(sw.up.iter().all(|u| !u.share[0].is_empty()), "every tenant keeps a slot");
+        assert!(sw.up[0].share[0].len() > sw.up[1].share[0].len(), "weight still dominates");
+    }
+
+    #[test]
+    fn flush_dedupes_to_one_sweep_per_cadence_from_any_tenant() {
+        let mut rng = Pcg32::new(8, 8);
+        let mut sw = CxlSwitch::new(vec![ssd_port(0)], spec(false), &[1, 1]);
+        sw.flush_tick(10 * US, &mut rng);
+        let first = sw.last_flush;
+        assert_eq!(first, 10 * US);
+        // A co-tenant's tick inside the gap is a no-op...
+        sw.flush_tick(10 * US + 5, &mut rng);
+        assert_eq!(sw.last_flush, first, "in-gap tick must not re-flush");
+        // ...and the next tick at the cadence runs, whoever sends it.
+        sw.flush_tick(20 * US, &mut rng);
+        assert_eq!(sw.last_flush, 20 * US);
+    }
+
+    #[test]
+    fn pool_sums_aggregate_downstream_ports() {
+        let mut sw = CxlSwitch::new(vec![dram_port(0), dram_port(1)], spec(false), &[1, 1]);
+        sw.load(0, 0, 0, 0x0, 64);
+        sw.load(1, 1, 0, 0x0, 64);
+        let mut rng = Pcg32::new(1, 1);
+        sw.store(0, 1, 0, 0x40, 64, &mut rng);
+        let sums = sw.pool_sums();
+        assert_eq!(sums.loads, 2);
+        assert_eq!(sums.stores, 1);
+        assert!(sums.queue_hwm >= 1);
+    }
+}

@@ -10,9 +10,9 @@
 //! The crate is a three-layer stack:
 //! - **L3 (this crate)** — the full-system discrete-event simulator (GPU
 //!   SMs → LLC → system bus → CXL root complex → EPs with DRAM/SSD
-//!   media), the SR/DS engines, the UVM/GDS baselines, plus the
-//!   experiment coordinator and the PJRT runtime that executes the real
-//!   workload compute.
+//!   media), the SR/DS engines, the UVM/GDS baselines, the pooled
+//!   multi-GPU CXL fabric (`fabric/`), plus the experiment coordinator
+//!   and the PJRT runtime that executes the real workload compute.
 //! - **L2 (python/compile/model.py)** — the 13 evaluation workloads as
 //!   JAX graphs, AOT-lowered once to `artifacts/*.hlo.txt`.
 //! - **L1 (python/compile/kernels/)** — Pallas kernels for the workload
@@ -23,6 +23,7 @@
 pub mod baselines;
 pub mod coordinator;
 pub mod cxl;
+pub mod fabric;
 pub mod gpu;
 pub mod media;
 pub mod rootcomplex;

@@ -60,7 +60,7 @@ fn usage() -> String {
         &[
             ("run", "simulate one workload under one configuration"),
             ("suite", "simulate all 13 workloads under one configuration"),
-            ("experiments", "reproduce the paper's figures (--fig 3b|9a|9b|9c|9d|9e|table1b|headline|tier)"),
+            ("experiments", "reproduce the paper's figures (--fig 3b|9a|9b|9c|9d|9e|table1b|headline|tier|mt)"),
             ("latency", "Fig. 3b controller round-trip comparison"),
             ("execute", "run an AOT workload artifact via PJRT (real compute)"),
             ("list", "show workloads, configurations and media"),
@@ -87,7 +87,9 @@ fn cmd_run(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
     let workload = args.get_or("workload", "vadd");
     let config = args.get_or("config", "cxl-sr");
     let media = parse_media(args)?;
-    let mut cfg = SystemConfig::named(config, media);
+    // Config-path errors (unknown names, TOML overrides describing an
+    // impossible topology) surface as messages, not panics.
+    let mut cfg = SystemConfig::try_named(config, media)?;
     if let Some(path) = args.get("toml") {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         cfg.apply_toml(&cxl_gpu::util::toml::parse(&text)?);
@@ -95,14 +97,15 @@ fn cmd_run(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
     cfg.total_ops = args.get_u64("ops", cfg.total_ops as u64)? as usize;
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     let spec = cxl_gpu::workloads::table1b::spec(workload);
-    let r = cxl_gpu::coordinator::runner::run_with(spec, &cfg);
-    println!("{} on {} ({}): {}", workload, config, media.name(), r.metrics.summary_line());
+    let metrics = cxl_gpu::coordinator::system::System::try_new(spec, &cfg)?.run();
+    println!("{} on {} ({}): {}", workload, config, media.name(), metrics.summary_line());
     Ok(())
 }
 
 fn cmd_suite(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
     let config = args.get_or("config", "cxl-sr");
     let media = parse_media(args)?;
+    SystemConfig::try_named(config, media)?; // fail with a message, not a panic
     let ops = args.get_u64("ops", 120_000)? as usize;
     let results = run_suite(config, media, Some(ops));
     if let Some(path) = args.get("json") {
@@ -160,12 +163,15 @@ fn cmd_experiments(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
             "tier" => {
                 experiments::tiering(scale, true);
             }
+            "mt" | "fabric" => {
+                experiments::multi_tenant(scale, true);
+            }
             other => return Err(format!("unknown figure `{other}`")),
         }
         Ok(())
     };
     if which == "all" {
-        for f in ["3b", "table1b", "9a", "9b", "9c", "9d", "9e", "headline", "tier"] {
+        for f in ["3b", "table1b", "9a", "9b", "9c", "9d", "9e", "headline", "tier", "mt"] {
             run_one(f)?;
         }
         Ok(())

@@ -277,6 +277,13 @@ impl SsdModel {
         self.params.kind
     }
 
+    /// Quiet-device media-read service time (one backend read plus the
+    /// internal-DRAM hop) — the unloaded-latency baseline the fabric
+    /// QoS controller compares observed completions against.
+    pub fn nominal_read_ps(&self) -> Time {
+        self.params.read_lat + self.params.dram_lat
+    }
+
     fn frame_of(&self, addr: u64) -> u64 {
         addr / self.params.frame_bytes
     }

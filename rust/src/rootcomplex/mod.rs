@@ -22,11 +22,36 @@ pub use rootport::{EpBackend, LoadOutcome, LoadPath, PortStats, RootPort, StoreO
 pub use spec_read::{SpecReadEngine, SrPolicy, SrStats};
 pub use tiering::{TierConfig, TierStats, Tiering};
 
+use crate::fabric::{FabricLink, PoolSums, TenantFabricStats};
+use crate::media::MediaKind;
 use crate::sim::{Time, NS};
 use crate::util::prng::Pcg32;
 
+/// Where one HDM decode target routes: a local (direct-attached) root
+/// port, or a downstream endpoint of the shared pooled fabric. The
+/// indirection is what lets every expander request take the same decode
+/// path regardless of topology — `RootComplex::load`/`store` resolve
+/// the decoded index through `targets` and never assume exclusive
+/// endpoint ownership.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PortTarget {
+    /// Index into this root complex's own [`RootPort`] vector.
+    Direct(usize),
+    /// Downstream port index of the attached fabric switch.
+    Fabric(usize),
+}
+
+/// The attached pool, for fabric-routed topologies.
+#[derive(Debug)]
+struct FabricAttachment {
+    link: FabricLink,
+    /// This tenant's upstream port on the shared switch.
+    upstream: usize,
+}
+
 /// The root complex: host-bridge decode + port fan-out, with an optional
-/// tiering layer between the HPA space and the HDM decoder.
+/// tiering layer between the HPA space and the HDM decoder, and an
+/// optional fabric attachment replacing the local ports.
 #[derive(Debug)]
 pub struct RootComplex {
     pub hdm: HdmDecoder,
@@ -36,20 +61,99 @@ pub struct RootComplex {
     /// Hot-page tracker + migration engine ([`tiering`]); `None` for the
     /// statically-partitioned configurations.
     pub tier: Option<Tiering>,
+    /// HDM decode-target indirection: entry `i` says where decoded
+    /// target index `i` routes (identity onto `ports` for direct
+    /// topologies, fabric downstream ports for pooled ones).
+    targets: Vec<PortTarget>,
+    fabric: Option<FabricAttachment>,
+}
+
+/// Per-tenant fabric counters harvested into `RunMetrics` after a run,
+/// plus — when this tenant is the pool's sole upstream — the pooled
+/// endpoints' own sums (so a single-tenant pool reports exactly what
+/// the direct topology reports).
+#[derive(Debug, Clone)]
+pub struct FabricHarvest {
+    pub upstream: TenantFabricStats,
+    pub sole_pool: Option<PoolSums>,
 }
 
 impl RootComplex {
     pub fn new(ports: Vec<RootPort>) -> RootComplex {
-        RootComplex { hdm: HdmDecoder::new(), ports, bridge_lat: 2 * NS, tier: None }
+        let targets = (0..ports.len()).map(PortTarget::Direct).collect();
+        RootComplex {
+            hdm: HdmDecoder::new(),
+            ports,
+            bridge_lat: 2 * NS,
+            tier: None,
+            targets,
+            fabric: None,
+        }
+    }
+
+    /// Attach this root complex to a pooled fabric as upstream port
+    /// `upstream`: every decode target now routes to the switch's
+    /// downstream endpoints instead of local ports.
+    pub fn attach_fabric(&mut self, link: FabricLink, upstream: usize) {
+        let n = link.lock().expect("fabric mutex poisoned").downstream.len();
+        self.targets = (0..n).map(PortTarget::Fabric).collect();
+        self.fabric = Some(FabricAttachment { link, upstream });
+    }
+
+    /// The decode-target routing table (identity over local ports for
+    /// direct topologies).
+    pub fn targets(&self) -> &[PortTarget] {
+        &self.targets
     }
 
     /// Firmware init: carve the HDM space evenly across ports (the
     /// simplified core's enumeration pass). `total` bytes of expander.
     pub fn enumerate(&mut self, total: u64) -> Result<(), String> {
         let n = self.ports.len() as u64;
-        assert!(n > 0);
+        if n == 0 {
+            return Err("root complex has no ports to enumerate".into());
+        }
         let per = total / n;
         self.enumerate_sized(&vec![per; n as usize])
+    }
+
+    /// Firmware init against the pooled fabric's downstream endpoints:
+    /// the same per-EP CXL.io config-space walk as
+    /// [`RootComplex::enumerate_sized`], but each window targets a
+    /// fabric downstream port and offsets its device addresses by
+    /// `dpa_base` — the tenant's slice of the shared pool, so co-tenant
+    /// address spaces never alias on the endpoints.
+    pub fn enumerate_fabric(&mut self, total: u64, dpa_base: u64) -> Result<(), String> {
+        use crate::cxl::ConfigSpace;
+        let att = self.fabric.as_ref().ok_or("no fabric attached to enumerate")?;
+        let kinds: Vec<MediaKind> =
+            att.link.lock().expect("fabric mutex poisoned").downstream_kinds();
+        if kinds.is_empty() {
+            return Err("fabric has no downstream endpoints".into());
+        }
+        let per = total / kinds.len() as u64;
+        let mut base = 0;
+        for (i, media) in kinds.iter().enumerate() {
+            let raw = if media.is_ssd() {
+                ConfigSpace::ssd_ep(per, *media)
+            } else {
+                ConfigSpace::dram_ep(per)
+            };
+            let cs = ConfigSpace::from_dwords(
+                raw.read_dword(0),
+                raw.read_dword(1),
+                raw.read_dword(2),
+                raw.read_dword(3),
+                *media,
+            );
+            if !cs.is_hdm_capable() {
+                return Err(format!("fabric endpoint {i}: EP is not HDM-capable"));
+            }
+            self.hdm
+                .program(HdmEntry::direct(i, base, cs.hdm_size).with_dpa_base(dpa_base))?;
+            base += cs.hdm_size;
+        }
+        Ok(())
     }
 
     /// Firmware init against per-port HDM sizes, walking each EP's
@@ -106,7 +210,9 @@ impl RootComplex {
     /// direct windows.
     pub fn enumerate_interleaved(&mut self, total: u64, gran_bits: u32) -> Result<u64, String> {
         let n = self.ports.len() as u64;
-        assert!(n > 0);
+        if n == 0 {
+            return Err("root complex has no ports to enumerate".into());
+        }
         let fast: Vec<usize> =
             (0..self.ports.len()).filter(|&i| !self.ports[i].backend.is_ssd()).collect();
         let slow: Vec<usize> =
@@ -177,32 +283,59 @@ impl RootComplex {
         self.tier = Some(Tiering::new(cfg, fast_bytes, total));
     }
 
-    /// Route a load at HDM-relative address `hpa_off`.
+    /// Route a load at HDM-relative address `hpa_off` through the
+    /// decode-target indirection (direct port or fabric endpoint).
     pub fn load(&mut self, now: Time, hpa_off: u64, len: u64) -> LoadOutcome {
         let addr = match &mut self.tier {
             Some(t) => t.translate(hpa_off),
             None => hpa_off,
         };
-        let (port, off) = self
+        let (idx, off) = self
             .hdm
             .decode(addr)
             .unwrap_or_else(|| panic!("HDM decode miss at {:#x}", addr));
-        let mut out = self.ports[port].load(now + self.bridge_lat, off, len);
+        let mut out = match self.targets[idx] {
+            PortTarget::Direct(p) => self.ports[p].load(now + self.bridge_lat, off, len),
+            PortTarget::Fabric(d) => {
+                let att = self.fabric.as_ref().expect("fabric target without attachment");
+                att.link.lock().expect("fabric mutex poisoned").load(
+                    att.upstream,
+                    d,
+                    now + self.bridge_lat,
+                    off,
+                    len,
+                )
+            }
+        };
         out.done += self.bridge_lat;
         out
     }
 
-    /// Route a store at HDM-relative address `hpa_off`.
+    /// Route a store at HDM-relative address `hpa_off` through the
+    /// decode-target indirection.
     pub fn store(&mut self, now: Time, hpa_off: u64, len: u64, rng: &mut Pcg32) -> StoreOutcome {
         let addr = match &mut self.tier {
             Some(t) => t.translate(hpa_off),
             None => hpa_off,
         };
-        let (port, off) = self
+        let (idx, off) = self
             .hdm
             .decode(addr)
             .unwrap_or_else(|| panic!("HDM decode miss at {:#x}", addr));
-        let mut out = self.ports[port].store(now + self.bridge_lat, off, len, rng);
+        let mut out = match self.targets[idx] {
+            PortTarget::Direct(p) => self.ports[p].store(now + self.bridge_lat, off, len, rng),
+            PortTarget::Fabric(d) => {
+                let att = self.fabric.as_ref().expect("fabric target without attachment");
+                att.link.lock().expect("fabric mutex poisoned").store(
+                    att.upstream,
+                    d,
+                    now + self.bridge_lat,
+                    off,
+                    len,
+                    rng,
+                )
+            }
+        };
         out.ack += self.bridge_lat;
         out
     }
@@ -250,16 +383,52 @@ impl RootComplex {
         }
     }
 
-    /// Background DS flush across ports.
+    /// Background DS flush across ports. For a fabric-routed topology,
+    /// every tenant's tick forwards to the pool and the *switch* dedupes
+    /// to one sweep per cadence — so the pool keeps flushing even after
+    /// any particular tenant (including tenant 0) retires.
     pub fn flush_tick(&mut self, now: Time, rng: &mut Pcg32) {
         for p in &mut self.ports {
             p.flush_step(now, 8, rng);
         }
+        if let Some(att) = &self.fabric {
+            att.link.lock().expect("fabric mutex poisoned").flush_tick(now, rng);
+        }
     }
 
-    /// Total buffered DS bytes (for end-of-run draining checks).
+    /// Total buffered DS bytes (for end-of-run draining checks),
+    /// including the attached pool's endpoints.
     pub fn ds_backlog(&self) -> u64 {
-        self.ports.iter().map(|p| p.ds.buffered_bytes()).sum()
+        let local: u64 = self.ports.iter().map(|p| p.ds.buffered_bytes()).sum();
+        let pooled = self
+            .fabric
+            .as_ref()
+            .map_or(0, |att| att.link.lock().expect("fabric mutex poisoned").ds_backlog());
+        local + pooled
+    }
+
+    /// Ingress occupancy seen by this system's timeline series: the
+    /// first local port's memory queue (direct), or this tenant's
+    /// upstream ingress queue (fabric).
+    pub fn ingress_occupancy(&self, now: Time) -> usize {
+        if let Some(att) = &self.fabric {
+            return att
+                .link
+                .lock()
+                .expect("fabric mutex poisoned")
+                .ingress_occupancy(att.upstream, now);
+        }
+        self.ports.first().map_or(0, |p| p.occupancy(now))
+    }
+
+    /// Fabric counters for this tenant (None for direct topologies).
+    pub fn fabric_harvest(&self) -> Option<FabricHarvest> {
+        let att = self.fabric.as_ref()?;
+        let sw = att.link.lock().expect("fabric mutex poisoned");
+        Some(FabricHarvest {
+            upstream: sw.upstream_stats(att.upstream).clone(),
+            sole_pool: (sw.upstreams() == 1).then(|| sw.pool_sums()),
+        })
     }
 }
 
@@ -440,6 +609,57 @@ mod tests {
         let dram_loads = rc.ports[0].stats.loads;
         rc.load(10_000_000, hot, 64);
         assert_eq!(rc.ports[0].stats.loads, dram_loads + 1);
+    }
+
+    #[test]
+    fn fabric_attachment_routes_decodes_through_the_switch() {
+        use crate::fabric::{CxlSwitch, FabricSpec};
+        use std::sync::{Arc, Mutex};
+        // Direct topology as the reference.
+        let mut direct = complex(2);
+        // Same two endpoints behind a single-upstream, no-QoS switch:
+        // the passthrough invariant says identical completion times.
+        let eps = (0..2)
+            .map(|i| {
+                RootPort::new(
+                    i,
+                    ControllerKind::Panmnesia,
+                    EpBackend::Dram(DramModel::new(DramTimings::ddr5_5600())),
+                    SrPolicy::Off,
+                    false,
+                    0,
+                )
+            })
+            .collect();
+        let link = Arc::new(Mutex::new(CxlSwitch::new(
+            eps,
+            FabricSpec { enabled: true, ..FabricSpec::default() },
+            &[1],
+        )));
+        let mut rc = RootComplex::new(Vec::new());
+        rc.attach_fabric(link.clone(), 0);
+        rc.enumerate_fabric(64 << 20, 0).unwrap();
+        assert!(rc.targets().iter().all(|t| matches!(t, PortTarget::Fabric(_))));
+        assert_eq!(rc.hdm.total_size(), direct.hdm.total_size());
+        for addr in [0u64, 1 << 20, 33 << 20, (64 << 20) - 64] {
+            let a = rc.load(0, addr, 64).done;
+            let b = direct.load(0, addr, 64).done;
+            assert_eq!(a, b, "passthrough fabric diverged at {addr:#x}");
+        }
+        let sw = link.lock().unwrap();
+        assert_eq!(sw.pool_sums().loads, 4);
+        assert!(sw.downstream[0].stats.loads > 0 && sw.downstream[1].stats.loads > 0);
+    }
+
+    #[test]
+    fn enumerate_rejects_portless_topologies_with_a_message() {
+        let mut rc = RootComplex::new(Vec::new());
+        let err = rc.enumerate(64 << 20).unwrap_err();
+        assert!(err.contains("no ports"), "unhelpful error: {err}");
+        let err = rc.enumerate_interleaved(64 << 20, 12).unwrap_err();
+        assert!(err.contains("no ports"), "unhelpful error: {err}");
+        let err = rc.enumerate_fabric(64 << 20, 0).unwrap_err();
+        assert!(err.contains("no fabric"), "unhelpful error: {err}");
     }
 
     #[test]

@@ -78,6 +78,9 @@ pub struct PortStats {
     pub devload_severe_seen: u64,
     /// Requests that had to wait for a memory-queue slot.
     pub queue_full_waits: u64,
+    /// Memory-queue occupancy high-water mark (including the admitted
+    /// request), sampled at every slot acquisition.
+    pub queue_hwm: u64,
     /// Background tiering transfers serviced ([`RootPort::migrate`]).
     pub migrations: u64,
 }
@@ -154,7 +157,23 @@ impl RootPort {
         if free > now {
             self.stats.queue_full_waits += 1;
         }
-        (idx, free.max(now))
+        let start = free.max(now);
+        let occ = self.slots.iter().filter(|&&t| t > start).count() as u64 + 1;
+        self.stats.queue_hwm = self.stats.queue_hwm.max(occ);
+        (idx, start)
+    }
+
+    /// Unloaded 64 B demand-read latency through this port: controller
+    /// request/response legs plus quiet-media service. The fabric QoS
+    /// controller uses it as the congestion baseline — observed latency
+    /// well past this means real queueing, not just occupancy.
+    pub fn unloaded_read_ps(&self) -> Time {
+        let flit = Flit { op: MemOpcode::MemRd, addr: 0, len: 64, issued_at: 0, req_id: 0 };
+        let media = match &self.backend {
+            EpBackend::Dram(d) => d.hit_latency(),
+            EpBackend::Ssd(s) => s.nominal_read_ps(),
+        };
+        self.ctrl.request_leg(&flit) + media + self.ctrl.response_leg(&flit)
     }
 
     /// The endpoint's DevLoad as observed at `at`: ingress-queue

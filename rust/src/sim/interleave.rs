@@ -1,0 +1,96 @@
+//! Cross-system event interleaving: step N independent event-driven
+//! systems as if their calendars were one queue.
+//!
+//! Each tenant `System` of a pooled-fabric run owns its own
+//! [`EventQueue`](super::EventQueue), but they mutate *shared* state
+//! (the switch and its pooled endpoints), so the order in which their
+//! events execute matters. [`interleave()`] merges the queues by always
+//! stepping the system whose next event is earliest — ties break on the
+//! lowest index — which is exactly the (time, tenant) order one global
+//! calendar would produce. Deterministic by construction: no wall
+//! clock, no thread scheduling, a total order over every event.
+
+use super::Time;
+
+/// An event-driven system that can be single-stepped by a coordinator.
+pub trait Steppable {
+    /// Time of the next pending event, or `None` when this system has
+    /// nothing more to do (finished, or queue drained).
+    fn next_time(&self) -> Option<Time>;
+    /// Pop and process one event. Returns `false` if there was nothing
+    /// to pop.
+    fn step(&mut self) -> bool;
+}
+
+/// Drain `systems` to completion in global (time, index) order; returns
+/// the number of steps executed.
+pub fn interleave<T: Steppable>(systems: &mut [T]) -> u64 {
+    let mut steps = 0;
+    loop {
+        let mut best: Option<(Time, usize)> = None;
+        for (i, s) in systems.iter().enumerate() {
+            if let Some(t) = s.next_time() {
+                // Strict `<` keeps the earliest index on ties.
+                if best.map_or(true, |(bt, _)| t < bt) {
+                    best = Some((t, i));
+                }
+            }
+        }
+        let Some((_, i)) = best else { return steps };
+        if systems[i].step() {
+            steps += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy steppable: a preloaded list of event times, recording
+    /// (time, id) into a shared log on each step.
+    struct Toy<'a> {
+        id: usize,
+        times: Vec<Time>,
+        cursor: usize,
+        log: &'a std::cell::RefCell<Vec<(Time, usize)>>,
+    }
+
+    impl Steppable for Toy<'_> {
+        fn next_time(&self) -> Option<Time> {
+            self.times.get(self.cursor).copied()
+        }
+        fn step(&mut self) -> bool {
+            let Some(&t) = self.times.get(self.cursor) else { return false };
+            self.cursor += 1;
+            self.log.borrow_mut().push((t, self.id));
+            true
+        }
+    }
+
+    #[test]
+    fn merges_in_global_time_order_with_index_ties() {
+        let log = std::cell::RefCell::new(Vec::new());
+        let mut toys = vec![
+            Toy { id: 0, times: vec![5, 10, 10, 30], cursor: 0, log: &log },
+            Toy { id: 1, times: vec![1, 10, 20], cursor: 0, log: &log },
+        ];
+        let steps = interleave(&mut toys);
+        assert_eq!(steps, 7);
+        assert_eq!(
+            log.into_inner(),
+            vec![(1, 1), (5, 0), (10, 0), (10, 0), (10, 1), (20, 1), (30, 0)],
+            "ties must resolve to the lowest index, repeatedly"
+        );
+    }
+
+    #[test]
+    fn empty_and_single_system() {
+        let log = std::cell::RefCell::new(Vec::new());
+        let mut none: Vec<Toy> = Vec::new();
+        assert_eq!(interleave(&mut none), 0);
+        let mut one = vec![Toy { id: 7, times: vec![2, 4], cursor: 0, log: &log }];
+        assert_eq!(interleave(&mut one), 2);
+        assert_eq!(log.into_inner(), vec![(2, 7), (4, 7)]);
+    }
+}

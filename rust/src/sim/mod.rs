@@ -7,9 +7,11 @@
 //! evaluation also ran on a software simulator reproducing the RTL's
 //! behaviour (Evaluation §Methodology).
 
+pub mod interleave;
 pub mod queue;
 pub mod timeline;
 
+pub use interleave::{interleave, Steppable};
 pub use queue::EventQueue;
 pub use timeline::Timeline;
 

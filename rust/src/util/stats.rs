@@ -83,6 +83,14 @@ pub struct Percentiles {
     samples: Vec<f64>,
 }
 
+impl Default for Percentiles {
+    /// 4096-sample reservoir: enough that the p99 of a full-scale run's
+    /// expander loads is pinned by real tail samples.
+    fn default() -> Self {
+        Percentiles::new(4096)
+    }
+}
+
 impl Percentiles {
     pub fn new(cap: usize) -> Self {
         Percentiles { cap: cap.max(16), seen: 0, samples: Vec::new() }

@@ -1,0 +1,87 @@
+//! Tenant mix specifications for the pooled-fabric experiments
+//! (DESIGN.md §13): who shares the pool, and in what shape.
+//!
+//! Each mix pairs one *latency-sensitive victim* (small warp count,
+//! shallow MLP — a tenant whose p99 matters) with `tenants - 1`
+//! *bandwidth hogs* (wide, deep-MLP tenants that saturate the pooled
+//! endpoints). The victim's op budget is a quarter of the hogs' so its
+//! entire run executes under contention.
+//!
+//! Workload choices are deliberate: the hog is `sort` (98.7 % loads,
+//! Around pattern — a relentless read stream that saturates the pooled
+//! SSD channels with almost no writes, keeping GC out of the tail) and
+//! the victim is `path` (92.7 % loads, Rand — pointer-chasing graph
+//! lookups whose p99 is exactly what a co-tenant's queue buildup
+//! destroys).
+
+/// One hog/victim pool scenario.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantMix {
+    pub name: &'static str,
+    /// Total tenants: 1 victim + (tenants - 1) hogs.
+    pub tenants: usize,
+    /// The latency-sensitive tenant's workload.
+    pub victim: &'static str,
+    /// The bandwidth-hog tenants' workload.
+    pub hog: &'static str,
+    /// Victim shape: few warps, shallow MLP (low demand).
+    pub victim_warps: usize,
+    pub victim_mlp: usize,
+    /// Hog shape: wide and deep (demand far past its fair share).
+    pub hog_warps: usize,
+    pub hog_mlp: usize,
+}
+
+/// The multi-tenant sweep's scenarios: 2, 4 and 8 tenants sharing one
+/// pool, one victim against a growing hog population.
+pub static TENANT_MIXES: &[TenantMix] = &[
+    TenantMix {
+        name: "duo",
+        tenants: 2,
+        victim: "path",
+        hog: "sort",
+        victim_warps: 4,
+        victim_mlp: 2,
+        hog_warps: 32,
+        hog_mlp: 8,
+    },
+    TenantMix {
+        name: "quad",
+        tenants: 4,
+        victim: "path",
+        hog: "sort",
+        victim_warps: 4,
+        victim_mlp: 2,
+        hog_warps: 32,
+        hog_mlp: 8,
+    },
+    TenantMix {
+        name: "octet",
+        tenants: 8,
+        victim: "path",
+        hog: "sort",
+        victim_warps: 4,
+        victim_mlp: 2,
+        hog_warps: 16,
+        hog_mlp: 4,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::table1b::spec;
+
+    #[test]
+    fn mixes_reference_real_workloads_and_grow() {
+        let mut last = 1;
+        for m in TENANT_MIXES {
+            // `spec` panics on unknown names: the mix must resolve.
+            assert!(spec(m.victim).load_ratio > 0.9, "victim should be load-bound");
+            assert!(spec(m.hog).load_ratio > 0.9, "hog should be load-bound");
+            assert!(m.tenants > last, "mixes must grow the tenant count");
+            last = m.tenants;
+            assert!(m.hog_warps * m.hog_mlp > m.victim_warps * m.victim_mlp);
+        }
+    }
+}

@@ -16,9 +16,11 @@
 //! kernels executed through PJRT (`runtime/`); the *timing* comes from
 //! these streams. Both describe the same programs.
 
+pub mod mixes;
 pub mod patterns;
 pub mod table1b;
 
+pub use mixes::{TenantMix, TENANT_MIXES};
 pub use patterns::{Pattern, PatternKind};
 pub use table1b::{WorkloadSpec, ALL_WORKLOADS};
 

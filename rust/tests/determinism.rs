@@ -43,6 +43,13 @@ fn fingerprint(m: &RunMetrics) -> Vec<u64> {
         m.tier_fast_accesses,
         m.tier_slow_accesses,
         m.tier_epochs,
+        // Fabric counters: queue high-water marks, QoS throttling and
+        // per-tenant backpressure are deterministic too (zero for
+        // direct topologies and passthrough pools).
+        m.port_queue_hwm,
+        m.ingress_hwm,
+        m.qos_throttle_waits,
+        m.fabric_backpressure,
     ]
 }
 
@@ -62,6 +69,9 @@ fn repeated_runs_are_bit_identical() {
         // swap plans, per-chunk transfers) must be bit-reproducible too.
         ("cxl-tier", MediaKind::Znand, "hot90"),
         ("cxl-tier-static", MediaKind::Znand, "hot90"),
+        // Pooled fabric, with and without the QoS token bucket.
+        ("cxl-pool", MediaKind::Znand, "bfs"),
+        ("cxl-pool-qos", MediaKind::Znand, "bfs"),
     ] {
         let cfg = small(name, media);
         let a = System::new(spec(wl), &cfg).run();
@@ -116,6 +126,61 @@ fn large_budget_runs_are_bit_identical() {
     let b = System::new(spec("gnn"), &cfg).run();
     assert_eq!(fingerprint(&a), fingerprint(&b), "cxl/gnn diverged at the large budget");
     assert!(a.exec_time > 0 && a.events > 0);
+}
+
+/// The passthrough invariant (DESIGN.md §13): a single-tenant,
+/// no-QoS pool is the direct topology — the switch adds no latency, no
+/// arbitration, no bookkeeping — so `cxl-pool` must reproduce `cxl`
+/// *bit-identically*, media and engines included.
+#[test]
+fn single_tenant_pool_reproduces_direct_cxl_bit_identically() {
+    for (media, wl) in [(MediaKind::Ddr5, "gnn"), (MediaKind::Znand, "bfs")] {
+        let direct = System::new(spec(wl), &small("cxl", media)).run();
+        let pooled = System::new(spec(wl), &small("cxl-pool", media)).run();
+        assert_eq!(
+            fingerprint(&direct),
+            fingerprint(&pooled),
+            "cxl-pool/{wl} on {media:?} is not a bit-identical passthrough"
+        );
+        assert_eq!(pooled.ingress_hwm, 0, "passthrough must not track ingress");
+    }
+}
+
+/// Multi-tenant pool runs — the merged event order, the shared switch
+/// state, the QoS controller's AIMD walk — must be bit-reproducible.
+#[test]
+fn pool_runs_are_bit_reproducible() {
+    use cxl_gpu::fabric::{run_pool, Tenant};
+    let tenants = || -> Vec<Tenant> {
+        [("path", 4usize, 2usize), ("sort", 16, 8), ("sort", 16, 8)]
+            .iter()
+            .map(|&(wl, warps, mlp)| {
+                let mut cfg = SystemConfig::named("cxl-pool-qos", MediaKind::Znand);
+                cfg.total_ops = 6_000;
+                cfg.ssd_scale();
+                cfg.warps = warps;
+                cfg.mlp = mlp;
+                Tenant { workload: spec(wl), cfg }
+            })
+            .collect()
+    };
+    let a = run_pool(&tenants()).expect("pool run");
+    let b = run_pool(&tenants()).expect("pool run");
+    assert_eq!(a.events, b.events, "merged event count diverged");
+    assert_eq!(a.pool.loads, b.pool.loads);
+    assert_eq!(a.pool.queue_hwm, b.pool.queue_hwm);
+    for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+        assert_eq!(ta.workload, tb.workload);
+        assert_eq!(
+            fingerprint(&ta.metrics),
+            fingerprint(&tb.metrics),
+            "tenant {} diverged across pool runs",
+            ta.workload
+        );
+    }
+    // And the pool genuinely interleaved: every tenant transited the
+    // switch.
+    assert!(a.tenants.iter().all(|t| t.metrics.ingress_hwm >= 1));
 }
 
 #[test]

@@ -427,3 +427,81 @@ fn prop_simulation_is_deterministic_across_runs() {
         Ok(())
     });
 }
+
+/// DevLoad telemetry (satellite of the fabric PR): the 2-bit wire
+/// encoding must round-trip over every variant (junk high bits
+/// ignored), and `classify` must be monotone in occupancy — a higher
+/// ingress occupancy never reports a *lighter* load class, with or
+/// without the internal-task announcement.
+#[test]
+fn prop_devload_roundtrip_and_classify_monotonic() {
+    check("devload", 0xDE7710AD, 150, |g| {
+        for d in [DevLoad::Light, DevLoad::Optimal, DevLoad::Moderate, DevLoad::Severe] {
+            if DevLoad::decode(d.encode()) != d {
+                return Err(format!("{d:?} does not round-trip"));
+            }
+            let junk = (g.u64("junk", 0, 63) as u8) << 2;
+            if DevLoad::decode(d.encode() | junk) != d {
+                return Err(format!("{d:?} decode must mask to 2 bits"));
+            }
+        }
+        let cap = g.usize("cap", 1, 256);
+        let task = g.bool("task", 0.3);
+        let mut prev = DevLoad::Light;
+        for occ in 0..=cap {
+            let d = DevLoad::classify(occ, cap, task);
+            if d < prev {
+                return Err(format!(
+                    "classify regressed at occ {occ}/{cap} (task={task}): {d:?} < {prev:?}"
+                ));
+            }
+            prev = d;
+        }
+        if task && DevLoad::classify(0, cap, true) != DevLoad::Severe {
+            return Err("internal task must pre-announce as Severe".into());
+        }
+        Ok(())
+    });
+}
+
+/// The fabric QoS token bucket must (a) hand out monotone ready times
+/// for monotone arrivals and (b) never admit more than burst + rate x
+/// elapsed bytes — the pacing contract the victim-protection bound
+/// rests on. Fixed rate (min = max) so AIMD stays out of the picture.
+#[test]
+fn prop_token_bucket_never_exceeds_its_rate() {
+    use cxl_gpu::fabric::TokenBucket;
+    check("token-bucket-pace", 0x70CE2, 120, |g| {
+        let rate = g.u64("rate_bps", 1 << 20, 1 << 38);
+        let burst = g.u64("burst", 64, 1 << 20);
+        let mut tb = TokenBucket::new(rate, rate, rate, burst);
+        let mut now = 0u64;
+        let mut last_ready = 0u64;
+        let mut admitted: u128 = 0;
+        let ops = g.usize("ops", 1, 200);
+        for i in 0..ops {
+            now += g.u64(&format!("dt{i}"), 0, 10_000_000); // up to 10 µs apart
+            let len = g.u64(&format!("len{i}"), 1, 4096);
+            let ready = tb.ready_at(now, len);
+            if ready < now {
+                return Err(format!("ready {ready} before arrival {now}"));
+            }
+            if ready < last_ready {
+                return Err(format!("ready times regressed: {ready} < {last_ready}"));
+            }
+            last_ready = ready;
+            admitted += len as u128;
+            // Everything admitted by `ready` fits in burst + rate x t
+            // (+1 byte/op rounding slack).
+            let bound = burst.max(64) as u128
+                + (rate as u128 * ready as u128) / 1_000_000_000_000
+                + (i as u128 + 1);
+            if admitted > bound {
+                return Err(format!(
+                    "admitted {admitted} B > bound {bound} B at t={ready} (rate {rate}, burst {burst})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
