@@ -1,0 +1,80 @@
+//! §14 — expander-side device cache: capacity × workload-reuse sweep.
+//!
+//! Runs the `expander_cache` experiment (plain `cxl` vs the admit-all
+//! `cxl-cache-bypass` ablation vs adaptive `cxl-cache` on a Z-NAND
+//! expander, over the `hot50..hot95` reuse synthetics plus the `vadd`
+//! streaming reference), emits `BENCH_expander_cache.json`
+//! (schema: docs/BENCH_SCHEMA.md), and asserts the tentpole's win
+//! condition: cached Z-NAND must beat uncached on geomean demand-load
+//! latency across the reuse-heavy rows, with the admission predictor
+//! actually bypassing the streams.
+use std::collections::BTreeMap;
+
+use cxl_gpu::coordinator::experiments::{expander_cache, Scale};
+use cxl_gpu::util::json::Json;
+
+/// Geomean uncached/cached load-latency ratio the reuse-heavy rows must
+/// clear.
+const FLOOR_CACHED_READ_SPEEDUP: f64 = 1.0;
+
+fn main() {
+    let res = expander_cache(Scale::default(), true);
+
+    let rows: Vec<Json> = res
+        .rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("workload".into(), Json::Str(r.workload.into()));
+            m.insert("hot_permille".into(), Json::Num(r.hot_permille as f64));
+            m.insert("capacity_bytes".into(), Json::Num(r.capacity_bytes as f64));
+            m.insert("uncached_load_us".into(), Json::Num(r.uncached_load_us));
+            m.insert("admit_all_load_us".into(), Json::Num(r.admit_all_load_us));
+            m.insert("cached_load_us".into(), Json::Num(r.cached_load_us));
+            m.insert("uncached_exec_ms".into(), Json::Num(r.uncached_exec_ms));
+            m.insert("cached_exec_ms".into(), Json::Num(r.cached_exec_ms));
+            m.insert("hit_rate".into(), Json::Num(r.hit_rate));
+            m.insert("bypasses".into(), Json::Num(r.bypasses as f64));
+            m.insert("writebacks".into(), Json::Num(r.writebacks as f64));
+            m.insert("wb_hwm".into(), Json::Num(r.wb_hwm as f64));
+            Json::Obj(m)
+        })
+        .collect();
+
+    // Report before asserting so regressions still leave data on disk.
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("expander_cache".into()));
+    top.insert("schema".into(), Json::Str("docs/BENCH_SCHEMA.md".into()));
+    top.insert(
+        "floor_cached_read_speedup".into(),
+        Json::Num(FLOOR_CACHED_READ_SPEEDUP),
+    );
+    top.insert("cached_read_speedup".into(), Json::Num(res.cached_read_speedup));
+    top.insert("admit_speedup".into(), Json::Num(res.admit_speedup));
+    top.insert("results".into(), Json::Arr(rows));
+    let path = "BENCH_expander_cache.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+
+    assert!(
+        res.cached_read_speedup > FLOOR_CACHED_READ_SPEEDUP,
+        "cached Z-NAND must beat uncached on reuse-heavy geomean: {:.3}x",
+        res.cached_read_speedup
+    );
+    // The reuse-heavy rows must genuinely exercise the cache...
+    assert!(
+        res.rows.iter().filter(|r| r.hot_permille > 0).any(|r| r.hit_rate > 0.5),
+        "no reuse row reached a 50% device-cache hit rate"
+    );
+    // ...and the streaming reference must be kept out of it.
+    assert!(
+        res.rows.iter().any(|r| r.bypasses > 0),
+        "the admission predictor never bypassed anything"
+    );
+    println!(
+        "expander-cache bench OK (cached over uncached {:.2}x, adaptive over admit-all {:.2}x)",
+        res.cached_read_speedup, res.admit_speedup
+    );
+}

@@ -32,6 +32,8 @@ fn main() {
         ("uvm", MediaKind::Ddr5, "vadd"),
         ("cxl-sr", MediaKind::Znand, "vadd"),
         ("cxl-ds", MediaKind::Znand, "bfs"),
+        // The device-cache path (§14) must hold the same per-event floor.
+        ("cxl-cache", MediaKind::Znand, "hot90"),
     ] {
         let mut cfg = SystemConfig::named(cfg_name, media);
         // 10x the pre-streaming budget: op streams freed the O(total_ops)

@@ -171,19 +171,20 @@ impl UvmManager {
         while self.pages.len() > self.max_pages() && attempts > 0 {
             attempts -= 1;
             let Some(victim) = self.fifo.pop_front() else { break };
-            match self.pages.get(&victim) {
-                Some(v) if v.ready > done => {
-                    self.fifo.push_back(victim); // pending: not evictable
-                }
-                Some(_) => {
-                    let v = self.pages.remove(&victim).unwrap();
-                    self.stats.evictions += 1;
-                    if v.dirty {
-                        self.pcie_free += transfer_time(self.block_bytes, self.pcie_gbps);
-                        self.stats.writeback_bytes += self.block_bytes;
-                    }
-                }
-                None => {}
+            // Single-lookup eviction: `remove` hands over the entry (a
+            // stale FIFO slot simply has none), and a still-pending page
+            // is re-inserted untouched — no get-then-remove window for
+            // an unwrap to bite.
+            let Some(v) = self.pages.remove(&victim) else { continue };
+            if v.ready > done {
+                self.pages.insert(victim, v);
+                self.fifo.push_back(victim); // pending: not evictable
+                continue;
+            }
+            self.stats.evictions += 1;
+            if v.dirty {
+                self.pcie_free += transfer_time(self.block_bytes, self.pcie_gbps);
+                self.stats.writeback_bytes += self.block_bytes;
             }
         }
 

@@ -4,6 +4,7 @@
 //! comparator built on a PCIe-era controller (CXL-SMT).
 
 use crate::cxl::ControllerKind;
+use crate::expander::CacheSpec;
 use crate::fabric::FabricSpec;
 use crate::gpu::LlcConfig;
 use crate::media::{DramModel, DramTimings, MediaKind, SsdModel, SsdParams};
@@ -62,6 +63,12 @@ pub struct SystemConfig {
     /// through a virtual CXL switch instead of direct root ports, with
     /// optional per-tenant QoS. Mutually exclusive with `tier`.
     pub fabric: FabricSpec,
+    /// Expander-side device DRAM cache inside each SSD endpoint
+    /// (DESIGN.md §14). Composes with every topology — direct, tiered,
+    /// pooled — because [`SystemConfig::build_ports`] attaches it
+    /// per-endpoint; a disabled or zero-capacity spec attaches nothing
+    /// (the `cxl`-bit-identity guarantee).
+    pub cache: CacheSpec,
 }
 
 impl SystemConfig {
@@ -91,6 +98,7 @@ impl SystemConfig {
             media_per_port: None,
             tier: TierConfig::default(),
             fabric: FabricSpec::default(),
+            cache: CacheSpec::default(),
         }
     }
 
@@ -120,6 +128,7 @@ impl SystemConfig {
                     self.ds_enabled && media.is_ssd(),
                     self.ds_capacity,
                 )
+                .with_cache(self.cache)
             })
             .collect()
     }
@@ -151,6 +160,12 @@ impl SystemConfig {
     ///   attachment (the passthrough invariant).
     /// * `cxl-pool-qos` — `cxl-pool` plus the per-tenant QoS token
     ///   bucket on switch ingress (the QoS ablation point).
+    /// * `cxl-cache` — `cxl` plus the expander-side device DRAM cache
+    ///   with adaptive admission (DESIGN.md §14, `cache` experiment);
+    ///   at zero capacity it is bit-identical to `cxl`.
+    /// * `cxl-cache-bypass` — `cxl-cache` with the admission predictor
+    ///   disabled (every miss installs): the ablation that prices the
+    ///   streaming-bypass capability.
     ///
     /// Panics on an unknown name; [`SystemConfig::try_named`] is the
     /// message-not-panic variant for CLI/config paths.
@@ -226,6 +241,19 @@ impl SystemConfig {
                 c.tier.enabled = true;
                 c.tier.migrate = name == "cxl-tier";
             }
+            "cxl-cache" | "cxl-cache-bypass" => {
+                // Expander-side device cache (DESIGN.md §14): engines
+                // mirror `cxl` (SR/DS off) so the cache's effect is
+                // isolated against the plain expander; the `-bypass`
+                // variant admits every miss — ablating the adaptive
+                // admission predictor, whose whole job is keeping
+                // streaming scans out of the device DRAM.
+                c.strategy = MemStrategy::Cxl;
+                c.cache.enabled = true;
+                if name == "cxl-cache-bypass" {
+                    c.cache = c.cache.admit_all();
+                }
+            }
             "cxl-pool" | "cxl-pool-qos" => {
                 // Pooled fabric (DESIGN.md §13): the expander endpoints
                 // sit behind a shared virtual CXL switch. Engines stay
@@ -251,7 +279,7 @@ impl SystemConfig {
         &[
             "gpu-dram", "uvm", "gds", "cxl", "cxl-naive", "cxl-dyn", "cxl-sr", "cxl-ds",
             "cxl-smt", "cxl-hybrid", "cxl-tier", "cxl-tier-static", "cxl-pool",
-            "cxl-pool-qos",
+            "cxl-pool-qos", "cxl-cache", "cxl-cache-bypass",
         ]
     }
 
@@ -283,6 +311,8 @@ impl SystemConfig {
         self.ports = doc.int_or("sim.ports", self.ports as i64) as usize;
         self.ds_capacity = doc.int_or("sim.ds_capacity", self.ds_capacity as i64) as u64;
         self.timeline = doc.bool_or("sim.timeline", self.timeline);
+        self.cache.capacity_bytes =
+            doc.int_or("sim.cache_bytes", self.cache.capacity_bytes as i64) as u64;
     }
 }
 
@@ -350,6 +380,36 @@ mod tests {
         assert_eq!(ablation.media_per_port, tier.media_per_port);
         // Untiered configs never enable the subsystem.
         assert!(!SystemConfig::named("cxl-hybrid", MediaKind::Znand).tier.enabled);
+    }
+
+    #[test]
+    fn cache_configs_set_the_device_cache() {
+        use crate::expander::AdmitPolicy;
+        let cached = SystemConfig::named("cxl-cache", MediaKind::Znand);
+        assert!(cached.cache.enabled);
+        assert_eq!(cached.cache.admit.policy, AdmitPolicy::Adaptive);
+        assert_eq!(cached.sr_policy, SrPolicy::Off, "engines mirror plain cxl");
+        assert!(!cached.ds_enabled);
+        let ablation = SystemConfig::named("cxl-cache-bypass", MediaKind::Znand);
+        assert!(ablation.cache.enabled);
+        assert_eq!(ablation.cache.admit.policy, AdmitPolicy::AdmitAll);
+        // No other config enables the cache.
+        assert!(!SystemConfig::named("cxl", MediaKind::Znand).cache.enabled);
+        assert!(!SystemConfig::named("cxl-ds", MediaKind::Znand).cache.enabled);
+    }
+
+    #[test]
+    fn build_ports_attaches_the_cache_to_ssd_endpoints_only() {
+        let mut c = SystemConfig::named("cxl-cache", MediaKind::Znand);
+        c.media_per_port =
+            Some(vec![MediaKind::Ddr5, MediaKind::Znand, MediaKind::Ddr5, MediaKind::Znand]);
+        let ports = c.build_ports();
+        for (i, p) in ports.iter().enumerate() {
+            assert_eq!(p.cache.is_some(), i % 2 == 1, "port {i} cache attachment");
+        }
+        // Zero capacity attaches nothing anywhere.
+        c.cache.capacity_bytes = 0;
+        assert!(c.build_ports().iter().all(|p| p.cache.is_none()));
     }
 
     #[test]

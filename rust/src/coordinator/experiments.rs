@@ -48,6 +48,16 @@ impl Scale {
     }
 }
 
+/// Destructure a result batch into exactly `N` parts, in submission
+/// order. Replaces the old `pop().unwrap()` chains, which silently
+/// depended on reversal and panicked bare on a miscounted batch; a
+/// mismatch now reports which experiment produced how many results.
+fn take_exact<T, const N: usize>(v: Vec<T>, ctx: &str) -> [T; N] {
+    let got = v.len();
+    <[T; N]>::try_from(v)
+        .unwrap_or_else(|_| panic!("{ctx}: expected {N} result sets, got {got}"))
+}
+
 // ---------------------------------------------------------------------------
 // Fig. 3b — controller round-trip latency
 // ---------------------------------------------------------------------------
@@ -154,10 +164,8 @@ pub struct Fig9a {
 /// The 3×13 grid runs as one flat parallel batch.
 pub fn fig9a(scale: Scale, print: bool) -> Fig9a {
     let ops = Some(scale.total_ops);
-    let mut suites = run_suites(&["gpu-dram", "uvm", "cxl"], MediaKind::Ddr5, ops);
-    let cxl = suites.pop().unwrap();
-    let uvm = suites.pop().unwrap();
-    let baseline = suites.pop().unwrap();
+    let suites = run_suites(&["gpu-dram", "uvm", "cxl"], MediaKind::Ddr5, ops);
+    let [baseline, uvm, cxl] = take_exact(suites, "fig9a");
 
     let res = Fig9a {
         uvm_over_ideal: overall_geomean(&uvm, &baseline),
@@ -495,9 +503,8 @@ pub fn fig9e(scale: Scale, print: bool) -> Fig9e {
             (spec("bfs"), cfg)
         })
         .collect();
-    let mut results = run_jobs(&jobs);
-    let ds = results.pop().unwrap();
-    let sr = results.pop().unwrap();
+    let results = run_jobs(&jobs);
+    let [sr, ds] = take_exact(results, "fig9e");
     let convert = |tl: &crate::sim::Timeline| -> Vec<(f64, f64)> {
         tl.series().iter().map(|&(t, v)| (ps_to_ns(t), v)).collect()
     };
@@ -655,6 +662,160 @@ pub fn tiering(scale: Scale, print: bool) -> TierSweep {
             "tiered hybrid over static hybrid: {} geomean; over frozen-placement ablation: {}",
             ratio(res.tier_speedup_over_hybrid),
             ratio(res.tier_speedup_over_static),
+        );
+    }
+    res
+}
+
+// ---------------------------------------------------------------------------
+// Expander cache — capacity × workload-reuse sweep (§14)
+// ---------------------------------------------------------------------------
+
+/// One (workload, capacity) cell of the expander-cache sweep. Latencies
+/// are mean end-to-end demand-load latencies in simulated microseconds;
+/// the three columns share one trace, so their ratios isolate the
+/// device cache (`uncached` = plain `cxl`, `admit_all` =
+/// `cxl-cache-bypass`, `cached` = `cxl-cache`).
+#[derive(Debug, Clone)]
+pub struct CacheRow {
+    pub workload: &'static str,
+    /// Hot fraction of the workload's loads in permille (0 for the
+    /// streaming reference row).
+    pub hot_permille: u32,
+    pub capacity_bytes: u64,
+    pub uncached_load_us: f64,
+    pub admit_all_load_us: f64,
+    pub cached_load_us: f64,
+    pub uncached_exec_ms: f64,
+    pub cached_exec_ms: f64,
+    /// `cxl-cache` device-cache hit rate.
+    pub hit_rate: f64,
+    /// `cxl-cache` admission bypasses (streaming protection at work).
+    pub bypasses: u64,
+    /// `cxl-cache` dirty-eviction writebacks.
+    pub writebacks: u64,
+    /// `cxl-cache` writeback drain-queue high-water mark.
+    pub wb_hwm: u64,
+}
+
+/// Aggregate result of [`expander_cache`].
+#[derive(Debug, Clone)]
+pub struct CacheSweep {
+    pub rows: Vec<CacheRow>,
+    /// Geomean of `uncached / cached` load latency over the reuse-heavy
+    /// (hot-set) rows — the bench floor (>1 means the device cache wins
+    /// where reuse exists).
+    pub cached_read_speedup: f64,
+    /// Geomean of `admit_all / cached` over every row — what the
+    /// adaptive admission predictor is worth on top of the raw cache.
+    pub admit_speedup: f64,
+}
+
+/// The expander-cache experiment (`--fig cache`): device-cache capacity
+/// × workload reuse on a Z-NAND expander. Reuse axis: the `hot50..
+/// hot95` synthetics (rising hot-set skew) plus `vadd` as the
+/// streaming, reuse-free reference the admission predictor must refuse
+/// to cache. Backs `benches/expander_cache.rs` → `BENCH_expander_cache.json`.
+pub fn expander_cache(scale: Scale, print: bool) -> CacheSweep {
+    const CAPACITIES: [u64; 3] = [128 << 10, 512 << 10, 2 << 20];
+    let workloads: Vec<&'static crate::workloads::WorkloadSpec> =
+        HOT_SWEEP.iter().chain(std::iter::once(spec("vadd"))).collect();
+
+    // Per workload: one uncached reference + (bypass-ablation, cached)
+    // per capacity, all as one flat parallel batch.
+    let per_wl = 1 + CAPACITIES.len() * 2;
+    let mut jobs: Vec<SweepJob> = Vec::new();
+    for &w in &workloads {
+        let mut base = SystemConfig::named("cxl", MediaKind::Znand);
+        base.total_ops = scale.ssd_ops;
+        base.ssd_scale();
+        jobs.push((w, base));
+        for &cap in &CAPACITIES {
+            for cfg_name in ["cxl-cache-bypass", "cxl-cache"] {
+                let mut cfg = SystemConfig::named(cfg_name, MediaKind::Znand);
+                cfg.total_ops = scale.ssd_ops;
+                cfg.ssd_scale();
+                cfg.cache.capacity_bytes = cap;
+                jobs.push((w, cfg));
+            }
+        }
+    }
+    let results = run_jobs(&jobs);
+
+    let mut rows = Vec::new();
+    for (wi, &w) in workloads.iter().enumerate() {
+        let base = &results[wi * per_wl];
+        let hot_permille = match w.pattern {
+            PatternKind::HotCold { hot_permille, .. } => hot_permille,
+            _ => 0,
+        };
+        for (ci, &cap) in CAPACITIES.iter().enumerate() {
+            let admit_all = &results[wi * per_wl + 1 + ci * 2];
+            let cached = &results[wi * per_wl + 1 + ci * 2 + 1];
+            rows.push(CacheRow {
+                workload: w.name,
+                hot_permille,
+                capacity_bytes: cap,
+                uncached_load_us: base.metrics.load_latency.mean() / 1e6,
+                admit_all_load_us: admit_all.metrics.load_latency.mean() / 1e6,
+                cached_load_us: cached.metrics.load_latency.mean() / 1e6,
+                uncached_exec_ms: base.metrics.exec_ms(),
+                cached_exec_ms: cached.metrics.exec_ms(),
+                hit_rate: cached.metrics.dev_cache_hit_rate(),
+                bypasses: cached.metrics.cache_bypasses,
+                writebacks: cached.metrics.cache_writebacks,
+                wb_hwm: cached.metrics.cache_wb_hwm,
+            });
+        }
+    }
+    let geo = |sel: &dyn Fn(&CacheRow) -> Option<f64>| -> f64 {
+        let logs: Vec<f64> = rows.iter().filter_map(sel).map(f64::ln).collect();
+        (logs.iter().sum::<f64>() / logs.len().max(1) as f64).exp()
+    };
+    let res = CacheSweep {
+        cached_read_speedup: geo(&|r| {
+            (r.hot_permille > 0).then(|| r.uncached_load_us / r.cached_load_us.max(1e-12))
+        }),
+        admit_speedup: geo(&|r| Some(r.admit_all_load_us / r.cached_load_us.max(1e-12))),
+        rows,
+    };
+    if print {
+        let ctrl = CxlController::new(ControllerKind::Panmnesia);
+        // Hit service from the sweep's actual spec; miss service from
+        // the Z-NAND media model — no duplicated latency literals.
+        let hit_service = crate::expander::CacheSpec::default().dram_lat;
+        let miss_service =
+            crate::media::SsdModel::new(crate::media::SsdParams::znand()).nominal_read_ps();
+        println!(
+            "device paths (64B round trip incl. service): DRAM-cache hit {:.0} ns, Z-NAND media miss {:.0} ns",
+            ps_to_ns(ctrl.round_trip_64b_with(hit_service)),
+            ps_to_ns(ctrl.round_trip_64b_with(miss_service)),
+        );
+        let mut t = Table::new(
+            "Expander cache — capacity × reuse sweep (Z-NAND; mean demand-load latency)",
+            &[
+                "workload", "capacity", "uncached", "admit-all", "cached", "speedup",
+                "hit rate", "bypasses", "writebacks",
+            ],
+        );
+        for r in &res.rows {
+            t.rowv(vec![
+                r.workload.into(),
+                format!("{} KiB", r.capacity_bytes >> 10),
+                format!("{:.2} µs", r.uncached_load_us),
+                format!("{:.2} µs", r.admit_all_load_us),
+                format!("{:.2} µs", r.cached_load_us),
+                ratio(r.uncached_load_us / r.cached_load_us.max(1e-12)),
+                format!("{:.0}%", r.hit_rate * 100.0),
+                r.bypasses.to_string(),
+                r.writebacks.to_string(),
+            ]);
+        }
+        t.print();
+        println!(
+            "cached over uncached on reuse-heavy rows: {} geomean; adaptive admission over admit-all: {}",
+            ratio(res.cached_read_speedup),
+            ratio(res.admit_speedup),
         );
     }
     res
@@ -833,10 +994,8 @@ pub struct Headline {
 /// both comparators support).
 pub fn headline(scale: Scale, print: bool) -> Headline {
     let ops = Some(scale.total_ops);
-    let mut suites = run_suites(&["uvm", "cxl", "cxl-smt"], MediaKind::Ddr5, ops);
-    let smt = suites.pop().unwrap();
-    let cxl = suites.pop().unwrap();
-    let uvm = suites.pop().unwrap();
+    let suites = run_suites(&["uvm", "cxl", "cxl-smt"], MediaKind::Ddr5, ops);
+    let [uvm, cxl, smt] = take_exact(suites, "headline");
     let res = Headline {
         cxl_over_uvm: overall_geomean(&uvm, &cxl),
         cxl_over_smt: overall_geomean(&smt, &cxl),

@@ -67,6 +67,18 @@ pub struct RunMetrics {
     pub tier_slow_accesses: u64,
     /// Tiering: epoch scans performed.
     pub tier_epochs: u64,
+    /// Expander device-cache (DESIGN.md §14) demand hits, summed across
+    /// SSD endpoints (0 for uncached configs).
+    pub cache_hits: u64,
+    /// Device-cache demand misses.
+    pub cache_misses: u64,
+    /// Dirty-eviction writebacks queued for media drain.
+    pub cache_writebacks: u64,
+    /// Read misses the admission predictor refused to install
+    /// (streaming bypass).
+    pub cache_bypasses: u64,
+    /// Writeback drain-queue high-water mark, maxed across endpoints.
+    pub cache_wb_hwm: u64,
     /// Expander-load latency reservoir (issue → data, queueing
     /// included) for percentile queries — the multi-tenant experiments'
     /// p99 victim-slowdown metric. Deterministic (index-hashed
@@ -109,6 +121,17 @@ impl RunMetrics {
     /// Simulated exec time in milliseconds.
     pub fn exec_ms(&self) -> f64 {
         ps_to_ns(self.exec_time) / 1e6
+    }
+
+    /// Expander device-cache hit rate over its demand lookups (0 when
+    /// no endpoint carried a cache).
+    pub fn dev_cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
     }
 
     /// Fraction of tier-tracked expander accesses served by the fast
@@ -178,6 +201,13 @@ mod tests {
     fn summary_line_formats() {
         let m = RunMetrics::default();
         assert!(m.summary_line().contains("exec"));
+    }
+
+    #[test]
+    fn dev_cache_hit_rate_handles_zero_and_computes() {
+        assert_eq!(RunMetrics::default().dev_cache_hit_rate(), 0.0);
+        let m = RunMetrics { cache_hits: 3, cache_misses: 1, ..Default::default() };
+        assert!((m.dev_cache_hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -171,6 +171,14 @@ impl System {
                         cfg.tier.page_bytes
                     )));
                 }
+                if cfg.cache.enabled
+                    && !(cfg.cache.line_bytes.is_power_of_two() && cfg.cache.line_bytes >= 64)
+                {
+                    return Err(ctx(format!(
+                        "cache.line_bytes {:#x} must be a power of two >= 64",
+                        cfg.cache.line_bytes
+                    )));
+                }
                 if cfg.fabric.enabled || attach.is_some() {
                     // Pooled fabric: endpoints live behind the shared
                     // switch. A standalone fabric config builds its own
@@ -345,6 +353,14 @@ impl System {
                     self.metrics.ds_intercepts += p.ds.stats.read_intercepts;
                     self.metrics.port_queue_hwm =
                         self.metrics.port_queue_hwm.max(p.stats.queue_hwm);
+                    if let Some(c) = &p.cache {
+                        self.metrics.cache_hits += c.stats.hits;
+                        self.metrics.cache_misses += c.stats.misses;
+                        self.metrics.cache_writebacks += c.stats.writebacks;
+                        self.metrics.cache_bypasses += c.stats.bypasses;
+                        self.metrics.cache_wb_hwm =
+                            self.metrics.cache_wb_hwm.max(c.stats.wb_hwm);
+                    }
                 }
                 if let Some(fh) = rc.fabric_harvest() {
                     self.metrics.ingress_hwm = fh.upstream.ingress_hwm;
@@ -362,6 +378,12 @@ impl System {
                         self.metrics.port_queue_hwm =
                             self.metrics.port_queue_hwm.max(pool.queue_hwm);
                         self.metrics.gc_episodes += pool.gc_episodes;
+                        self.metrics.cache_hits += pool.cache_hits;
+                        self.metrics.cache_misses += pool.cache_misses;
+                        self.metrics.cache_writebacks += pool.cache_writebacks;
+                        self.metrics.cache_bypasses += pool.cache_bypasses;
+                        self.metrics.cache_wb_hwm =
+                            self.metrics.cache_wb_hwm.max(pool.cache_wb_hwm);
                     }
                 }
                 if let Some(t) = &rc.tier {
@@ -783,6 +805,49 @@ mod tests {
         let mut c = tiny("cxl", MediaKind::Ddr5);
         c.warps = 0;
         assert!(System::try_new(spec("vadd"), &c).is_err());
+    }
+
+    #[test]
+    fn device_cache_counters_flow_into_metrics() {
+        let mut c = tiny("cxl-cache", MediaKind::Znand);
+        c.total_ops = 24_000;
+        // Keep the hot set out of the LLC so the expander sees reuse.
+        c.llc.capacity = 64 << 10;
+        let m = System::new(spec("hot90"), &c).run();
+        assert!(m.cache_hits > 0, "reused lines must hit the device cache");
+        assert!(m.cache_misses > 0);
+        assert!(m.cache_bypasses > 0, "the cold scatter must bypass");
+        let plain = System::new(spec("hot90"), &{
+            let mut p = c.clone();
+            p.name = "cxl".into();
+            p.cache.enabled = false;
+            p
+        })
+        .run();
+        assert_eq!(plain.cache_hits + plain.cache_misses, 0, "uncached runs report zeros");
+    }
+
+    #[test]
+    fn cache_composes_with_tiering() {
+        let mut c = tiny("cxl-tier", MediaKind::Znand);
+        c.total_ops = 24_000;
+        c.llc.capacity = 128 << 10;
+        c.cache.enabled = true;
+        let a = System::new(spec("hot90"), &c).run();
+        let b = System::new(spec("hot90"), &c).run();
+        assert!(a.tier_promotions > 0, "tiering must still migrate");
+        assert!(a.cache_hits + a.cache_misses > 0, "SSD ports must run the cache");
+        assert_eq!(a.exec_time, b.exec_time, "tier+cache must stay deterministic");
+        assert_eq!(a.cache_hits, b.cache_hits);
+        assert_eq!(a.cache_writebacks, b.cache_writebacks);
+    }
+
+    #[test]
+    fn try_new_rejects_bad_cache_line_with_context() {
+        let mut c = tiny("cxl-cache", MediaKind::Znand);
+        c.cache.line_bytes = 100;
+        let err = System::try_new(spec("vadd"), &c).unwrap_err();
+        assert!(err.contains("cache.line_bytes"), "wrong message: {err}");
     }
 
     #[test]

@@ -51,6 +51,27 @@ impl DevLoad {
         }
     }
 
+    /// [`DevLoad::classify`] with the expander cache's writeback-drain
+    /// backlog folded in (DESIGN.md §14): queued dirty-eviction
+    /// writebacks are ingress work the endpoint still owes its media,
+    /// so the reported class is the worse of the queue-occupancy class
+    /// and the drain-backlog class. With an empty drain queue this is
+    /// exactly [`DevLoad::classify`] — which is what keeps uncached
+    /// (and zero-capacity-cache) endpoints bit-identical.
+    pub fn classify_with_drain(
+        occupancy: usize,
+        capacity: usize,
+        wb_pending: usize,
+        wb_capacity: usize,
+        internal_task: bool,
+    ) -> DevLoad {
+        let base = DevLoad::classify(occupancy, capacity, internal_task);
+        if wb_pending == 0 {
+            return base;
+        }
+        base.max(DevLoad::classify(wb_pending, wb_capacity.max(1), false))
+    }
+
     /// Two-bit wire encoding (00=light per the paper's "light load (11)"
     /// typo normalized to spec order: we use spec order L=0,O=1,M=2,S=3).
     pub fn encode(self) -> u8 {
@@ -96,6 +117,24 @@ mod tests {
         assert_eq!(DevLoad::classify(0, 64, true), DevLoad::Severe);
         assert_eq!(DevLoad::classify(20, 64, true), DevLoad::Severe);
         assert_eq!(DevLoad::classify(60, 64, true), DevLoad::Severe);
+    }
+
+    #[test]
+    fn drain_backlog_raises_the_class_and_empty_backlog_is_identity() {
+        // No backlog: identical to plain classify at every occupancy.
+        for occ in [0usize, 16, 32, 48, 64] {
+            for task in [false, true] {
+                assert_eq!(
+                    DevLoad::classify_with_drain(occ, 64, 0, 64, task),
+                    DevLoad::classify(occ, 64, task),
+                );
+            }
+        }
+        // A deep drain queue raises a lightly-loaded endpoint.
+        assert_eq!(DevLoad::classify_with_drain(0, 64, 48, 64, false), DevLoad::Severe);
+        assert_eq!(DevLoad::classify_with_drain(0, 64, 20, 64, false), DevLoad::Optimal);
+        // But never lowers a loaded one.
+        assert_eq!(DevLoad::classify_with_drain(48, 64, 1, 64, false), DevLoad::Severe);
     }
 
     #[test]

@@ -1,0 +1,560 @@
+//! Deterministic set-associative writeback DRAM cache inside the CXL
+//! endpoint (DESIGN.md §14).
+//!
+//! This is the controller-managed device cache that sits between the
+//! endpoint's CXL controller and its media model: a read hit is served
+//! from device DRAM (the cheap path the paper's two-digit-ns round-trip
+//! claim depends on), a read miss admitted by the [`super::admit`]
+//! predictor fetches the whole cache line from the media in one backend
+//! read, and a write to a resident line is absorbed in device DRAM
+//! (writeback-on-hit) instead of reaching the flash at all. Dirty
+//! evictions enter a **writeback drain queue** whose backlog (a) is
+//! retired against the media as real media writes by the owning port
+//! and (b) feeds the endpoint's DevLoad occupancy
+//! ([`crate::cxl::DevLoad::classify_with_drain`]).
+//!
+//! The cache is a pure deterministic state machine: no RNG, no wall
+//! clock, true-LRU within each set via a monotonic stamp counter. All
+//! timing charges (hit service, media fetches, writeback drains) are
+//! made by the owning [`crate::rootcomplex::RootPort`], which keeps the
+//! structure directly drivable by property tests.
+
+use std::collections::VecDeque;
+
+use crate::sim::{Time, NS};
+
+use super::admit::{AdmissionFilter, AdmitConfig, AdmitPolicy};
+
+/// Device-DRAM streaming bandwidth for hit-service serialization —
+/// the media layer owns the single definition, so this hit path and
+/// the SSD model's internal one share the same cost surface.
+pub use crate::media::ssd::DEV_DRAM_GBPS;
+
+/// Writebacks retired against the media per demand access (the drain
+/// engine's opportunistic budget).
+pub const WB_DRAIN_BATCH: usize = 2;
+
+/// Device-cache geometry and policies. `capacity_bytes == 0` (or
+/// `enabled == false`) means **no cache object at all** — the port's
+/// paths are then byte-for-byte the pre-§14 code, which is what makes a
+/// zero-capacity `cxl-cache` bit-identical to `cxl`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheSpec {
+    pub enabled: bool,
+    /// Total device-DRAM capacity dedicated to the cache, per endpoint.
+    pub capacity_bytes: u64,
+    /// Set associativity (clamped to the line count).
+    pub ways: usize,
+    /// Cache-line size in bytes (power of two, ≥ 64): a miss fetch
+    /// installs this much with a single backend read, so it is also the
+    /// cache's spatial-prefetch granule.
+    pub line_bytes: u64,
+    /// Device-DRAM access time (hit service).
+    pub dram_lat: Time,
+    /// Drain-queue depth treated as "full" for DevLoad classification
+    /// (the queue itself never drops writebacks).
+    pub wb_queue_cap: usize,
+    pub admit: AdmitConfig,
+}
+
+impl Default for CacheSpec {
+    fn default() -> CacheSpec {
+        CacheSpec {
+            enabled: false,
+            capacity_bytes: 512 << 10,
+            ways: 8,
+            line_bytes: 256,
+            dram_lat: 120 * NS,
+            wb_queue_cap: 64,
+            admit: AdmitConfig::default(),
+        }
+    }
+}
+
+impl CacheSpec {
+    /// The `cxl-cache-bypass` ablation: same cache, admission predictor
+    /// off (every miss installs).
+    pub fn admit_all(mut self) -> CacheSpec {
+        self.admit.policy = AdmitPolicy::AdmitAll;
+        self
+    }
+}
+
+/// One way of one set.
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    /// Cache-line index (`line_base / line_bytes`); meaningful iff
+    /// `valid`.
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    /// Fill completion: a hit before `ready` waits for the in-flight
+    /// fetch (mirrors the SSD model's in-flight prefetch semantics).
+    ready: Time,
+    /// LRU stamp (monotonic per-cache counter; larger = more recent).
+    stamp: u64,
+}
+
+const EMPTY_SLOT: Slot = Slot { tag: 0, valid: false, dirty: false, ready: 0, stamp: 0 };
+
+/// Result of a cache lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lookup {
+    /// Every covering line is resident; data is served once the latest
+    /// in-flight fill (`ready`) lands.
+    Hit { ready: Time },
+    Miss,
+}
+
+/// A line pushed out by an install.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Evicted {
+    /// Line base address (device-relative).
+    pub addr: u64,
+    pub dirty: bool,
+}
+
+/// Counters wired through `RunMetrics` (and the determinism
+/// fingerprint — see `tests/determinism.rs`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Demand lookups (loads + stores) served by the cache.
+    pub hits: u64,
+    /// Demand lookups that missed.
+    pub misses: u64,
+    /// Read misses the admission predictor refused to install.
+    pub bypasses: u64,
+    /// Dirty evictions enqueued for media writeback.
+    pub writebacks: u64,
+    pub writeback_bytes: u64,
+    /// Writeback-queue depth high-water mark.
+    pub wb_hwm: u64,
+    /// Clean→dirty line transitions (conservation invariant:
+    /// `dirtied == writebacks + dirty_dropped + dirty lines resident`).
+    pub dirtied: u64,
+    /// Dirty lines discarded by range invalidation (their data is
+    /// subsumed by the migration copy that triggered it).
+    pub dirty_dropped: u64,
+    /// Queued writebacks cancelled by range invalidation before they
+    /// drained (flow invariant: `writebacks == drained + pending +
+    /// wb_cancelled`).
+    pub wb_cancelled: u64,
+    /// Lines installed by MemSpecRd prefetch (admission-exempt).
+    pub prefetch_installs: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The expander-side device DRAM cache.
+#[derive(Debug)]
+pub struct DeviceCache {
+    spec: CacheSpec,
+    /// Power-of-two set count (decode by mask).
+    sets: u64,
+    ways: usize,
+    /// `sets * ways` slots, set-major.
+    slots: Vec<Slot>,
+    stamp: u64,
+    admit: AdmissionFilter,
+    /// Dirty-eviction drain queue (line base addresses, FIFO).
+    wb: VecDeque<u64>,
+    pub stats: CacheStats,
+}
+
+impl DeviceCache {
+    /// Build a cache, or `None` when the spec describes no cache (the
+    /// structural guarantee behind the zero-capacity determinism test).
+    pub fn new(spec: CacheSpec) -> Option<DeviceCache> {
+        if !spec.enabled {
+            return None;
+        }
+        debug_assert!(spec.line_bytes.is_power_of_two() && spec.line_bytes >= 64);
+        let lines = spec.capacity_bytes / spec.line_bytes;
+        if lines == 0 {
+            return None;
+        }
+        let ways = spec.ways.clamp(1, lines as usize);
+        // Largest power-of-two set count that fits the capacity.
+        let mut sets = 1u64;
+        while sets * 2 * ways as u64 <= lines {
+            sets *= 2;
+        }
+        Some(DeviceCache {
+            spec,
+            sets,
+            ways,
+            slots: vec![EMPTY_SLOT; (sets as usize) * ways],
+            stamp: 0,
+            admit: AdmissionFilter::new(spec.admit),
+            wb: VecDeque::new(),
+            stats: CacheStats::default(),
+        })
+    }
+
+    pub fn dram_lat(&self) -> Time {
+        self.spec.dram_lat
+    }
+
+    pub fn line_bytes(&self) -> u64 {
+        self.spec.line_bytes
+    }
+
+    pub fn wb_queue_cap(&self) -> usize {
+        self.spec.wb_queue_cap
+    }
+
+    /// Total line slots (capacity rounded to the set grid).
+    pub fn capacity_lines(&self) -> u64 {
+        self.sets * self.ways as u64
+    }
+
+    fn line_of(&self, addr: u64) -> u64 {
+        addr / self.spec.line_bytes
+    }
+
+    /// Line-aligned covering span of `[addr, addr + len)`.
+    pub fn span(&self, addr: u64, len: u64) -> (u64, u64) {
+        let lb = self.spec.line_bytes;
+        let base = addr / lb * lb;
+        let end = (addr + len.max(1)).div_ceil(lb) * lb;
+        (base, end - base)
+    }
+
+    fn set_range(&self, line: u64) -> (usize, usize) {
+        let set = (line & (self.sets - 1)) as usize;
+        (set * self.ways, set * self.ways + self.ways)
+    }
+
+    fn find(&self, line: u64) -> Option<usize> {
+        let (lo, hi) = self.set_range(line);
+        (lo..hi).find(|&i| self.slots[i].valid && self.slots[i].tag == line)
+    }
+
+    fn touch(&mut self, idx: usize) {
+        self.stamp += 1;
+        self.slots[idx].stamp = self.stamp;
+    }
+
+    /// Demand lookup of `[addr, addr + len)`. A hit requires every
+    /// covering line resident; hits refresh LRU and (for writes) dirty
+    /// the lines. Exactly one of `hits`/`misses` increments per call.
+    pub fn lookup(&mut self, now: Time, addr: u64, len: u64, is_write: bool) -> Lookup {
+        let first = self.line_of(addr);
+        let last = self.line_of(addr + len.max(1) - 1);
+        // Pass 1: residency (no state change on a miss, so a bypassed
+        // miss leaves the cache untouched).
+        for line in first..=last {
+            if self.find(line).is_none() {
+                self.stats.misses += 1;
+                return Lookup::Miss;
+            }
+        }
+        let mut ready = 0;
+        for line in first..=last {
+            let idx = self.find(line).expect("checked resident above");
+            ready = ready.max(self.slots[idx].ready);
+            if is_write && !self.slots[idx].dirty {
+                self.slots[idx].dirty = true;
+                self.stats.dirtied += 1;
+            }
+            self.touch(idx);
+        }
+        self.stats.hits += 1;
+        self.admit.on_hit(addr, now);
+        Lookup::Hit { ready }
+    }
+
+    /// Admission decision for the read miss at `addr`; a refusal is a
+    /// counted bypass.
+    pub fn should_admit(&mut self, addr: u64, now: Time) -> bool {
+        if self.admit.should_admit(addr, now) {
+            true
+        } else {
+            self.stats.bypasses += 1;
+            false
+        }
+    }
+
+    /// Install one line; returns the pushed-out victim, if any. Dirty
+    /// victims are queued for media writeback.
+    pub fn install_line(&mut self, addr: u64, ready: Time, dirty: bool) -> Option<Evicted> {
+        let line = self.line_of(addr);
+        if let Some(idx) = self.find(line) {
+            // Refresh in place (e.g. prefetch racing a demand install).
+            // The earliest fill wins: a redundant refetch of a line whose
+            // data is already (or sooner) available must never push its
+            // readiness into the future.
+            let s = &mut self.slots[idx];
+            s.ready = s.ready.min(ready);
+            if dirty && !s.dirty {
+                s.dirty = true;
+                self.stats.dirtied += 1;
+            }
+            self.touch(idx);
+            return None;
+        }
+        let (lo, hi) = self.set_range(line);
+        // Victim: an invalid way, else the smallest stamp (true LRU).
+        let victim = (lo..hi)
+            .find(|&i| !self.slots[i].valid)
+            .unwrap_or_else(|| {
+                (lo..hi)
+                    .min_by_key(|&i| self.slots[i].stamp)
+                    .expect("ways >= 1")
+            });
+        let evicted = if self.slots[victim].valid {
+            let v = self.slots[victim];
+            let v_addr = v.tag * self.spec.line_bytes;
+            if v.dirty {
+                self.wb.push_back(v_addr);
+                self.stats.writebacks += 1;
+                self.stats.writeback_bytes += self.spec.line_bytes;
+                self.stats.wb_hwm = self.stats.wb_hwm.max(self.wb.len() as u64);
+            }
+            Some(Evicted { addr: v_addr, dirty: v.dirty })
+        } else {
+            None
+        };
+        self.stamp += 1;
+        self.slots[victim] =
+            Slot { tag: line, valid: true, dirty, ready, stamp: self.stamp };
+        if dirty {
+            self.stats.dirtied += 1;
+        }
+        evicted
+    }
+
+    /// Install every line covering `[addr, addr + len)` (a miss fetch or
+    /// a MemSpecRd window), all becoming ready at `ready`.
+    pub fn install(&mut self, addr: u64, len: u64, ready: Time, dirty: bool) {
+        let (base, span) = self.span(addr, len);
+        let mut a = base;
+        while a < base + span {
+            self.install_line(a, ready, dirty);
+            a += self.spec.line_bytes;
+        }
+    }
+
+    /// Admission-exempt prefetch install (SR windows carry their own
+    /// DevLoad-driven rate control).
+    pub fn prefetch_install(&mut self, addr: u64, len: u64, ready: Time) {
+        let (base, span) = self.span(addr, len);
+        let mut a = base;
+        while a < base + span {
+            if self.find(self.line_of(a)).is_none() {
+                self.stats.prefetch_installs += 1;
+            }
+            self.install_line(a, ready, false);
+            a += self.spec.line_bytes;
+        }
+    }
+
+    /// Is the whole span device-resident? Read-only probe (no LRU
+    /// refresh, no stats) — the SR reader uses it to suppress hints for
+    /// already-cached windows.
+    pub fn contains_span(&self, addr: u64, len: u64) -> bool {
+        let first = self.line_of(addr);
+        let last = self.line_of(addr + len.max(1) - 1);
+        (first..=last).all(|line| self.find(line).is_some())
+    }
+
+    /// Next queued writeback to retire against the media (FIFO).
+    pub fn pop_writeback(&mut self) -> Option<u64> {
+        self.wb.pop_front()
+    }
+
+    /// Writebacks still queued (the DevLoad drain-pressure input).
+    pub fn wb_pending(&self) -> usize {
+        self.wb.len()
+    }
+
+    /// Drop the lines covering `[addr, addr + len)` by direct set probe
+    /// — O(covering lines × ways), cheap enough for the tiering
+    /// engine's per-chunk calls (≤ a page per chunk). The invalidating
+    /// writer (the migration copy) owns the newest bytes for the whole
+    /// range, so dirty residents are dropped, not written back — and
+    /// writebacks already queued for the range are cancelled for the
+    /// same reason: draining them would model stale bytes overwriting
+    /// the freshly-migrated page.
+    pub fn invalidate_span(&mut self, addr: u64, len: u64) {
+        let first = self.line_of(addr);
+        let last = self.line_of(addr + len.max(1) - 1);
+        for line in first..=last {
+            if let Some(idx) = self.find(line) {
+                if self.slots[idx].dirty {
+                    self.stats.dirty_dropped += 1;
+                }
+                self.slots[idx].valid = false;
+                self.slots[idx].dirty = false;
+            }
+        }
+        let lo = first * self.spec.line_bytes;
+        let hi = (last + 1) * self.spec.line_bytes;
+        let before = self.wb.len();
+        self.wb.retain(|&a| a < lo || a >= hi);
+        self.stats.wb_cancelled += (before - self.wb.len()) as u64;
+    }
+
+    /// Reconcile resident lines with a write-through store of
+    /// `[addr, addr + len)` that missed the cache. Lines the store
+    /// overwrites *fully* are superseded (dropped — the flash now holds
+    /// newer bytes for their whole extent); a *partially* covered
+    /// resident line keeps the freshest bytes for its uncovered portion
+    /// in device DRAM, so it is dirtied and stays resident instead of
+    /// being dropped. (Unreachable for today's 64 B stores — a single
+    /// covering line that is resident is a write hit — but the port API
+    /// accepts arbitrary spans.)
+    pub fn on_write_through(&mut self, addr: u64, len: u64) {
+        let lb = self.spec.line_bytes;
+        let first = self.line_of(addr);
+        let last = self.line_of(addr + len.max(1) - 1);
+        for line in first..=last {
+            let base = line * lb;
+            let fully = addr <= base && base + lb <= addr + len.max(1);
+            if fully {
+                self.invalidate_span(base, lb);
+            } else if let Some(idx) = self.find(line) {
+                if !self.slots[idx].dirty {
+                    self.slots[idx].dirty = true;
+                    self.stats.dirtied += 1;
+                }
+                self.touch(idx);
+            }
+        }
+    }
+
+    /// Resident line count.
+    pub fn lines(&self) -> u64 {
+        self.slots.iter().filter(|s| s.valid).count() as u64
+    }
+
+    /// Resident dirty-line count (conservation checks).
+    pub fn dirty_lines(&self) -> u64 {
+        self.slots.iter().filter(|s| s.valid && s.dirty).count() as u64
+    }
+
+    /// Admission-predictor epoch count (telemetry).
+    pub fn admit_epochs(&self) -> u64 {
+        self.admit.stats.epochs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(capacity: u64, ways: usize) -> DeviceCache {
+        DeviceCache::new(CacheSpec {
+            enabled: true,
+            capacity_bytes: capacity,
+            ways,
+            ..CacheSpec::default()
+        })
+        .expect("nonzero capacity")
+    }
+
+    #[test]
+    fn zero_capacity_or_disabled_builds_nothing() {
+        assert!(DeviceCache::new(CacheSpec::default()).is_none(), "disabled");
+        let z = CacheSpec { enabled: true, capacity_bytes: 0, ..CacheSpec::default() };
+        assert!(DeviceCache::new(z).is_none(), "zero capacity");
+    }
+
+    #[test]
+    fn geometry_is_power_of_two_sets() {
+        let c = cache(512 << 10, 8);
+        assert_eq!(c.capacity_lines(), 2048);
+        assert_eq!(c.sets, 256);
+        // Capacity that doesn't divide evenly rounds down, never up.
+        let c = cache(300 << 10, 8);
+        assert!(c.capacity_lines() * c.line_bytes() <= 300 << 10);
+    }
+
+    #[test]
+    fn miss_then_install_then_hit() {
+        let mut c = cache(64 << 10, 4);
+        assert_eq!(c.lookup(0, 0x1000, 64, false), Lookup::Miss);
+        c.install(0x1000, 64, 500, false);
+        match c.lookup(1000, 0x1000, 64, false) {
+            Lookup::Hit { ready } => assert_eq!(ready, 500),
+            Lookup::Miss => panic!("installed line must hit"),
+        }
+        // The whole 256 B line came in with the fetch.
+        assert!(matches!(c.lookup(1000, 0x10c0, 64, false), Lookup::Hit { .. }));
+        assert_eq!(c.stats.hits, 2);
+        assert_eq!(c.stats.misses, 1);
+    }
+
+    #[test]
+    fn write_hit_dirties_and_eviction_queues_writeback() {
+        let mut c = cache(4 << 10, 1); // 16 direct-mapped 256B lines
+        c.install(0x0, 64, 0, false);
+        assert!(matches!(c.lookup(0, 0x0, 64, true), Lookup::Hit { .. }));
+        assert_eq!(c.stats.dirtied, 1);
+        assert_eq!(c.dirty_lines(), 1);
+        // Conflict-evict line 0 (same set: 16 sets, line 16 maps to set 0).
+        let conflict = 16 * 256;
+        c.install(conflict, 64, 0, false);
+        assert_eq!(c.stats.writebacks, 1);
+        assert_eq!(c.pop_writeback(), Some(0));
+        assert_eq!(c.wb_pending(), 0);
+        assert_eq!(c.stats.writeback_bytes, 256);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent_way() {
+        let mut c = cache(2 << 10, 8); // one set of 8 ways
+        assert_eq!(c.sets, 1);
+        for i in 0..8u64 {
+            c.install_line(i * 256, 0, false);
+        }
+        // Touch line 0 so line 1 becomes LRU.
+        assert!(matches!(c.lookup(0, 0, 64, false), Lookup::Hit { .. }));
+        let ev = c.install_line(8 * 256, 0, false).expect("full set evicts");
+        assert_eq!(ev.addr, 256, "line 1 was least recently used");
+        assert!(!ev.dirty);
+    }
+
+    #[test]
+    fn invalidate_span_drops_dirty_without_writeback() {
+        let mut c = cache(4 << 10, 4);
+        c.install(0x2000, 256, 0, true);
+        assert_eq!(c.dirty_lines(), 1);
+        c.invalidate_span(0x2000, 0x1000);
+        assert_eq!(c.dirty_lines(), 0);
+        assert_eq!(c.lines(), 0);
+        assert_eq!(c.stats.dirty_dropped, 1);
+        assert_eq!(c.wb_pending(), 0, "invalidation is not a writeback");
+        assert_eq!(c.lookup(0, 0x2000, 64, false), Lookup::Miss);
+    }
+
+    #[test]
+    fn contains_span_is_side_effect_free() {
+        let mut c = cache(4 << 10, 4);
+        c.install(0x400, 512, 0, false);
+        let (h, m) = (c.stats.hits, c.stats.misses);
+        assert!(c.contains_span(0x400, 512));
+        assert!(!c.contains_span(0x400, 1024));
+        assert_eq!((c.stats.hits, c.stats.misses), (h, m));
+    }
+
+    #[test]
+    fn in_flight_fill_gates_hit_readiness() {
+        let mut c = cache(4 << 10, 4);
+        c.prefetch_install(0x800, 512, 9_000);
+        match c.lookup(100, 0x900, 64, false) {
+            Lookup::Hit { ready } => assert_eq!(ready, 9_000, "hit waits for the fill"),
+            Lookup::Miss => panic!("prefetched span must hit"),
+        }
+        assert_eq!(c.stats.prefetch_installs, 2);
+    }
+}

@@ -1,0 +1,29 @@
+//! Expander-side intelligent caching (DESIGN.md §14): the device's own
+//! DRAM cache plus an adaptive admission predictor, living *inside* the
+//! CXL endpoint between the controller and the media model.
+//!
+//! The paper hides backend-media latency variation from the host with
+//! speculative reads and deterministic stores; this subsystem completes
+//! the device half of that story (ICGMM-style intelligent caching, the
+//! CXL-SSD full-system literature's controller-managed DRAM cache):
+//!
+//! * [`cache`] — a deterministic set-associative **writeback** cache
+//!   over device DRAM: read hits serve at DRAM speed, writes to
+//!   resident lines never reach the flash, dirty evictions drain
+//!   through a writeback queue charged as real media writes and fed
+//!   into the endpoint's DevLoad occupancy.
+//! * [`admit`] — an epoch-based admission/bypass predictor with
+//!   deterministic per-region reuse counters: streaming scans bypass
+//!   the cache, reused lines admit.
+//!
+//! A zero-capacity spec builds no cache object at all, so every port
+//! path stays byte-identical to the uncached code — the structural
+//! guarantee behind the `cxl-cache`-at-zero-capacity determinism test.
+
+pub mod admit;
+pub mod cache;
+
+pub use admit::{AdmissionFilter, AdmitConfig, AdmitPolicy, AdmitStats};
+pub use cache::{
+    CacheSpec, CacheStats, DeviceCache, Evicted, Lookup, DEV_DRAM_GBPS, WB_DRAIN_BATCH,
+};

@@ -161,6 +161,14 @@ pub struct PoolSums {
     pub gc_episodes: u64,
     /// Max memory-queue high-water mark across the pooled endpoints.
     pub queue_hwm: u64,
+    /// Expander device-cache sums across the pooled endpoints
+    /// (DESIGN.md §14; zero when no endpoint carries a cache).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_writebacks: u64,
+    pub cache_bypasses: u64,
+    /// Max writeback-drain-queue high-water mark across the endpoints.
+    pub cache_wb_hwm: u64,
 }
 
 /// One tenant's side of the switch.
@@ -294,6 +302,13 @@ impl CxlSwitch {
             s.queue_hwm = s.queue_hwm.max(p.stats.queue_hwm);
             if let EpBackend::Ssd(m) = &p.backend {
                 s.gc_episodes += m.stats.gc_episodes;
+            }
+            if let Some(c) = &p.cache {
+                s.cache_hits += c.stats.hits;
+                s.cache_misses += c.stats.misses;
+                s.cache_writebacks += c.stats.writebacks;
+                s.cache_bypasses += c.stats.bypasses;
+                s.cache_wb_hwm = s.cache_wb_hwm.max(c.stats.wb_hwm);
             }
         }
         s

@@ -23,6 +23,7 @@
 pub mod baselines;
 pub mod coordinator;
 pub mod cxl;
+pub mod expander;
 pub mod fabric;
 pub mod gpu;
 pub mod media;

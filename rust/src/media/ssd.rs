@@ -17,6 +17,13 @@ use super::{MediaKind, MediaStats};
 /// Alias matching the Table 1a device rows.
 pub type SsdKind = MediaKind;
 
+/// Internal device-DRAM streaming bandwidth (GB/s) used to serialize
+/// cache-hit service. One definition for both device-DRAM hit paths —
+/// the SSD's own internal cache here and the expander-side device
+/// cache (`crate::expander`, which re-exports this) — so they stay on
+/// the same cost surface and can't drift apart.
+pub const DEV_DRAM_GBPS: f64 = 44.8;
+
 /// SSD model parameters (picosecond latencies).
 #[derive(Debug, Clone, Copy)]
 pub struct SsdParams {
@@ -395,7 +402,7 @@ impl SsdModel {
         if all_cached {
             self.stats.cache_hits += 1;
             let done = ready_at + self.params.dram_lat
-                + transfer_time(len.max(64), 44.8);
+                + transfer_time(len.max(64), DEV_DRAM_GBPS);
             return (done, true);
         }
 
@@ -474,19 +481,7 @@ impl SsdModel {
         self.drain_buffer(now);
         self.stats.writes += 1;
         self.stats.write_bytes += len;
-
-        // GC pressure with write amplification: sequential overwrites are
-        // FTL-friendly (erase-block-aligned streams, amp ~1); random
-        // writes fragment erase blocks and multiply relocation work.
-        // "Sequential" tolerates small forward gaps: LLC evictions of a
-        // coalesced store stream arrive in ascending order but not
-        // perfectly adjacent (warp interleave), and the FTL coalesces
-        // anything landing within an open erase block.
-        let sequential =
-            addr >= self.last_write_end && addr - self.last_write_end <= 4096;
-        self.last_write_end = addr + len;
-        let amp = if sequential { 1 } else { 4 };
-        self.account_flash_write(len * amp, now);
+        self.account_write_pressure(now, addr, len);
 
         // Wear-leveling pause (Optane): rare, but stalls the whole device.
         if self.params.wear_level_p > 0.0 && rng.chance(self.params.wear_level_p) {
@@ -494,6 +489,38 @@ impl SsdModel {
             self.wl_until = start + self.params.wear_level_pause;
         }
 
+        self.buffer_or_stall(now, len)
+    }
+
+    /// Device-internal write (the expander cache's writeback drain): the
+    /// same buffering/GC accounting as [`SsdModel::write`], but no
+    /// wear-leveling coin — internal relocations are already folded into
+    /// the GC model, and the drain path has no requester RNG to consume.
+    pub fn write_internal(&mut self, now: Time, addr: u64, len: u64) -> Time {
+        self.drain_buffer(now);
+        self.stats.writes += 1;
+        self.stats.write_bytes += len;
+        self.account_write_pressure(now, addr, len);
+        self.buffer_or_stall(now, len)
+    }
+
+    /// GC pressure with write amplification: sequential overwrites are
+    /// FTL-friendly (erase-block-aligned streams, amp ~1); random
+    /// writes fragment erase blocks and multiply relocation work.
+    /// "Sequential" tolerates small forward gaps: LLC evictions of a
+    /// coalesced store stream arrive in ascending order but not
+    /// perfectly adjacent (warp interleave), and the FTL coalesces
+    /// anything landing within an open erase block.
+    fn account_write_pressure(&mut self, now: Time, addr: u64, len: u64) {
+        let sequential =
+            addr >= self.last_write_end && addr - self.last_write_end <= 4096;
+        self.last_write_end = addr + len;
+        let amp = if sequential { 1 } else { 4 };
+        self.account_flash_write(len * amp, now);
+    }
+
+    /// Accept `len` bytes into the write buffer, or stall on the drain.
+    fn buffer_or_stall(&mut self, now: Time, len: u64) -> Time {
         if self.buf_bytes + len <= self.params.write_buf_bytes {
             self.buf_bytes += len;
             return now + self.params.dram_lat;
@@ -605,6 +632,22 @@ mod tests {
         }
         assert!(m.stats.gc_episodes > 0, "no GC after 8 MiB of writes");
         assert!(m.stats.gc_time > 0);
+    }
+
+    #[test]
+    fn internal_writes_share_accounting_but_skip_the_wear_coin() {
+        let mut p = SsdParams::znand();
+        p.gc_every_bytes = 1 << 20;
+        p.write_buf_bytes = 64 << 10;
+        let mut m = SsdModel::new(p);
+        let mut now = 0;
+        // The expander cache's writeback drain has no requester RNG;
+        // internal writes must still build buffer/GC pressure.
+        for i in 0..2048u64 {
+            now = m.write_internal(now, i * 4096, 4096).max(now);
+        }
+        assert!(m.stats.gc_episodes > 0, "internal writes must feed GC accounting");
+        assert_eq!(m.stats.writes, 2048);
     }
 
     #[test]

@@ -368,9 +368,13 @@ impl RootComplex {
                 // Any DS-buffered lines in either frame are subsumed by
                 // the page copy (which carries the freshest data) and
                 // must not intercept reads of the page that will occupy
-                // these device addresses after the swap.
+                // these device addresses after the swap. The same goes
+                // for lines in the expander-side device cache (§14):
+                // stale residents must not serve hits post-swap.
                 ports[sp].ds.invalidate_range(s_dpa, s_dpa + chunk);
                 ports[fp].ds.invalidate_range(f_dpa, f_dpa + chunk);
+                ports[sp].invalidate_cache_range(s_dpa, s_dpa + chunk);
+                ports[fp].invalidate_cache_range(f_dpa, f_dpa + chunk);
                 // Promotion leg: slow read → fast write.
                 ports[sp].migrate(start, s_dpa, chunk, false, rng);
                 ports[fp].migrate(start, f_dpa, chunk, true, rng);

@@ -8,8 +8,9 @@
 use std::collections::VecDeque;
 
 use crate::cxl::{ControllerKind, CxlController, DevLoad, Flit, MemOpcode};
+use crate::expander::{CacheSpec, DeviceCache, Lookup, DEV_DRAM_GBPS, WB_DRAIN_BATCH};
 use crate::media::{DramModel, MediaKind, SsdModel};
-use crate::sim::{Time, NS};
+use crate::sim::{transfer_time, Time, NS};
 use crate::util::prng::Pcg32;
 use crate::util::stats::Summary;
 
@@ -41,7 +42,9 @@ impl EpBackend {
 pub enum LoadPath {
     /// Served from the DS buffer in GPU local memory.
     DsIntercept,
-    /// SSD internal DRAM cache hit (possibly SR-prefetched).
+    /// Device-DRAM hit inside the EP: the SSD model's internal cache or
+    /// the expander-side device cache (DESIGN.md §14), either possibly
+    /// SR-prefetched.
     EpCacheHit,
     /// Backend media access.
     Media,
@@ -98,6 +101,9 @@ pub struct RootPort {
     pub sr: SpecReadEngine,
     /// Deterministic Store engine (GPU-memory store buffering).
     pub ds: DetStoreEngine,
+    /// Expander-side device DRAM cache (DESIGN.md §14); `None` keeps
+    /// every path byte-identical to the uncached port.
+    pub cache: Option<DeviceCache>,
     /// Memory-queue slots: completion time of the request occupying each.
     slots: Vec<Time>,
     /// Recent outstanding demand addresses (SR window input).
@@ -126,12 +132,35 @@ impl RootPort {
             backend,
             sr: SpecReadEngine::new(sr_policy),
             ds: DetStoreEngine::new(ds_enabled, ds_capacity),
+            cache: None,
             slots: vec![0; MEM_QUEUE_CAP],
             recent: VecDeque::with_capacity(MEM_QUEUE_CAP),
             local_ack: 200 * NS,
             flush_scratch: Vec::new(),
             stats: PortStats::default(),
             req_id: 0,
+        }
+    }
+
+    /// Attach the expander-side device cache described by `spec` (SSD
+    /// backends only — fronting fast DRAM media with more DRAM models
+    /// nothing). A disabled or zero-capacity spec attaches no cache at
+    /// all, keeping the port byte-identical to the uncached build.
+    pub fn with_cache(mut self, spec: CacheSpec) -> RootPort {
+        if self.backend.is_ssd() {
+            self.cache = DeviceCache::new(spec);
+        }
+        self
+    }
+
+    /// Drop cached lines in the device-address range `[lo, hi)` — used
+    /// by the tiering engine before migrating pages through the port,
+    /// mirroring the DS range invalidation. Migration chunks are
+    /// line-aligned and at most a page, so the direct set probe is the
+    /// right cost shape (covering lines × ways, not a full-slot scan).
+    pub fn invalidate_cache_range(&mut self, lo: u64, hi: u64) {
+        if let Some(c) = &mut self.cache {
+            c.invalidate_span(lo, hi.saturating_sub(lo));
         }
     }
 
@@ -178,13 +207,19 @@ impl RootPort {
 
     /// The endpoint's DevLoad as observed at `at`: ingress-queue
     /// occupancy quartiles plus the internal-task announcement (GC /
-    /// wear-leveling) for SSD backends.
+    /// wear-leveling) for SSD backends, plus — when the device cache is
+    /// attached — the writeback drain queue's backlog (dirty evictions
+    /// the EP still owes its media).
     pub fn devload(&self, at: Time) -> DevLoad {
         let task = match &self.backend {
             EpBackend::Dram(_) => false,
             EpBackend::Ssd(s) => s.internal_task_active(at),
         };
-        DevLoad::classify(self.occupancy(at), MEM_QUEUE_CAP, task)
+        let (wb, wb_cap) = self
+            .cache
+            .as_ref()
+            .map_or((0, 1), |c| (c.wb_pending(), c.wb_queue_cap()));
+        DevLoad::classify_with_drain(self.occupancy(at), MEM_QUEUE_CAP, wb, wb_cap, task)
     }
 
     fn remember(&mut self, addr: u64) {
@@ -219,28 +254,76 @@ impl RootPort {
         // Split borrows: the SR engine reads the recent-address queue
         // while the backend stays independently mutable (no per-load
         // clone of the queue — this is the hot path).
-        let RootPort { sr, recent, backend, ctrl, .. } = self;
+        let RootPort { sr, recent, backend, ctrl, cache, .. } = self;
         if let (Some(srf), EpBackend::Ssd(ssd)) =
             (sr.on_load(now, addr, recent, rid), backend)
         {
-            // The hint crosses the link like a request flit, then the EP
-            // prefetches into its internal DRAM.
-            let hint_arrive = now + ctrl.request_leg(&srf);
-            ssd.prefetch(hint_arrive, srf.addr, srf.len.max(64));
+            // Device-cache probe: a window already resident in device
+            // DRAM needs no hint — the cheap path exists. `sr_issued`
+            // still counts the emitted window; `cache_suppressed`
+            // records that it never crossed the link.
+            if cache.as_ref().map_or(false, |c| c.contains_span(srf.addr, srf.len.max(64))) {
+                sr.hint_covered_by_cache();
+            } else {
+                // The hint crosses the link like a request flit, then the
+                // EP prefetches into its internal DRAM — and, when
+                // present, the device cache stages the same window
+                // (admission-exempt: SR carries its own DevLoad-driven
+                // rate control).
+                let hint_arrive = now + ctrl.request_leg(&srf);
+                let staged = ssd.prefetch(hint_arrive, srf.addr, srf.len.max(64));
+                if let Some(c) = cache {
+                    c.prefetch_install(srf.addr, srf.len.max(64), staged);
+                }
+            }
         }
 
         let (slot, start) = self.acquire_slot(now);
 
-        // Demand read: request leg, media service, response leg.
+        // Demand read: request leg, device service, response leg. With
+        // the device cache attached the EP-side service order is: retire
+        // a writeback-drain batch, then serve a resident line from
+        // device DRAM, or fetch-and-install the covering cache line
+        // (admission permitting) with one backend read, or bypass —
+        // which is byte-for-byte the uncached path.
         let flit = Flit { op: MemOpcode::MemRd, addr, len, issued_at: start, req_id: rid };
         let at_ep = start + self.ctrl.request_leg(&flit);
-        let (media_done, path) = match &mut self.backend {
+        let RootPort { backend, cache, .. } = self;
+        let (media_done, path) = match backend {
             EpBackend::Dram(d) => (d.access(at_ep, addr, len, false), LoadPath::Media),
-            EpBackend::Ssd(s) => {
-                s.settle_prefetches(at_ep);
-                let (t, hit) = s.read(at_ep, addr, len);
-                (t, if hit { LoadPath::EpCacheHit } else { LoadPath::Media })
-            }
+            EpBackend::Ssd(s) => match cache {
+                Some(c) => {
+                    drain_writebacks(c, s, at_ep);
+                    match c.lookup(at_ep, addr, len, false) {
+                        Lookup::Hit { ready } => {
+                            // Wait out any in-flight fill, then the DRAM
+                            // hop + serialization — the same cost surface
+                            // as the SSD model's internal hit path.
+                            let done = ready.max(at_ep)
+                                + c.dram_lat()
+                                + transfer_time(len.max(64), DEV_DRAM_GBPS);
+                            (done, LoadPath::EpCacheHit)
+                        }
+                        Lookup::Miss => {
+                            s.settle_prefetches(at_ep);
+                            if c.should_admit(addr, at_ep) {
+                                let (base, span) = c.span(addr, len);
+                                let (t, hit) = s.read(at_ep, base, span);
+                                c.install(base, span, t, false);
+                                (t, if hit { LoadPath::EpCacheHit } else { LoadPath::Media })
+                            } else {
+                                let (t, hit) = s.read(at_ep, addr, len);
+                                (t, if hit { LoadPath::EpCacheHit } else { LoadPath::Media })
+                            }
+                        }
+                    }
+                }
+                None => {
+                    s.settle_prefetches(at_ep);
+                    let (t, hit) = s.read(at_ep, addr, len);
+                    (t, if hit { LoadPath::EpCacheHit } else { LoadPath::Media })
+                }
+            },
         };
         let done = media_done + self.ctrl.response_leg(&flit);
         self.slots[slot] = done;
@@ -287,8 +370,9 @@ impl RootPort {
                 let flit =
                     Flit { op: MemOpcode::MemWr, addr, len, issued_at: start, req_id: 0 };
                 let at_ep = start + self.ctrl.request_leg(&flit);
-                let done = match &mut self.backend {
-                    EpBackend::Ssd(s) => s.write(at_ep, addr, len, rng),
+                let RootPort { backend, cache, .. } = self;
+                let done = match backend {
+                    EpBackend::Ssd(s) => ssd_write_through_cache(cache, s, at_ep, addr, len, rng),
                     EpBackend::Dram(d) => d.access(at_ep, addr, len, true),
                 };
                 self.slots[slot] = done + self.ctrl.response_leg(&flit);
@@ -300,21 +384,24 @@ impl RootPort {
                 let flit =
                     Flit { op: MemOpcode::MemWr, addr, len, issued_at: start, req_id: 0 };
                 let at_ep = start + self.ctrl.request_leg(&flit);
-                let ack = match &mut self.backend {
+                let RootPort { backend, cache, ctrl, .. } = self;
+                let ack = match backend {
                     EpBackend::Dram(d) => {
                         // Posted write: the DRAM EP's controller accepts
                         // the flit into its write queue and returns the
                         // NDR completion immediately; the array write
                         // drains in the background (bank state advances).
                         d.access(at_ep, addr, len, true);
-                        at_ep + 10 * NS + self.ctrl.response_leg(&flit)
+                        at_ep + 10 * NS + ctrl.response_leg(&flit)
                     }
                     EpBackend::Ssd(s) => {
                         // SSD acks track the write buffer: fast with room,
                         // stalled when full or during internal tasks —
-                        // the tail DS exists to hide.
-                        let media_done = s.write(at_ep, addr, len, rng);
-                        media_done + self.ctrl.response_leg(&flit)
+                        // the tail DS exists to hide. A device-cache hit
+                        // absorbs the store in device DRAM instead.
+                        let media_done =
+                            ssd_write_through_cache(cache, s, at_ep, addr, len, rng);
+                        media_done + ctrl.response_leg(&flit)
                     }
                 };
                 self.slots[slot] = ack;
@@ -331,9 +418,12 @@ impl RootPort {
     /// memory-queue slot, the controller's request/response legs, and
     /// real media time — so page movement contends with (and delays)
     /// demand requests instead of teleporting. It deliberately bypasses
-    /// the SR and DS engines: a DMA-style mover neither speculates nor
-    /// needs deterministic acks, and its addresses must not pollute the
-    /// SR window detector. Returns the transfer's completion time.
+    /// the SR and DS engines *and* the device cache: a DMA-style mover
+    /// neither speculates nor needs deterministic acks, its addresses
+    /// must not pollute the SR window detector, and the tiering engine
+    /// invalidates migrated ranges out of the cache instead
+    /// ([`RootPort::invalidate_cache_range`]). Returns the transfer's
+    /// completion time.
     pub fn migrate(&mut self, now: Time, addr: u64, len: u64, is_write: bool, rng: &mut Pcg32) -> Time {
         self.stats.migrations += 1;
         let (slot, start) = self.acquire_slot(now);
@@ -377,8 +467,9 @@ impl RootPort {
             let (slot, start) = self.acquire_slot(last);
             let flit = Flit { op: MemOpcode::MemWr, addr: line, len, issued_at: start, req_id: 0 };
             let at_ep = start + self.ctrl.request_leg(&flit);
-            let done = match &mut self.backend {
-                EpBackend::Ssd(s) => s.write(at_ep, line, len, rng),
+            let RootPort { backend, cache, .. } = &mut *self;
+            let done = match backend {
+                EpBackend::Ssd(s) => ssd_write_through_cache(cache, s, at_ep, line, len, rng),
                 EpBackend::Dram(d) => d.access(at_ep, line, len, true),
             };
             self.slots[slot] = done;
@@ -387,6 +478,55 @@ impl RootPort {
         }
         self.flush_scratch = lines;
         Some(last)
+    }
+}
+
+/// Retire up to [`WB_DRAIN_BATCH`] queued dirty-eviction writebacks
+/// against the media. Opportunistic: it runs at each EP-side access, so
+/// drain progress rides the same timeline as the traffic that caused
+/// the evictions, and each drained line is charged as a real media
+/// write (write-buffer occupancy, GC accounting) via
+/// [`SsdModel::write_internal`].
+fn drain_writebacks(cache: &mut DeviceCache, ssd: &mut SsdModel, now: Time) {
+    for _ in 0..WB_DRAIN_BATCH {
+        match cache.pop_writeback() {
+            Some(line) => {
+                ssd.write_internal(now, line, cache.line_bytes());
+            }
+            None => break,
+        }
+    }
+}
+
+/// SSD store path through the device cache: writeback-on-hit (the store
+/// is absorbed in device DRAM and reaches the flash only on eviction),
+/// no-allocate on miss (streaming stores write through exactly as the
+/// uncached path does — no false residency from partial-line installs).
+/// A write-through miss also reconciles any resident covering lines
+/// ([`DeviceCache::on_write_through`]): fully-overwritten ones are
+/// superseded by the flash, partially-covered ones keep their freshest
+/// bytes and stay dirty. `None` cache is byte-for-byte the uncached
+/// path.
+fn ssd_write_through_cache(
+    cache: &mut Option<DeviceCache>,
+    s: &mut SsdModel,
+    at_ep: Time,
+    addr: u64,
+    len: u64,
+    rng: &mut Pcg32,
+) -> Time {
+    match cache {
+        Some(c) => {
+            drain_writebacks(c, s, at_ep);
+            match c.lookup(at_ep, addr, len, true) {
+                Lookup::Hit { ready } => ready.max(at_ep) + c.dram_lat(),
+                Lookup::Miss => {
+                    c.on_write_through(addr, len);
+                    s.write(at_ep, addr, len, rng)
+                }
+            }
+        }
+        None => s.write(at_ep, addr, len, rng),
     }
 }
 
@@ -534,5 +674,142 @@ mod tests {
             p.load(0, i * 4096 * 16, 64);
         }
         assert!(p.stats.queue_full_waits >= 1);
+    }
+
+    fn cached_ssd_port(spec: CacheSpec) -> RootPort {
+        RootPort::new(
+            0,
+            ControllerKind::Panmnesia,
+            EpBackend::Ssd(SsdModel::new(SsdParams::znand())),
+            SrPolicy::Off,
+            false,
+            0,
+        )
+        .with_cache(spec)
+    }
+
+    fn admit_all_spec() -> CacheSpec {
+        CacheSpec { enabled: true, ..CacheSpec::default() }.admit_all()
+    }
+
+    #[test]
+    fn with_cache_attaches_only_nonzero_specs_on_ssd() {
+        let p = cached_ssd_port(CacheSpec::default());
+        assert!(p.cache.is_none(), "disabled spec attaches nothing");
+        let z = CacheSpec { enabled: true, capacity_bytes: 0, ..CacheSpec::default() };
+        assert!(cached_ssd_port(z).cache.is_none(), "zero capacity attaches nothing");
+        assert!(cached_ssd_port(admit_all_spec()).cache.is_some());
+        let dram = RootPort::new(
+            0,
+            ControllerKind::Panmnesia,
+            EpBackend::Dram(DramModel::new(DramTimings::ddr5_5600())),
+            SrPolicy::Off,
+            false,
+            0,
+        )
+        .with_cache(admit_all_spec());
+        assert!(dram.cache.is_none(), "DRAM EPs take no device cache");
+    }
+
+    #[test]
+    fn device_cache_miss_fetch_then_spatial_hit() {
+        let mut p = cached_ssd_port(admit_all_spec());
+        let first = p.load(0, 0x1000, 64);
+        assert!(first.done >= 3 * US, "admitted miss pays the media read");
+        // The whole 256 B device-cache line came in with the fetch: a
+        // later load of the *adjacent* 64 B hits device DRAM.
+        let second = p.load(first.done, 0x10c0, 64);
+        assert_eq!(second.path, LoadPath::EpCacheHit);
+        assert!(second.done - first.done < 1 * US, "hit took {}", second.done - first.done);
+        let c = p.cache.as_ref().unwrap();
+        assert_eq!(c.stats.misses, 1);
+        assert_eq!(c.stats.hits, 1);
+    }
+
+    #[test]
+    fn adaptive_admission_bypasses_a_pure_scan() {
+        let spec = CacheSpec { enabled: true, ..CacheSpec::default() };
+        let mut p = cached_ssd_port(spec);
+        let mut now = 0;
+        for i in 0..256u64 {
+            now = p.load(now, i * 4096 * 8, 64).done;
+        }
+        let c = p.cache.as_ref().unwrap();
+        assert!(c.stats.bypasses > 100, "scan must mostly bypass: {}", c.stats.bypasses);
+        assert!(c.lines() < 64, "scan must not fill the cache: {} lines", c.lines());
+    }
+
+    #[test]
+    fn store_hit_absorbs_in_device_dram_and_eviction_writes_back() {
+        let mut rng = Pcg32::new(7, 7);
+        // Tiny direct-mapped cache so conflict evictions are easy.
+        let spec = CacheSpec {
+            enabled: true,
+            capacity_bytes: 4 << 10,
+            ways: 1,
+            ..CacheSpec::default()
+        }
+        .admit_all();
+        let mut p = cached_ssd_port(spec);
+        let warm = p.load(0, 0x0, 64).done; // install line 0
+        let out = p.store(warm, 0x0, 64, &mut rng);
+        assert!(out.ack - warm < 1 * US, "store hit must ack at DRAM speed: {}", out.ack - warm);
+        assert_eq!(p.cache.as_ref().unwrap().dirty_lines(), 1);
+        // Conflict-evict the dirty line (16 sets of 256 B lines).
+        let t = p.load(out.ack, 16 * 256, 64).done;
+        let c = p.cache.as_ref().unwrap();
+        assert_eq!(c.stats.writebacks, 1, "dirty eviction must queue a writeback");
+        // The next access drains the queue into the media.
+        p.load(t, 32 * 256, 64);
+        assert_eq!(p.cache.as_ref().unwrap().wb_pending(), 0, "drain retired the writeback");
+        let EpBackend::Ssd(s) = &p.backend else { unreachable!() };
+        assert!(s.stats.writes >= 1, "writeback must be charged as a media write");
+    }
+
+    #[test]
+    fn sr_window_stages_into_the_device_cache_and_probes_suppress() {
+        let mut p = RootPort::new(
+            0,
+            ControllerKind::Panmnesia,
+            EpBackend::Ssd(SsdModel::new(SsdParams::znand())),
+            SrPolicy::Dynamic,
+            false,
+            0,
+        )
+        .with_cache(admit_all_spec());
+        let first = p.load(0, 0x4000, 64);
+        let c = p.cache.as_ref().unwrap();
+        assert!(c.stats.prefetch_installs > 0, "the SR window must stage into the cache");
+        // A later load inside the staged window hits device DRAM.
+        let second = p.load(first.done + 10 * US, 0x4100, 64);
+        assert_eq!(second.path, LoadPath::EpCacheHit);
+    }
+
+    #[test]
+    fn zero_capacity_cache_port_is_byte_identical() {
+        let mut plain = ssd_port(SrPolicy::Dynamic, true);
+        let mut zero = RootPort::new(
+            0,
+            ControllerKind::Panmnesia,
+            EpBackend::Ssd(SsdModel::new(SsdParams::znand())),
+            SrPolicy::Dynamic,
+            true,
+            1 << 20,
+        )
+        .with_cache(CacheSpec { enabled: true, capacity_bytes: 0, ..CacheSpec::default() });
+        let mut rng_a = Pcg32::new(11, 11);
+        let mut rng_b = Pcg32::new(11, 11);
+        let mut now = 0;
+        for i in 0..200u64 {
+            let a = plain.load(now, (i * 67) % (1 << 20) * 64, 64);
+            let b = zero.load(now, (i * 67) % (1 << 20) * 64, 64);
+            assert_eq!(a.done, b.done, "load {i} diverged");
+            assert_eq!(a.path, b.path, "load {i} path diverged");
+            let sa = plain.store(now, (i * 31) % (1 << 20) * 64, 64, &mut rng_a);
+            let sb = zero.store(now, (i * 31) % (1 << 20) * 64, 64, &mut rng_b);
+            assert_eq!(sa.ack, sb.ack, "store {i} diverged");
+            now = now.max(a.done) + 100;
+        }
+        assert_eq!(plain.stats.queue_hwm, zero.stats.queue_hwm);
     }
 }

@@ -48,6 +48,9 @@ pub struct SrStats {
     pub sr_issued: u64,
     pub sr_bytes: u64,
     pub dedup_forwarded: u64,
+    /// Hints suppressed because the port's device-cache probe found the
+    /// candidate window already resident in device DRAM (DESIGN.md §14).
+    pub cache_suppressed: u64,
     pub halted: u64,
     pub streak_grows: u64,
     pub shrinks: u64,
@@ -116,6 +119,36 @@ impl SpecReadEngine {
     /// decay the lead slowly toward its floor.
     pub fn feedback_timely(&mut self) {
         self.lead = self.lead.saturating_sub(32).max(512);
+    }
+
+    /// Covered-window evidence (ring dedup or device-cache residency):
+    /// sustained coverage means the windows are tracking the stream —
+    /// widen them even if the EP's DevLoad never reports Light (a
+    /// saturated-but-recovering EP would otherwise pin the granularity
+    /// at its floor).
+    fn note_on_stream_evidence(&mut self) {
+        self.dedup_streak += 1;
+        if self.dedup_streak >= 16 {
+            self.dedup_streak = 0;
+            if self.granularity < 1024 {
+                self.granularity *= 2;
+                self.stats.streak_grows += 1;
+            }
+        }
+    }
+
+    /// The port probed the expander's device cache for the window this
+    /// engine just emitted and found it fully resident: the hint was
+    /// dropped before crossing the link. Like ring dedup, residency is
+    /// on-stream evidence, so it feeds the same streak-widening loop —
+    /// after first undoing the emission path's off-stream decrement
+    /// (the window turned out to be covered after all; without the
+    /// undo, suppression evidence would only ever cancel to net zero
+    /// and cache-resident streams could never widen their windows).
+    pub fn hint_covered_by_cache(&mut self) {
+        self.stats.cache_suppressed += 1;
+        self.dedup_streak += 1;
+        self.note_on_stream_evidence();
     }
 
     /// Record a DevLoad observation from a completion (the profiler path)
@@ -228,18 +261,7 @@ impl SpecReadEngine {
         };
         if self.window_covered(flit.addr, flit.len.max(64)) {
             self.stats.dedup_forwarded += 1;
-            // On-stream evidence: sustained coverage means the windows
-            // are tracking the stream — widen them even if the EP's
-            // DevLoad never reports Light (a saturated-but-recovering EP
-            // would otherwise pin the granularity at its floor).
-            self.dedup_streak += 1;
-            if self.dedup_streak >= 16 {
-                self.dedup_streak = 0;
-                if self.granularity < 1024 {
-                    self.granularity *= 2;
-                    self.stats.streak_grows += 1;
-                }
-            }
+            self.note_on_stream_evidence();
             return None;
         }
         self.dedup_streak = self.dedup_streak.saturating_sub(1);
@@ -410,6 +432,25 @@ mod tests {
         let f = e.on_load(0, 0x40040, &queue, 1).unwrap();
         assert_eq!(f.addr % 256, 0);
         assert!(f.len >= 256 && f.len <= 1024, "len {}", f.len);
+    }
+
+    #[test]
+    fn cache_suppression_counts_and_feeds_the_streak() {
+        let mut e = SpecReadEngine::new(SrPolicy::Dynamic);
+        e.observe_devload(DevLoad::Moderate);
+        e.observe_devload(DevLoad::Moderate);
+        assert_eq!(e.granularity(), 256);
+        // Integrated sequence: each window is *emitted* by on_load
+        // (which decrements the streak as off-stream pessimism) and
+        // then suppressed by the port's cache probe. Suppression must
+        // net-advance the streak, not just cancel the decrement.
+        for i in 0..16u64 {
+            let f = e.on_load(i, 0x100000 * (i + 1), &mq(&[]), i).expect("window emitted");
+            assert!(f.len >= 256);
+            e.hint_covered_by_cache();
+        }
+        assert_eq!(e.stats.cache_suppressed, 16);
+        assert!(e.granularity() > 256, "sustained residency must widen windows");
     }
 
     #[test]

@@ -50,6 +50,16 @@ fn fingerprint(m: &RunMetrics) -> Vec<u64> {
         m.ingress_hwm,
         m.qos_throttle_waits,
         m.fabric_backpressure,
+        // Expander device-cache counters (DESIGN.md §14): admission
+        // decisions, eviction/writeback traffic and the drain-queue
+        // high-water mark are part of the deterministic surface (zero
+        // for uncached configs — which is exactly what makes the
+        // zero-capacity identity test below meaningful).
+        m.cache_hits,
+        m.cache_misses,
+        m.cache_writebacks,
+        m.cache_bypasses,
+        m.cache_wb_hwm,
     ]
 }
 
@@ -72,6 +82,11 @@ fn repeated_runs_are_bit_identical() {
         // Pooled fabric, with and without the QoS token bucket.
         ("cxl-pool", MediaKind::Znand, "bfs"),
         ("cxl-pool-qos", MediaKind::Znand, "bfs"),
+        // Device cache: admission epochs, LRU state and the writeback
+        // drain must replay bit-for-bit (with and without the
+        // admission predictor).
+        ("cxl-cache", MediaKind::Znand, "hot75"),
+        ("cxl-cache-bypass", MediaKind::Znand, "hot75"),
     ] {
         let cfg = small(name, media);
         let a = System::new(spec(wl), &cfg).run();
@@ -143,6 +158,31 @@ fn single_tenant_pool_reproduces_direct_cxl_bit_identically() {
             "cxl-pool/{wl} on {media:?} is not a bit-identical passthrough"
         );
         assert_eq!(pooled.ingress_hwm, 0, "passthrough must not track ingress");
+    }
+}
+
+/// The zero-capacity identity (DESIGN.md §14): a `cxl-cache` whose
+/// device cache has zero capacity builds *no cache object at all*, so
+/// every port path must be byte-identical to plain `cxl` — same event
+/// counts, same latched latency bits, all cache counters zero. Same for
+/// the `cxl-cache-bypass` ablation with admission forced off. This is
+/// the determinism carry-over guarantee: enabling the config without
+/// giving it capacity cannot perturb a single bit.
+#[test]
+fn zero_capacity_cache_reproduces_cxl_bit_identically() {
+    for (media, wl) in [(MediaKind::Znand, "hot90"), (MediaKind::Znand, "bfs")] {
+        let direct = System::new(spec(wl), &small("cxl", media)).run();
+        for name in ["cxl-cache", "cxl-cache-bypass"] {
+            let mut cfg = small(name, media);
+            cfg.cache.capacity_bytes = 0;
+            let cached = System::new(spec(wl), &cfg).run();
+            assert_eq!(
+                fingerprint(&direct),
+                fingerprint(&cached),
+                "{name}/{wl} at zero capacity is not bit-identical to cxl"
+            );
+            assert_eq!(cached.cache_hits + cached.cache_misses, 0);
+        }
     }
 }
 

@@ -48,6 +48,22 @@ fn fig9e_ds_hides_store_tail() {
 }
 
 #[test]
+fn expander_cache_sweep_exercises_the_cache() {
+    // Quick scale is warmup-dominated, so the latency *win* is asserted
+    // only at full scale (benches/expander_cache.rs); here the sweep's
+    // structure and the cache's vital signs must hold.
+    let r = experiments::expander_cache(Scale::quick(), false);
+    assert_eq!(r.rows.len(), 5 * 3, "5 workloads x 3 capacities");
+    assert!(r.rows.iter().any(|row| row.hit_rate > 0.0), "no cell ever hit the cache");
+    assert!(
+        r.rows.iter().any(|row| row.bypasses > 0),
+        "the admission predictor never bypassed"
+    );
+    assert!(r.cached_read_speedup.is_finite() && r.cached_read_speedup > 0.0);
+    assert!(r.admit_speedup.is_finite() && r.admit_speedup > 0.0);
+}
+
+#[test]
 fn headline_direction() {
     let r = experiments::headline(Scale::quick(), false);
     assert!(r.cxl_over_uvm > 1.5);

@@ -505,3 +505,164 @@ fn prop_token_bucket_never_exceeds_its_rate() {
         Ok(())
     });
 }
+
+/// Expander device cache (DESIGN.md §14), invariant sweep under random
+/// read/write/drain/invalidate interleavings:
+/// * exactly one of hits/misses increments per demand lookup,
+/// * writeback byte conservation (`writeback_bytes == writebacks x
+///   line_bytes`, and every enqueued writeback is either drained or
+///   still pending),
+/// * dirty-line conservation: every clean→dirty transition is matched
+///   by a queued writeback, an invalidation drop, or a still-resident
+///   dirty line.
+#[test]
+fn prop_device_cache_accounting_and_conservation() {
+    use cxl_gpu::expander::{CacheSpec, DeviceCache, Lookup};
+    check("device-cache-conservation", 0xCAC4E, 120, |g| {
+        let ways = *g.choose("ways", &[1usize, 2, 4, 8]);
+        let cap_kib = *g.choose("cap", &[1u64, 2, 4, 8]);
+        let mut spec = CacheSpec {
+            enabled: true,
+            capacity_bytes: cap_kib << 10,
+            ways,
+            ..CacheSpec::default()
+        };
+        if g.bool("admit-all", 0.5) {
+            spec = spec.admit_all();
+        }
+        let Some(mut c) = DeviceCache::new(spec) else {
+            return Err("nonzero capacity must build a cache".into());
+        };
+        let ops = g.usize("ops", 1, 400);
+        let mut lookups = 0u64;
+        let mut drained = 0u64;
+        for i in 0..ops {
+            let addr = g.u64(&format!("a{i}"), 0, 1 << 16) & !63;
+            match g.u64(&format!("op{i}"), 0, 9) {
+                0..=4 => {
+                    lookups += 1;
+                    if c.lookup(i as u64, addr, 64, false) == Lookup::Miss
+                        && c.should_admit(addr, i as u64)
+                    {
+                        let (base, span) = c.span(addr, 64);
+                        c.install(base, span, i as u64, false);
+                    }
+                }
+                5..=7 => {
+                    // Store: writeback-on-hit, no-allocate on miss.
+                    lookups += 1;
+                    let _ = c.lookup(i as u64, addr, 64, true);
+                }
+                8 => {
+                    if c.pop_writeback().is_some() {
+                        drained += 1;
+                    }
+                }
+                _ => c.invalidate_span(addr, g.u64(&format!("inv{i}"), 64, 4096)),
+            }
+        }
+        let s = c.stats;
+        if s.hits + s.misses != lookups {
+            return Err(format!(
+                "hits {} + misses {} != lookups {lookups}",
+                s.hits, s.misses
+            ));
+        }
+        if s.writeback_bytes != s.writebacks * c.line_bytes() {
+            return Err(format!(
+                "writeback bytes {} != {} writebacks x {} B lines",
+                s.writeback_bytes,
+                s.writebacks,
+                c.line_bytes()
+            ));
+        }
+        if drained + c.wb_pending() as u64 + s.wb_cancelled != s.writebacks {
+            return Err(format!(
+                "writeback flow broken: drained {drained} + pending {} + cancelled {} != queued {}",
+                c.wb_pending(),
+                s.wb_cancelled,
+                s.writebacks
+            ));
+        }
+        if s.dirtied != s.writebacks + s.dirty_dropped + c.dirty_lines() {
+            return Err(format!(
+                "dirty conservation: dirtied {} != wb {} + dropped {} + resident {}",
+                s.dirtied,
+                s.writebacks,
+                s.dirty_dropped,
+                c.dirty_lines()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Device-cache victim selection must be true LRU: against a per-set
+/// reference list (front = least recent), every eviction must name the
+/// reference's front, refreshes must never evict, and sets only evict
+/// when full.
+#[test]
+fn prop_device_cache_lru_victim_matches_reference() {
+    use cxl_gpu::expander::{CacheSpec, DeviceCache, Lookup};
+    check("device-cache-lru", 0x17CA, 100, |g| {
+        let ways = *g.choose("ways", &[2usize, 4, 8]);
+        // 8 sets of `ways` 256 B lines.
+        let spec = CacheSpec {
+            enabled: true,
+            capacity_bytes: ways as u64 * 8 * 256,
+            ways,
+            ..CacheSpec::default()
+        }
+        .admit_all();
+        let mut c = DeviceCache::new(spec).expect("nonzero capacity");
+        let sets = (c.capacity_lines() as usize) / ways;
+        if sets != 8 {
+            return Err(format!("expected 8 sets, geometry gave {sets}"));
+        }
+        let mut shadow: Vec<Vec<u64>> = vec![Vec::new(); sets]; // front = LRU
+        let ops = g.usize("ops", 1, 300);
+        for i in 0..ops {
+            let line = g.u64(&format!("l{i}"), 0, 64);
+            let addr = line * 256;
+            let set = (line as usize) % sets;
+            if g.bool(&format!("rd{i}"), 0.5) {
+                let hit = matches!(c.lookup(0, addr, 64, false), Lookup::Hit { .. });
+                let sh = &mut shadow[set];
+                let pos = sh.iter().position(|&l| l == line);
+                if hit != pos.is_some() {
+                    return Err(format!("residency diverged for line {line} at op {i}"));
+                }
+                if let Some(p) = pos {
+                    let l = sh.remove(p);
+                    sh.push(l); // hit refreshes recency
+                }
+            } else {
+                let ev = c.install_line(addr, 0, false);
+                let sh = &mut shadow[set];
+                if let Some(p) = sh.iter().position(|&l| l == line) {
+                    if ev.is_some() {
+                        return Err(format!("refresh of line {line} evicted {ev:?}"));
+                    }
+                    let l = sh.remove(p);
+                    sh.push(l);
+                } else {
+                    if sh.len() == ways {
+                        let lru = sh.remove(0);
+                        match ev {
+                            Some(e) if e.addr == lru * 256 => {}
+                            other => {
+                                return Err(format!(
+                                    "victim mismatch in set {set}: want line {lru}, got {other:?}"
+                                ))
+                            }
+                        }
+                    } else if let Some(e) = ev {
+                        return Err(format!("eviction {e:?} from a non-full set"));
+                    }
+                    sh.push(line);
+                }
+            }
+        }
+        Ok(())
+    });
+}
