@@ -1,0 +1,111 @@
+//! §15 — CXL RAS layer: graceful-degradation floors.
+//!
+//! Runs the `ras` experiment (CRC fault-rate × media sweep on `bfs`,
+//! plus the degraded-pooled-endpoint and dirty-rescue scenarios), emits
+//! `BENCH_ras.json` (schema: docs/BENCH_SCHEMA.md), and asserts the
+//! tentpole's win conditions: link retry/replay contains a realistic
+//! 1e-6 per-flit error rate at ≤ 10% execution-time cost; one degraded
+//! pooled endpoint bounds (not destroys) the victim's p99 while the
+//! switch demotes its WRR share; and every dirty device-cache byte is
+//! drained to media before the degradation latch.
+use std::collections::BTreeMap;
+
+use cxl_gpu::coordinator::experiments::{ras, Scale};
+use cxl_gpu::util::json::Json;
+
+/// Exec-time slowdown ceiling at the 1e-6 flit-error rate (x fault-free).
+const FLOOR_SLOWDOWN_1E6: f64 = 1.10;
+/// Victim p99 ceiling with one pooled endpoint degraded (x healthy pool).
+const FLOOR_DEGRADED_P99_X: f64 = 8.0;
+
+fn main() {
+    let res = ras(Scale::default(), true);
+
+    let rows: Vec<Json> = res
+        .rows
+        .iter()
+        .map(|r| {
+            let mut m = BTreeMap::new();
+            m.insert("media".into(), Json::Str(r.media.name().into()));
+            m.insert("crc_rate".into(), Json::Num(r.crc_rate));
+            m.insert("exec_ms".into(), Json::Num(r.exec_ms));
+            m.insert("slowdown".into(), Json::Num(r.slowdown));
+            m.insert("retries".into(), Json::Num(r.retries as f64));
+            m.insert("replays".into(), Json::Num(r.replays as f64));
+            m.insert("poisons".into(), Json::Num(r.poisons as f64));
+            m.insert("timeouts".into(), Json::Num(r.timeouts as f64));
+            Json::Obj(m)
+        })
+        .collect();
+
+    // Report before asserting so regressions still leave data on disk.
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("ras".into()));
+    top.insert("schema".into(), Json::Str("docs/BENCH_SCHEMA.md".into()));
+    top.insert("floor_slowdown_1e6".into(), Json::Num(FLOOR_SLOWDOWN_1E6));
+    top.insert("floor_degraded_p99_x".into(), Json::Num(FLOOR_DEGRADED_P99_X));
+    top.insert("slowdown_at_1e6".into(), Json::Num(res.slowdown_at_1e6));
+    top.insert("degraded_healthy_p99_us".into(), Json::Num(res.degraded.healthy_p99_us));
+    top.insert("degraded_p99_us".into(), Json::Num(res.degraded.degraded_p99_us));
+    top.insert("degraded_victim_p99_x".into(), Json::Num(res.degraded.victim_p99_x));
+    top.insert("degraded_failovers".into(), Json::Num(res.degraded.failovers as f64));
+    top.insert(
+        "rescue_dirty_bytes".into(),
+        Json::Num(res.rescue.dirty_rescued_bytes as f64),
+    );
+    top.insert("rescue_line_bytes".into(), Json::Num(res.rescue.line_bytes as f64));
+    top.insert("rescue_failovers".into(), Json::Num(res.rescue.failovers as f64));
+    top.insert("results".into(), Json::Arr(rows));
+    let path = "BENCH_ras.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+
+    // Zero-rate rows must land exactly on the fault-free baseline (the
+    // structural bit-transparency contract, measured end to end).
+    for r in res.rows.iter().filter(|r| r.crc_rate == 0.0) {
+        assert!(
+            (r.slowdown - 1.0).abs() < 1e-9,
+            "{}: zero-rate cxl-ras must be bit-identical to cxl: {:.6}x",
+            r.media.name(),
+            r.slowdown
+        );
+        assert_eq!(r.retries + r.poisons + r.timeouts, 0);
+    }
+    // Nonzero rates must actually inject (the sweep isn't a no-op) and
+    // the highest rate must draw retries on every media.
+    for r in res.rows.iter().filter(|r| r.crc_rate >= 1e-3) {
+        assert!(r.retries > 0, "{}: 1e-3 flit-error rate drew no retries", r.media.name());
+        assert!(r.replays >= r.retries, "each retry replays at least one flit");
+    }
+    assert!(
+        res.slowdown_at_1e6 <= FLOOR_SLOWDOWN_1E6,
+        "1e-6 flit-error rate must cost ≤ {:.0}%: {:.3}x",
+        (FLOOR_SLOWDOWN_1E6 - 1.0) * 100.0,
+        res.slowdown_at_1e6
+    );
+    assert!(
+        res.degraded.failovers >= 1,
+        "the scheduled endpoint failure must latch and demote"
+    );
+    assert!(
+        res.degraded.victim_p99_x <= FLOOR_DEGRADED_P99_X,
+        "one degraded endpoint must leave the victim's p99 bounded: {:.2}x > {FLOOR_DEGRADED_P99_X}x",
+        res.degraded.victim_p99_x
+    );
+    assert!(
+        res.rescue.dirty_rescued_bytes > 0,
+        "the pre-degradation drain must rescue dirty device-cache lines"
+    );
+    assert_eq!(
+        res.rescue.dirty_rescued_bytes % res.rescue.line_bytes,
+        0,
+        "rescued bytes must be whole cache lines"
+    );
+    assert!(res.rescue.failovers >= 1);
+    println!(
+        "ras bench OK (slowdown at 1e-6: {:.3}x; degraded victim p99 {:.2}x; {} dirty bytes rescued)",
+        res.slowdown_at_1e6, res.degraded.victim_p99_x, res.rescue.dirty_rescued_bytes
+    );
+}

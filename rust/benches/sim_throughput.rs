@@ -34,6 +34,8 @@ fn main() {
         ("cxl-ds", MediaKind::Znand, "bfs"),
         // The device-cache path (§14) must hold the same per-event floor.
         ("cxl-cache", MediaKind::Znand, "hot90"),
+        // The RAS fault-injection path (§15) must hold it too.
+        ("cxl-ras", MediaKind::Znand, "bfs"),
     ] {
         let mut cfg = SystemConfig::named(cfg_name, media);
         // 10x the pre-streaming budget: op streams freed the O(total_ops)

@@ -8,6 +8,7 @@ use crate::expander::CacheSpec;
 use crate::fabric::FabricSpec;
 use crate::gpu::LlcConfig;
 use crate::media::{DramModel, DramTimings, MediaKind, SsdModel, SsdParams};
+use crate::ras::FaultSpec;
 use crate::rootcomplex::{EpBackend, RootPort, SrPolicy, TierConfig};
 use crate::util::toml::Document;
 
@@ -69,6 +70,13 @@ pub struct SystemConfig {
     /// per-endpoint; a disabled or zero-capacity spec attaches nothing
     /// (the `cxl`-bit-identity guarantee).
     pub cache: CacheSpec,
+    /// Deterministic fault schedule (DESIGN.md §15): link CRC errors
+    /// with burst windows, media latency spikes, controller timeouts,
+    /// and an optional scheduled hard degradation of one endpoint.
+    /// Composes with every topology because [`SystemConfig::build_ports`]
+    /// arms it per-endpoint; an inert spec (all rates zero) attaches
+    /// nothing — `cxl-ras` at zero rates is bit-identical to `cxl`.
+    pub ras: FaultSpec,
 }
 
 impl SystemConfig {
@@ -99,6 +107,7 @@ impl SystemConfig {
             tier: TierConfig::default(),
             fabric: FabricSpec::default(),
             cache: CacheSpec::default(),
+            ras: FaultSpec::default(),
         }
     }
 
@@ -129,6 +138,7 @@ impl SystemConfig {
                     self.ds_capacity,
                 )
                 .with_cache(self.cache)
+                .with_ras(self.ras, self.seed)
             })
             .collect()
     }
@@ -166,6 +176,13 @@ impl SystemConfig {
     /// * `cxl-cache-bypass` — `cxl-cache` with the admission predictor
     ///   disabled (every miss installs): the ablation that prices the
     ///   streaming-bypass capability.
+    /// * `cxl-ras` — `cxl` plus the representative RAS fault schedule
+    ///   (DESIGN.md §15, `ras` experiment): link CRC retries with burst
+    ///   windows, media latency spikes, controller timeouts. With every
+    ///   rate zeroed it is bit-identical to `cxl`.
+    /// * `cxl-pool-ras` — `cxl-pool` plus the same fault schedule: the
+    ///   degraded-endpoint failover scenario on the shared switch (WRR
+    ///   demotion, dirty-line rescue, victim-tail bound in `BENCH_ras`).
     ///
     /// Panics on an unknown name; [`SystemConfig::try_named`] is the
     /// message-not-panic variant for CLI/config paths.
@@ -254,6 +271,23 @@ impl SystemConfig {
                     c.cache = c.cache.admit_all();
                 }
             }
+            "cxl-ras" => {
+                // RAS fault injection on the plain expander (DESIGN.md
+                // §15): engines mirror `cxl` exactly; only the fault
+                // schedule is armed, so every delta against `cxl` is
+                // attributable to injected faults and their recovery.
+                c.strategy = MemStrategy::Cxl;
+                c.ras = FaultSpec::representative();
+            }
+            "cxl-pool-ras" => {
+                // The pooled fabric under the same fault schedule:
+                // pooled endpoints retry and degrade exactly as direct
+                // ones, plus the switch-side failover machinery (WRR
+                // share demotion) for degraded-endpoint scenarios.
+                c.strategy = MemStrategy::Cxl;
+                c.fabric.enabled = true;
+                c.ras = FaultSpec::representative();
+            }
             "cxl-pool" | "cxl-pool-qos" => {
                 // Pooled fabric (DESIGN.md §13): the expander endpoints
                 // sit behind a shared virtual CXL switch. Engines stay
@@ -279,7 +313,7 @@ impl SystemConfig {
         &[
             "gpu-dram", "uvm", "gds", "cxl", "cxl-naive", "cxl-dyn", "cxl-sr", "cxl-ds",
             "cxl-smt", "cxl-hybrid", "cxl-tier", "cxl-tier-static", "cxl-pool",
-            "cxl-pool-qos", "cxl-cache", "cxl-cache-bypass",
+            "cxl-pool-qos", "cxl-cache", "cxl-cache-bypass", "cxl-ras", "cxl-pool-ras",
         ]
     }
 
@@ -410,6 +444,24 @@ mod tests {
         // Zero capacity attaches nothing anywhere.
         c.cache.capacity_bytes = 0;
         assert!(c.build_ports().iter().all(|p| p.cache.is_none()));
+    }
+
+    #[test]
+    fn ras_configs_arm_the_fault_schedule() {
+        let ras = SystemConfig::named("cxl-ras", MediaKind::Znand);
+        assert!(ras.ras.enabled && !ras.ras.is_inert());
+        assert_eq!(ras.sr_policy, SrPolicy::Off, "engines mirror plain cxl");
+        assert!(!ras.fabric.enabled && !ras.cache.enabled);
+        let pool = SystemConfig::named("cxl-pool-ras", MediaKind::Znand);
+        assert!(pool.fabric.enabled && !pool.fabric.qos && !pool.ras.is_inert());
+        // Every built port carries the fault state...
+        assert!(ras.build_ports().iter().all(|p| p.ras.is_some()));
+        // ...and zeroing the rates attaches nothing (bit-transparency).
+        let mut zeroed = ras.clone();
+        zeroed.ras = FaultSpec { enabled: true, ..FaultSpec::default() };
+        assert!(zeroed.build_ports().iter().all(|p| p.ras.is_none()));
+        assert!(!SystemConfig::named("cxl", MediaKind::Znand).ras.enabled);
+        assert!(!SystemConfig::named("cxl-pool", MediaKind::Znand).ras.enabled);
     }
 
     #[test]

@@ -979,6 +979,230 @@ pub fn multi_tenant(scale: Scale, print: bool) -> MtSweep {
 }
 
 // ---------------------------------------------------------------------------
+// RAS — fault-rate × media sweep + graceful-degradation scenarios (§15)
+// ---------------------------------------------------------------------------
+
+/// One (media, CRC-rate) cell of the RAS sweep: `cxl-ras` with only the
+/// link-error knob armed, against the fault-free `cxl` baseline on the
+/// same media (rate 0 must land exactly on the baseline — the zero-rate
+/// bit-transparency contract).
+#[derive(Debug, Clone)]
+pub struct RasRow {
+    pub media: MediaKind,
+    /// Per-flit CRC-error probability.
+    pub crc_rate: f64,
+    pub exec_ms: f64,
+    /// Exec time over the fault-free baseline (1.0 = no loss).
+    pub slowdown: f64,
+    pub retries: u64,
+    pub replays: u64,
+    pub poisons: u64,
+    pub timeouts: u64,
+}
+
+/// The degraded-endpoint pool scenario: one pooled Z-NAND endpoint
+/// hard-degrades mid-run; the switch demotes its WRR share and the
+/// victim keeps running.
+#[derive(Debug, Clone)]
+pub struct RasDegraded {
+    /// Victim p99 expander-load latency on the healthy pool (µs).
+    pub healthy_p99_us: f64,
+    /// Victim p99 with one endpoint degraded (µs).
+    pub degraded_p99_us: f64,
+    /// `degraded / healthy` — the graceful-degradation bound.
+    pub victim_p99_x: f64,
+    /// Pool-level failover actions (latch + WRR demotions).
+    pub failovers: u64,
+}
+
+/// The dirty-rescue scenario: a cached endpoint degrades mid-run; every
+/// dirty device-cache line must be drained to media first.
+#[derive(Debug, Clone)]
+pub struct RasRescue {
+    /// Dirty bytes flushed ahead of the degradation latch.
+    pub dirty_rescued_bytes: u64,
+    /// Device-cache line size (rescued bytes must be a multiple).
+    pub line_bytes: u64,
+    pub failovers: u64,
+}
+
+/// Aggregate result of [`ras`].
+#[derive(Debug, Clone)]
+pub struct RasSweep {
+    pub rows: Vec<RasRow>,
+    /// Geomean slowdown at the representative 1e-6 flit-error rate
+    /// across media — the `benches/ras.rs` throughput floor (≤ 1.10).
+    pub slowdown_at_1e6: f64,
+    pub degraded: RasDegraded,
+    pub rescue: RasRescue,
+}
+
+/// A `FaultSpec` with only the CRC knob armed (5 µs poison-containment
+/// timeout, everything else quiet) — the sweep's isolated fault axis.
+fn crc_only(rate: f64) -> crate::ras::FaultSpec {
+    crate::ras::FaultSpec {
+        enabled: true,
+        crc_error_rate: rate,
+        timeout: 5 * crate::sim::US,
+        ..Default::default()
+    }
+}
+
+/// The RAS experiment (`--fig ras`): CRC fault-rate × media sweep on
+/// `bfs`, plus the two graceful-degradation scenarios (pooled WRR
+/// demotion; dirty-line rescue on a cached endpoint). Backs
+/// `benches/ras.rs` → `BENCH_ras.json`.
+pub fn ras(scale: Scale, print: bool) -> RasSweep {
+    use crate::sim::US;
+    const RATES: [f64; 4] = [0.0, 1e-6, 1e-4, 1e-3];
+    const MEDIAS: [MediaKind; 2] = [MediaKind::Ddr5, MediaKind::Znand];
+
+    // Per media: one fault-free `cxl` baseline + one `cxl-ras` per rate,
+    // as one flat parallel batch.
+    let per_media = 1 + RATES.len();
+    let mut jobs: Vec<SweepJob> = Vec::new();
+    for &media in &MEDIAS {
+        let mut base = SystemConfig::named("cxl", media);
+        base.total_ops = scale.ssd_ops;
+        base.ssd_scale();
+        jobs.push((spec("bfs"), base));
+        for &rate in &RATES {
+            let mut cfg = SystemConfig::named("cxl-ras", media);
+            cfg.total_ops = scale.ssd_ops;
+            cfg.ssd_scale();
+            cfg.ras = crc_only(rate);
+            jobs.push((spec("bfs"), cfg));
+        }
+    }
+    let results = run_jobs(&jobs);
+
+    let mut rows = Vec::new();
+    for (mi, &media) in MEDIAS.iter().enumerate() {
+        let base = &results[mi * per_media];
+        for (ri, &rate) in RATES.iter().enumerate() {
+            let r = &results[mi * per_media + 1 + ri];
+            rows.push(RasRow {
+                media,
+                crc_rate: rate,
+                exec_ms: r.metrics.exec_ms(),
+                slowdown: r.normalized_to(base),
+                retries: r.metrics.ras_retries,
+                replays: r.metrics.ras_replays,
+                poisons: r.metrics.ras_poisons,
+                timeouts: r.metrics.ras_timeouts,
+            });
+        }
+    }
+    let slowdown_at_1e6 = {
+        let logs: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.crc_rate == 1e-6)
+            .map(|r| r.slowdown.ln())
+            .collect();
+        (logs.iter().sum::<f64>() / logs.len().max(1) as f64).exp()
+    };
+
+    // Scenario 1: a shared pooled endpoint hard-degrades mid-run. The
+    // healthy and degraded pools run the same two tenants; only tenant
+    // 0's fault schedule (which builds the shared endpoints) differs.
+    let degrade_at = if scale.ssd_ops >= 100_000 { crate::sim::MS } else { 100 * US };
+    let pool_tenants = |degrade: bool| -> Vec<Tenant> {
+        ["bfs", "vadd"]
+            .iter()
+            .enumerate()
+            .map(|(i, wl)| {
+                let mut cfg = SystemConfig::named("cxl-pool-ras", MediaKind::Znand);
+                cfg.total_ops = scale.ssd_ops / 2;
+                cfg.ssd_scale();
+                // Isolate the degradation story: quiet fault rates, one
+                // scheduled endpoint failure (tenant 0's spec arms the
+                // shared ports).
+                cfg.ras = crate::ras::FaultSpec {
+                    enabled: true,
+                    degrade_at: if degrade && i == 0 { degrade_at } else { crate::sim::Time::MAX },
+                    degrade_port: 0,
+                    degrade_penalty: 10 * US,
+                    ..Default::default()
+                };
+                Tenant { workload: spec(wl), cfg }
+            })
+            .collect()
+    };
+    let scen: [bool; 2] = [false, true];
+    let pools: Vec<PoolResult> = par_map(&scen, |_, &degrade| {
+        run_pool(&pool_tenants(degrade)).unwrap_or_else(|e| panic!("ras pool: {e}"))
+    });
+    let [healthy, degraded_run] = take_exact(pools, "ras degraded pools");
+    let healthy_p99 = healthy.tenants[0].metrics.load_p99_us().max(1e-9);
+    let degraded = RasDegraded {
+        healthy_p99_us: healthy_p99,
+        degraded_p99_us: degraded_run.tenants[0].metrics.load_p99_us(),
+        victim_p99_x: degraded_run.tenants[0].metrics.load_p99_us() / healthy_p99,
+        failovers: degraded_run.pool.ras_failovers,
+    };
+
+    // Scenario 2: dirty-line rescue — a cached Z-NAND endpoint degrades
+    // mid-run with dirty lines resident; every one must drain to media
+    // before the latch (hot90's store-heavy reuse dirties the cache).
+    let rescue = {
+        let mut cfg = SystemConfig::named("cxl-cache", MediaKind::Znand);
+        cfg.total_ops = scale.ssd_ops;
+        cfg.ssd_scale();
+        cfg.llc.capacity = 64 << 10; // keep the hot set out of the LLC
+        cfg.ras = crate::ras::FaultSpec {
+            enabled: true,
+            degrade_at,
+            degrade_port: 0,
+            degrade_penalty: 10 * US,
+            ..Default::default()
+        };
+        let line_bytes = cfg.cache.line_bytes;
+        let m = crate::coordinator::system::System::new(spec("hot90"), &cfg).run();
+        RasRescue {
+            dirty_rescued_bytes: m.ras_dirty_rescued_bytes,
+            line_bytes,
+            failovers: m.ras_failovers,
+        }
+    };
+
+    let res = RasSweep { rows, slowdown_at_1e6, degraded, rescue };
+    if print {
+        let mut t = Table::new(
+            "RAS — CRC fault-rate × media sweep (bfs; exec vs fault-free cxl)",
+            &["media", "CRC rate", "exec", "slowdown", "retries", "replays", "poisons"],
+        );
+        for r in &res.rows {
+            t.rowv(vec![
+                r.media.letter().into(),
+                format!("{:.0e}", r.crc_rate),
+                format!("{:.2} ms", r.exec_ms),
+                format!("{:.3}x", r.slowdown),
+                r.retries.to_string(),
+                r.replays.to_string(),
+                r.poisons.to_string(),
+            ]);
+        }
+        t.print();
+        println!(
+            "slowdown at 1e-6 flit-error rate: {:.3}x geomean (bench floor ≤ 1.10x)",
+            res.slowdown_at_1e6
+        );
+        println!(
+            "degraded pooled endpoint: victim p99 {:.1} µs → {:.1} µs ({:.2}x healthy); {} failover actions",
+            res.degraded.healthy_p99_us,
+            res.degraded.degraded_p99_us,
+            res.degraded.victim_p99_x,
+            res.degraded.failovers
+        );
+        println!(
+            "dirty rescue: {} bytes drained ahead of degradation ({} per line, {} failovers)",
+            res.rescue.dirty_rescued_bytes, res.rescue.line_bytes, res.rescue.failovers
+        );
+    }
+    res
+}
+
+// ---------------------------------------------------------------------------
 // Headline — 2.36x over UVM, 1.36x over the commercial EP controller
 // ---------------------------------------------------------------------------
 

@@ -99,6 +99,22 @@ pub struct RunMetrics {
     /// Fabric: endpoint DevLoad observations of Moderate or worse
     /// returned to this tenant (originating-tenant-only backpressure).
     pub fabric_backpressure: u64,
+    /// RAS (DESIGN.md §15): link-layer retransmissions triggered by
+    /// injected CRC errors, summed across this system's ports (pooled
+    /// endpoints when this tenant is a pool's sole upstream).
+    pub ras_retries: u64,
+    /// RAS: flits re-sent by the go-back replay buffer.
+    pub ras_replays: u64,
+    /// RAS: transfers poisoned after exhausting the retry budget.
+    pub ras_poisons: u64,
+    /// RAS: controller timeout expiries (backoff waits charged).
+    pub ras_timeouts: u64,
+    /// RAS: failover actions — endpoint degradation latches, switch
+    /// WRR demotions, and tier-swap vetoes onto a degraded port.
+    pub ras_failovers: u64,
+    /// RAS: dirty device-cache bytes flushed to media ahead of a
+    /// scheduled endpoint degradation (zero lost bytes).
+    pub ras_dirty_rescued_bytes: u64,
     /// Simulation events processed (perf metric).
     pub events: u64,
     /// Host wall-clock for the run, nanoseconds (perf metric).

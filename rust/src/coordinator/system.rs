@@ -361,6 +361,14 @@ impl System {
                         self.metrics.cache_wb_hwm =
                             self.metrics.cache_wb_hwm.max(c.stats.wb_hwm);
                     }
+                    if let Some(r) = &p.ras {
+                        self.metrics.ras_retries += r.stats.retries;
+                        self.metrics.ras_replays += r.stats.replays;
+                        self.metrics.ras_poisons += r.stats.poisons;
+                        self.metrics.ras_timeouts += r.stats.timeouts;
+                        self.metrics.ras_failovers += r.stats.failovers;
+                        self.metrics.ras_dirty_rescued_bytes += r.stats.dirty_rescued_bytes;
+                    }
                 }
                 if let Some(fh) = rc.fabric_harvest() {
                     self.metrics.ingress_hwm = fh.upstream.ingress_hwm;
@@ -384,6 +392,12 @@ impl System {
                         self.metrics.cache_bypasses += pool.cache_bypasses;
                         self.metrics.cache_wb_hwm =
                             self.metrics.cache_wb_hwm.max(pool.cache_wb_hwm);
+                        self.metrics.ras_retries += pool.ras_retries;
+                        self.metrics.ras_replays += pool.ras_replays;
+                        self.metrics.ras_poisons += pool.ras_poisons;
+                        self.metrics.ras_timeouts += pool.ras_timeouts;
+                        self.metrics.ras_failovers += pool.ras_failovers;
+                        self.metrics.ras_dirty_rescued_bytes += pool.ras_dirty_rescued;
                     }
                 }
                 if let Some(t) = &rc.tier {
@@ -840,6 +854,23 @@ mod tests {
         assert_eq!(a.exec_time, b.exec_time, "tier+cache must stay deterministic");
         assert_eq!(a.cache_hits, b.cache_hits);
         assert_eq!(a.cache_writebacks, b.cache_writebacks);
+    }
+
+    #[test]
+    fn ras_counters_flow_into_metrics() {
+        let mut c = tiny("cxl-ras", MediaKind::Znand);
+        // Crank the CRC rate so a tiny run is guaranteed to draw faults.
+        c.ras.crc_error_rate = 1e-2;
+        let m = System::new(spec("vadd"), &c).run();
+        assert!(m.ras_retries > 0, "injected CRC errors must surface as retries");
+        assert!(m.ras_replays >= m.ras_retries, "each retry replays >= 1 flit");
+        let a = System::new(spec("vadd"), &c).run();
+        assert_eq!(m.exec_time, a.exec_time, "fault runs must stay deterministic");
+        assert_eq!(m.ras_retries, a.ras_retries);
+        assert_eq!(m.ras_poisons, a.ras_poisons);
+        // The plain config reports zeros.
+        let plain = System::new(spec("vadd"), &tiny("cxl", MediaKind::Znand)).run();
+        assert_eq!(plain.ras_retries + plain.ras_poisons + plain.ras_failovers, 0);
     }
 
     #[test]

@@ -82,6 +82,14 @@ impl Flit {
             MemOpcode::MemSpecRd | MemOpcode::Config => 1,
         }
     }
+
+    /// Total link-layer flits one transfer of this request occupies: the
+    /// header/command flit plus the data phase. This is what the RAS
+    /// layer's per-transfer CRC model scales with — a longer payload
+    /// exposes more flits to corruption (`ras::RasState::link_transfer`).
+    pub fn link_flits(&self) -> u64 {
+        1 + self.data_flits()
+    }
 }
 
 #[cfg(test)]
@@ -126,5 +134,13 @@ mod tests {
         assert_eq!(wr.data_flits(), 4);
         let sr = Flit::spec_rd(0, 1024, 0, 0);
         assert_eq!(sr.data_flits(), 1, "SpecRd is a hint, no data phase");
+    }
+
+    #[test]
+    fn link_flits_add_the_header() {
+        let rd = Flit { op: MemOpcode::MemRd, addr: 0, len: 64, issued_at: 0, req_id: 0 };
+        assert_eq!(rd.link_flits(), 2, "header + one data flit");
+        let wr = Flit { op: MemOpcode::MemWr, addr: 0, len: 256, issued_at: 0, req_id: 0 };
+        assert_eq!(wr.link_flits(), 5);
     }
 }

@@ -12,8 +12,10 @@ pub mod config_space;
 pub mod controller;
 pub mod devload;
 pub mod flit;
+pub mod replay;
 
 pub use config_space::ConfigSpace;
 pub use controller::{ControllerKind, CxlController, LayerCosts};
 pub use devload::DevLoad;
 pub use flit::{Flit, MemOpcode, FLIT_DATA_BYTES, SPECRD_OFFSET_UNIT};
+pub use replay::{Attempt, ReplayBuffer, ReplayStats};

@@ -432,6 +432,34 @@ impl DeviceCache {
         }
     }
 
+    /// Pre-degradation rescue drain (DESIGN.md §15): flush *every* dirty
+    /// byte out of the cache before its endpoint is marked degraded —
+    /// both the already-queued writebacks and the still-resident dirty
+    /// lines — so no dirty byte is lost when the device stops being
+    /// trustworthy. Returns the line base addresses to retire against
+    /// the media, oldest-queued first, then residents in address order
+    /// (deterministic). Resident flushes count as writebacks (they are
+    /// exactly that, just drained eagerly), which keeps both
+    /// conservation invariants intact:
+    /// `dirtied == writebacks + dirty_dropped + dirty_lines()` and
+    /// `writebacks == drained + pending + wb_cancelled`. Post-state:
+    /// `dirty_lines() == 0`, `wb_pending() == 0`; clean residents stay
+    /// (reads may still be served from device DRAM).
+    pub fn drain_all_dirty(&mut self) -> Vec<u64> {
+        let mut out: Vec<u64> = self.wb.drain(..).collect();
+        let flush_from = out.len();
+        for s in &mut self.slots {
+            if s.valid && s.dirty {
+                s.dirty = false;
+                out.push(s.tag * self.spec.line_bytes);
+                self.stats.writebacks += 1;
+                self.stats.writeback_bytes += self.spec.line_bytes;
+            }
+        }
+        out[flush_from..].sort_unstable();
+        out
+    }
+
     /// Resident line count.
     pub fn lines(&self) -> u64 {
         self.slots.iter().filter(|s| s.valid).count() as u64

@@ -169,6 +169,14 @@ pub struct PoolSums {
     pub cache_bypasses: u64,
     /// Max writeback-drain-queue high-water mark across the endpoints.
     pub cache_wb_hwm: u64,
+    /// RAS sums across the pooled endpoints (DESIGN.md §15; zero when
+    /// no endpoint carries a fault schedule).
+    pub ras_retries: u64,
+    pub ras_replays: u64,
+    pub ras_poisons: u64,
+    pub ras_timeouts: u64,
+    pub ras_failovers: u64,
+    pub ras_dirty_rescued: u64,
 }
 
 /// One tenant's side of the switch.
@@ -202,6 +210,9 @@ pub struct CxlSwitch {
     /// Last pooled DS flush sweep (cadence dedup across tenants' ticks;
     /// 0 = never flushed).
     last_flush: Time,
+    /// Per-downstream latch: WRR shares already demoted after the
+    /// endpoint degraded (DESIGN.md §15).
+    demoted: Vec<bool>,
 }
 
 /// Minimum spacing between pooled DS flush sweeps — the same 10 µs
@@ -265,6 +276,7 @@ impl CxlSwitch {
                 }
             })
             .collect();
+        let demoted = vec![false; downstream.len()];
         CxlSwitch {
             passthrough: weights.len() == 1 && !spec.qos,
             spec,
@@ -272,6 +284,27 @@ impl CxlSwitch {
             up,
             unloaded,
             last_flush: 0,
+            demoted,
+        }
+    }
+
+    /// Graceful degradation (DESIGN.md §15): the first time a pooled
+    /// endpoint is observed degraded, demote every tenant's WRR share
+    /// on it to a single slot — in-flight depth to the failing device
+    /// is capped so pooled traffic keeps draining through the healthy
+    /// endpoints instead of stacking up behind the degraded one.
+    /// Latched once per endpoint; runs *before* admission so no
+    /// already-acquired share slot index is invalidated mid-request.
+    fn demote_if_degraded(&mut self, down: usize) {
+        if self.demoted[down] || !self.downstream[down].is_degraded() {
+            return;
+        }
+        self.demoted[down] = true;
+        for u in &mut self.up {
+            u.share[down].truncate(1);
+        }
+        if let Some(r) = &mut self.downstream[down].ras {
+            r.stats.failovers += 1;
         }
     }
 
@@ -309,6 +342,14 @@ impl CxlSwitch {
                 s.cache_writebacks += c.stats.writebacks;
                 s.cache_bypasses += c.stats.bypasses;
                 s.cache_wb_hwm = s.cache_wb_hwm.max(c.stats.wb_hwm);
+            }
+            if let Some(r) = &p.ras {
+                s.ras_retries += r.stats.retries;
+                s.ras_replays += r.stats.replays;
+                s.ras_poisons += r.stats.poisons;
+                s.ras_timeouts += r.stats.timeouts;
+                s.ras_failovers += r.stats.failovers;
+                s.ras_dirty_rescued += r.stats.dirty_rescued_bytes;
             }
         }
         s
@@ -386,6 +427,7 @@ impl CxlSwitch {
         if self.passthrough {
             return self.downstream[down].load(now, addr, len);
         }
+        self.demote_if_degraded(down);
         let CxlSwitch { spec, downstream, up: ups, unloaded, .. } = self;
         let u = &mut ups[up];
         u.stats.loads += 1;
@@ -439,6 +481,7 @@ impl CxlSwitch {
         if self.passthrough {
             return self.downstream[down].store(now, addr, len, rng);
         }
+        self.demote_if_degraded(down);
         let CxlSwitch { spec, downstream, up: ups, .. } = self;
         let u = &mut ups[up];
         u.stats.stores += 1;
@@ -614,6 +657,40 @@ mod tests {
         // ...and the next tick at the cadence runs, whoever sends it.
         sw.flush_tick(20 * US, &mut rng);
         assert_eq!(sw.last_flush, 20 * US);
+    }
+
+    #[test]
+    fn degraded_endpoint_gets_its_wrr_share_demoted() {
+        use crate::ras::FaultSpec;
+        let ras = FaultSpec {
+            enabled: true,
+            degrade_at: 1,
+            degrade_port: 0,
+            degrade_penalty: 5 * US,
+            ..FaultSpec::default()
+        };
+        let ports = vec![ssd_port(0).with_ras(ras, 42), ssd_port(1).with_ras(ras, 42)];
+        let mut sw = CxlSwitch::new(ports, spec(false), &[1, 1]);
+        let full = sw.up[0].share[0].len();
+        assert!(full > 1, "premise: shares start multi-slot");
+        // The first access past the deadline latches the degradation
+        // inside the port; the switch observes it on the next admission.
+        sw.load(0, 0, 10, 0x1000, 64);
+        assert!(sw.downstream[0].is_degraded());
+        assert_eq!(sw.up[0].share[0].len(), full, "demotion waits for the next admission");
+        sw.load(0, 0, 20 * US, 0x2000, 64);
+        assert_eq!(sw.up[0].share[0].len(), 1, "tenant 0 share demoted");
+        assert_eq!(sw.up[1].share[0].len(), 1, "tenant 1 share demoted");
+        assert_eq!(sw.up[0].share[1].len(), full, "healthy endpoint untouched");
+        let sums = sw.pool_sums();
+        assert!(
+            sums.ras_failovers >= 2,
+            "degrade latch + switch demotion both count: {}",
+            sums.ras_failovers
+        );
+        // Latched: further traffic doesn't re-demote or re-count.
+        sw.load(0, 0, 40 * US, 0x3000, 64);
+        assert_eq!(sw.pool_sums().ras_failovers, sums.ras_failovers);
     }
 
     #[test]

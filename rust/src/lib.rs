@@ -27,6 +27,7 @@ pub mod expander;
 pub mod fabric;
 pub mod gpu;
 pub mod media;
+pub mod ras;
 pub mod rootcomplex;
 /// PJRT artifact execution. Needs the vendored `xla` closure (plus
 /// `anyhow`), which offline builds don't ship — hence feature-gated; the

@@ -268,7 +268,9 @@ impl SsdModel {
             cache: LruSet::new(frames),
             inflight: FxHashMap::default(),
             inflight_by_time: std::collections::BinaryHeap::new(),
-            chan_free: vec![0; params.channels],
+            // Guard against a zero-channel param: `next_channel` indexes
+            // `rr % chan_free.len()`, which would divide by zero.
+            chan_free: vec![0; params.channels.max(1)],
             rr: 0,
             buf_bytes: 0,
             buf_last_drain: 0,
@@ -321,7 +323,10 @@ impl SsdModel {
     }
 
     fn next_channel(&mut self, at: Time) -> (usize, Time) {
-        // Round-robin with earliest-available preference.
+        // Round-robin with earliest-available preference. `chan_free` is
+        // built non-empty (`new` clamps channels to >= 1) and never
+        // shrinks, so the modulus below cannot divide by zero.
+        debug_assert!(!self.chan_free.is_empty());
         let mut best = self.rr % self.chan_free.len();
         for i in 0..self.chan_free.len() {
             let c = (self.rr + i) % self.chan_free.len();

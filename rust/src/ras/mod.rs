@@ -1,0 +1,427 @@
+//! RAS (reliability / availability / serviceability) layer: deterministic
+//! fault injection and recovery for the CXL stack (DESIGN.md §15).
+//!
+//! Every layer built so far — controller legs, pooled switch, tiered HDM,
+//! expander cache — assumes a perfect fabric. This module injects the
+//! three fault classes that dominate real deployments and wires the
+//! recovery machinery that contains them:
+//!
+//! * **Link CRC errors** — per-flit Bernoulli draws (optionally
+//!   multiplied inside periodic burst windows) corrupt a transfer leg;
+//!   the port's link-layer [`crate::cxl::ReplayBuffer`] retries it with
+//!   charged retry legs until it delivers or exhausts `max_retries` and
+//!   escalates to a *poison*.
+//! * **Media misbehaviour** — per-access latency spikes (exponential
+//!   tail) and controller timeouts with exponential backoff model a
+//!   flaky endpoint device.
+//! * **Hard degradation** — at a configured sim time one endpoint is
+//!   marked degraded: its dirty device-cache lines are drained first (no
+//!   dirty byte is lost), every subsequent access pays a penalty, the
+//!   pooled switch demotes its WRR share, and the tiering engine stops
+//!   migrating pages onto it.
+//!
+//! Determinism contract: all draws come from a *forked* PRNG sub-stream
+//! ([`crate::util::prng::Pcg32::fork`], label = port id, parent stream
+//! `0xFA17`), so RAS never consumes from the workload/SR/tiering
+//! sequences — and an **inert** [`FaultSpec`] (all rates zero, no
+//! scheduled degradation) builds no [`RasState`] at all, which is what
+//! makes `cxl-ras` at zero fault rates *bit-identical* to `cxl`
+//! (`tests/determinism.rs`), mirroring the zero-capacity device-cache
+//! identity of §14.
+
+use crate::cxl::ReplayBuffer;
+use crate::sim::{Time, MS, US};
+use crate::util::prng::Pcg32;
+
+/// Seeded fault schedule, carried by `SystemConfig` (`ras` field). All
+/// fields inert by default; the `cxl-ras` config family arms them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Master switch: build the RAS layer (an enabled spec whose every
+    /// rate is zero still builds *nothing* — see [`FaultSpec::is_inert`]).
+    pub enabled: bool,
+    /// Per-flit CRC-error probability on a link transfer leg.
+    pub crc_error_rate: f64,
+    /// Burst-window period (0 = no bursts): within the first
+    /// `burst_len` of every `burst_every` of sim time the CRC rate is
+    /// multiplied by `burst_mult` (correlated error bursts, the pattern
+    /// link-retry buffers are sized for).
+    pub burst_every: Time,
+    /// Burst-window width.
+    pub burst_len: Time,
+    /// CRC-rate multiplier inside a burst window.
+    pub burst_mult: f64,
+    /// Per-access probability of a media latency spike.
+    pub media_spike_rate: f64,
+    /// Mean of the exponential extra latency added by a spike.
+    pub media_spike_mean: Time,
+    /// Per-access probability of a controller timeout.
+    pub timeout_rate: f64,
+    /// Base controller timeout; consecutive timeouts back off
+    /// exponentially (`timeout << attempt`).
+    pub timeout: Time,
+    /// Link retries before a transfer escalates to poison, and the cap
+    /// on consecutive timeout backoffs.
+    pub max_retries: u32,
+    /// Sim time at which `degrade_port` hard-degrades (`Time::MAX` =
+    /// never).
+    pub degrade_at: Time,
+    /// Which port index degrades at `degrade_at`.
+    pub degrade_port: usize,
+    /// Extra latency every access to a degraded endpoint pays.
+    pub degrade_penalty: Time,
+}
+
+impl Default for FaultSpec {
+    fn default() -> FaultSpec {
+        FaultSpec {
+            enabled: false,
+            crc_error_rate: 0.0,
+            burst_every: 0,
+            burst_len: 0,
+            burst_mult: 1.0,
+            media_spike_rate: 0.0,
+            media_spike_mean: 0,
+            timeout_rate: 0.0,
+            timeout: 0,
+            max_retries: 3,
+            degrade_at: Time::MAX,
+            degrade_port: 0,
+            degrade_penalty: 0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// The `cxl-ras` config family's representative fault schedule: a
+    /// 1e-6 per-flit CRC rate with 100x bursts every 2 ms, rare media
+    /// latency spikes and controller timeouts. Hard degradation stays
+    /// unscheduled — benches and experiments arm `degrade_at` per
+    /// scenario.
+    pub fn representative() -> FaultSpec {
+        FaultSpec {
+            enabled: true,
+            crc_error_rate: 1e-6,
+            burst_every: 2 * MS,
+            burst_len: 50 * US,
+            burst_mult: 100.0,
+            media_spike_rate: 1e-4,
+            media_spike_mean: 20 * US,
+            timeout_rate: 1e-5,
+            timeout: 5 * US,
+            ..FaultSpec::default()
+        }
+    }
+
+    /// An inert schedule can never fire: no CRC errors, no spikes, no
+    /// timeouts, no scheduled degradation. Inert specs build no
+    /// [`RasState`] — the structural guarantee behind the zero-rate
+    /// bit-transparency test.
+    pub fn is_inert(&self) -> bool {
+        !self.enabled
+            || (self.crc_error_rate <= 0.0
+                && self.media_spike_rate <= 0.0
+                && self.timeout_rate <= 0.0
+                && self.degrade_at == Time::MAX)
+    }
+}
+
+/// RAS counters a port exports into `RunMetrics` (all fingerprinted in
+/// `tests/determinism.rs`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RasStats {
+    /// Link retry attempts (each charged one extra transfer leg).
+    pub retries: u64,
+    /// Flits re-transmitted from the replay buffer across all retries.
+    pub replays: u64,
+    /// Transfers that exhausted `max_retries` and escalated to poison.
+    pub poisons: u64,
+    /// Controller timeouts (each charged an exponential-backoff wait).
+    pub timeouts: u64,
+    /// Degradation events observed (port marked degraded, switch share
+    /// demoted, tier swap vetoed).
+    pub failovers: u64,
+    /// Dirty device-cache bytes flushed to media by the pre-degradation
+    /// drain — the "no dirty byte lost" guarantee, made countable.
+    pub dirty_rescued_bytes: u64,
+}
+
+/// Outcome of pushing one transfer through the faulty link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkResult {
+    /// Extra latency charged by retry legs (0 on a clean pass).
+    pub extra: Time,
+    /// The transfer exhausted its retries: the payload is poisoned and
+    /// the caller must contain it (re-fetch / recovery path).
+    pub poisoned: bool,
+}
+
+/// Per-port fault-injection + recovery state. Built only for non-inert
+/// schedules ([`RasState::new`] returns `None` otherwise), so fault-free
+/// configurations stay structurally identical to the pre-RAS stack.
+#[derive(Debug)]
+pub struct RasState {
+    spec: FaultSpec,
+    /// Forked sub-stream: draws here never advance the system RNG.
+    rng: Pcg32,
+    /// Link-layer ack/replay buffer (exactly-once, in-order).
+    pub replay: ReplayBuffer,
+    /// Hard-degraded flag, latched by [`RasState::mark_degraded`].
+    pub degraded: bool,
+    pub stats: RasStats,
+}
+
+impl RasState {
+    /// Build the RAS layer for port `port` under `spec`, or `None` when
+    /// the schedule is inert. The RNG is a fork of a dedicated parent
+    /// stream (`0xFA17`) labelled by the port id, so every port draws an
+    /// independent, reproducible fault sequence.
+    pub fn new(spec: FaultSpec, seed: u64, port: usize) -> Option<RasState> {
+        if spec.is_inert() {
+            return None;
+        }
+        let parent = Pcg32::new(seed, 0xFA17);
+        Some(RasState {
+            rng: parent.fork(port as u64),
+            replay: ReplayBuffer::new(spec.max_retries),
+            degraded: false,
+            stats: RasStats::default(),
+            spec,
+        })
+    }
+
+    /// The effective per-flit CRC rate at `now` (burst windows fold in).
+    pub fn crc_rate(&self, now: Time) -> f64 {
+        let mut r = self.spec.crc_error_rate;
+        if self.spec.burst_every > 0 && now % self.spec.burst_every < self.spec.burst_len {
+            r *= self.spec.burst_mult;
+        }
+        r.clamp(0.0, 1.0)
+    }
+
+    /// Per-transfer corruption probability for a `flits`-flit sequence:
+    /// `1 - (1 - rate)^flits` — any corrupted flit spoils the transfer.
+    fn transfer_error_p(&self, now: Time, flits: u64) -> f64 {
+        let r = self.crc_rate(now);
+        if r <= 0.0 {
+            0.0
+        } else if r >= 1.0 {
+            1.0
+        } else {
+            1.0 - (1.0 - r).powi(flits.clamp(1, i32::MAX as u64) as i32)
+        }
+    }
+
+    /// Push one `flits`-flit transfer leg through the link: draw
+    /// corruption, drive the replay buffer until the transfer delivers
+    /// exactly once (each retry charges one extra `leg`) or exhausts its
+    /// retries and poisons.
+    pub fn link_transfer(&mut self, now: Time, flits: u64, leg: Time) -> LinkResult {
+        let p = self.transfer_error_p(now, flits);
+        self.replay.send(flits);
+        let mut extra: Time = 0;
+        loop {
+            let corrupted = p > 0.0 && self.rng.chance(p);
+            match self.replay.attempt(corrupted) {
+                crate::cxl::Attempt::Retried { .. } => {
+                    self.stats.retries += 1;
+                    self.stats.replays += flits;
+                    extra += leg;
+                }
+                crate::cxl::Attempt::Poisoned { .. } => {
+                    self.stats.poisons += 1;
+                    return LinkResult { extra, poisoned: true };
+                }
+                // Delivered — or Idle, which cannot happen right after a
+                // send but terminates the loop safely if it ever did.
+                _ => return LinkResult { extra, poisoned: false },
+            }
+        }
+    }
+
+    /// Draw the media latency-spike tail for one endpoint access
+    /// (0 almost always; an exponential extra when the spike fires).
+    pub fn media_spike(&mut self) -> Time {
+        if self.spec.media_spike_rate > 0.0
+            && self.spec.media_spike_mean > 0
+            && self.rng.chance(self.spec.media_spike_rate)
+        {
+            self.rng.exponential(self.spec.media_spike_mean as f64) as Time
+        } else {
+            0
+        }
+    }
+
+    /// Draw consecutive controller timeouts for one access; each fires
+    /// with `timeout_rate` and waits `timeout << attempt` (exponential
+    /// backoff), capped at `max_retries` rounds.
+    pub fn timeout_wait(&mut self) -> Time {
+        if self.spec.timeout_rate <= 0.0 || self.spec.timeout == 0 {
+            return 0;
+        }
+        let mut wait: Time = 0;
+        for attempt in 0..self.spec.max_retries.max(1) {
+            if !self.rng.chance(self.spec.timeout_rate) {
+                break;
+            }
+            self.stats.timeouts += 1;
+            wait += self.spec.timeout << attempt.min(20);
+        }
+        wait
+    }
+
+    /// Whether this port is scheduled to degrade at or before `now` and
+    /// has not yet been marked.
+    pub fn due_degrade(&self, now: Time, port: usize) -> bool {
+        !self.degraded && port == self.spec.degrade_port && now >= self.spec.degrade_at
+    }
+
+    /// Latch the degraded flag (after the dirty-line drain) and count
+    /// the failover.
+    pub fn mark_degraded(&mut self) {
+        self.degraded = true;
+        self.stats.failovers += 1;
+    }
+
+    /// Base controller timeout — the wait a requester pays before
+    /// re-issuing a transfer whose completion was poisoned (containment
+    /// re-fetch path in `rootcomplex/rootport.rs`).
+    pub fn base_timeout(&self) -> Time {
+        self.spec.timeout
+    }
+
+    /// Per-access latency penalty on a degraded endpoint.
+    pub fn degrade_penalty(&self) -> Time {
+        if self.degraded {
+            self.spec.degrade_penalty
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{NS, US};
+
+    fn spec(rate: f64) -> FaultSpec {
+        FaultSpec { enabled: true, crc_error_rate: rate, ..FaultSpec::default() }
+    }
+
+    #[test]
+    fn inert_specs_build_no_state() {
+        assert!(FaultSpec::default().is_inert());
+        assert!(RasState::new(FaultSpec::default(), 1, 0).is_none());
+        // Enabled but all-zero rates is still inert — the zero-rate
+        // bit-transparency contract.
+        let zeroed = FaultSpec { enabled: true, ..FaultSpec::default() };
+        assert!(zeroed.is_inert());
+        assert!(RasState::new(zeroed, 1, 0).is_none());
+        // Any live knob arms it.
+        assert!(!spec(1e-6).is_inert());
+        assert!(RasState::new(spec(1e-6), 1, 0).is_some());
+        let deg = FaultSpec { enabled: true, degrade_at: 5, ..FaultSpec::default() };
+        assert!(!deg.is_inert());
+    }
+
+    #[test]
+    fn clean_link_charges_nothing() {
+        let mut r = RasState::new(spec(1e-12), 7, 0).expect("armed");
+        for i in 0..200 {
+            let out = r.link_transfer(i * NS, 5, 10 * NS);
+            assert!(!out.poisoned);
+            // At 1e-12 no draw fires in 200 tries (p ≈ 5e-12/transfer).
+            assert_eq!(out.extra, 0);
+        }
+        assert_eq!(r.stats.retries, 0);
+        assert_eq!(r.stats.poisons, 0);
+    }
+
+    #[test]
+    fn certain_corruption_poisons_after_bounded_retries() {
+        let mut s = spec(1.0);
+        s.max_retries = 3;
+        let mut r = RasState::new(s, 7, 0).expect("armed");
+        let out = r.link_transfer(0, 2, 10 * NS);
+        assert!(out.poisoned);
+        assert_eq!(out.extra, 3 * 10 * NS, "every allowed retry charges a leg");
+        assert_eq!(r.stats.retries, 3);
+        assert_eq!(r.stats.poisons, 1);
+        assert_eq!(r.stats.replays, 3 * 2);
+        // Exactly-once bookkeeping: nothing remains in flight.
+        assert_eq!(r.replay.in_flight(), 0);
+    }
+
+    #[test]
+    fn burst_window_multiplies_the_rate() {
+        let mut s = spec(0.01);
+        s.burst_every = 100 * US;
+        s.burst_len = 10 * US;
+        s.burst_mult = 50.0;
+        let r = RasState::new(s, 7, 0).expect("armed");
+        assert!((r.crc_rate(5 * US) - 0.5).abs() < 1e-12, "inside the burst");
+        assert!((r.crc_rate(50 * US) - 0.01).abs() < 1e-12, "outside the burst");
+        // Rates clamp at 1.
+        let mut s2 = spec(0.5);
+        s2.burst_every = 10;
+        s2.burst_len = 10;
+        s2.burst_mult = 100.0;
+        let r2 = RasState::new(s2, 7, 0).expect("armed");
+        assert_eq!(r2.crc_rate(0), 1.0);
+    }
+
+    #[test]
+    fn fault_draws_are_reproducible_and_per_port_independent() {
+        let mut s = spec(0.3);
+        s.media_spike_rate = 0.2;
+        s.media_spike_mean = 5 * US;
+        let run = |port: usize| -> (Vec<Time>, RasStats) {
+            let mut r = RasState::new(s, 0xC11A, port).expect("armed");
+            let mut v = Vec::new();
+            for i in 0..200u64 {
+                let out = r.link_transfer(i * NS, 3, NS);
+                v.push(out.extra);
+                v.push(r.media_spike());
+            }
+            (v, r.stats)
+        };
+        let (a, sa) = run(0);
+        let (b, sb) = run(0);
+        assert_eq!(a, b, "fixed-seed fault schedules must replay bit-for-bit");
+        assert_eq!(sa.retries, sb.retries);
+        let (c, _) = run(1);
+        assert_ne!(a, c, "ports must draw independent fault sequences");
+    }
+
+    #[test]
+    fn degradation_latches_once_and_charges_the_penalty() {
+        let mut s = spec(0.0);
+        s.enabled = true;
+        s.degrade_at = 100;
+        s.degrade_port = 2;
+        s.degrade_penalty = 7 * US;
+        let mut r = RasState::new(s, 1, 2).expect("degrade schedule arms RAS");
+        assert!(!r.due_degrade(50, 2), "not due yet");
+        assert!(!r.due_degrade(200, 1), "wrong port never degrades");
+        assert!(r.due_degrade(200, 2));
+        assert_eq!(r.degrade_penalty(), 0);
+        r.mark_degraded();
+        assert!(!r.due_degrade(300, 2), "latches once");
+        assert_eq!(r.degrade_penalty(), 7 * US);
+        assert_eq!(r.stats.failovers, 1);
+    }
+
+    #[test]
+    fn timeout_backoff_grows_exponentially() {
+        let mut s = spec(0.0);
+        s.enabled = true;
+        s.timeout_rate = 1.0;
+        s.timeout = 2 * US;
+        s.max_retries = 3;
+        let mut r = RasState::new(s, 1, 0).expect("armed");
+        // Certain timeouts: 2 + 4 + 8 µs, then the cap stops the loop.
+        assert_eq!(r.timeout_wait(), (2 + 4 + 8) * US);
+        assert_eq!(r.stats.timeouts, 3);
+    }
+}

@@ -356,6 +356,28 @@ impl RootComplex {
         while let Some((hot_page, cold_page)) = t.pop_move() {
             let hot_frame = t.frame_base(hot_page);
             let cold_frame = t.frame_base(cold_page);
+            // RAS steering (DESIGN.md §15): both sides of a swap receive
+            // writes, so a swap whose stripe touches a degraded port is
+            // vetoed for this epoch — hot pages are never migrated onto
+            // a failing endpoint, and the veto counts as a failover.
+            let mut degraded = None;
+            let mut probe = 0;
+            while probe < page && degraded.is_none() {
+                let (sp, _) = hdm
+                    .decode(hot_frame + probe)
+                    .unwrap_or_else(|| panic!("tier decode miss at {:#x}", hot_frame + probe));
+                let (fp, _) = hdm
+                    .decode(cold_frame + probe)
+                    .unwrap_or_else(|| panic!("tier decode miss at {:#x}", cold_frame + probe));
+                degraded = [sp, fp].into_iter().find(|&p| ports[p].is_degraded());
+                probe += chunk;
+            }
+            if let Some(dp) = degraded {
+                if let Some(r) = &mut ports[dp].ras {
+                    r.stats.failovers += 1;
+                }
+                continue;
+            }
             let start = now + *bridge_lat;
             let mut off = 0;
             while off < page {
@@ -613,6 +635,39 @@ mod tests {
         let dram_loads = rc.ports[0].stats.loads;
         rc.load(10_000_000, hot, 64);
         assert_eq!(rc.ports[0].stats.loads, dram_loads + 1);
+    }
+
+    #[test]
+    fn tier_swaps_are_vetoed_onto_a_degraded_port() {
+        use crate::ras::{FaultSpec, RasState};
+        let mut rc = hybrid(2); // port 0 DRAM (fast), port 1 SSD (slow)
+        let total = 4u64 << 20;
+        let fast = rc.enumerate_interleaved(total, 12).unwrap();
+        let cfg = TierConfig { enabled: true, migrate: true, ..TierConfig::default() };
+        rc.attach_tiering(cfg, fast, total);
+        let spec = FaultSpec {
+            enabled: true,
+            degrade_at: 1,
+            degrade_port: 0,
+            ..FaultSpec::default()
+        };
+        rc.ports[0].ras = RasState::new(spec, 42, 0);
+        let mut rng = Pcg32::new(9, 9);
+        // Hammer one slow-tier page so the epoch plans a promotion.
+        let hot = 3u64 << 20;
+        for i in 0..32 {
+            rc.load(i * 1000, hot + (i % 4) * 64, 64);
+        }
+        // An access past the deadline latches the fast port's degradation.
+        rc.load(500_000, 0, 64);
+        assert!(rc.ports[0].is_degraded());
+        rc.tier_tick(1_000_000, &mut rng);
+        let t = rc.tier.as_ref().unwrap();
+        assert_eq!(t.stats.promotions, 0, "no page may move onto the degraded port");
+        assert_eq!(rc.ports[0].stats.migrations, 0);
+        assert_eq!(rc.ports[1].stats.migrations, 0);
+        let r = rc.ports[0].ras.as_ref().unwrap();
+        assert!(r.stats.failovers >= 2, "degrade latch + swap veto both count");
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::collections::VecDeque;
 use crate::cxl::{ControllerKind, CxlController, DevLoad, Flit, MemOpcode};
 use crate::expander::{CacheSpec, DeviceCache, Lookup, DEV_DRAM_GBPS, WB_DRAIN_BATCH};
 use crate::media::{DramModel, MediaKind, SsdModel};
+use crate::ras::{FaultSpec, RasState};
 use crate::sim::{transfer_time, Time, NS};
 use crate::util::prng::Pcg32;
 use crate::util::stats::Summary;
@@ -104,6 +105,9 @@ pub struct RootPort {
     /// Expander-side device DRAM cache (DESIGN.md §14); `None` keeps
     /// every path byte-identical to the uncached port.
     pub cache: Option<DeviceCache>,
+    /// RAS fault injection + recovery (DESIGN.md §15); `None` keeps
+    /// every path byte-identical to the fault-free port.
+    pub ras: Option<RasState>,
     /// Memory-queue slots: completion time of the request occupying each.
     slots: Vec<Time>,
     /// Recent outstanding demand addresses (SR window input).
@@ -133,6 +137,7 @@ impl RootPort {
             sr: SpecReadEngine::new(sr_policy),
             ds: DetStoreEngine::new(ds_enabled, ds_capacity),
             cache: None,
+            ras: None,
             slots: vec![0; MEM_QUEUE_CAP],
             recent: VecDeque::with_capacity(MEM_QUEUE_CAP),
             local_ack: 200 * NS,
@@ -151,6 +156,84 @@ impl RootPort {
             self.cache = DeviceCache::new(spec);
         }
         self
+    }
+
+    /// Arm the RAS layer described by `spec` (DESIGN.md §15). An inert
+    /// spec — disabled, or every rate zero and no scheduled degradation
+    /// — attaches no state at all, keeping the port byte-identical to
+    /// the fault-free build (the zero-rate bit-transparency contract).
+    pub fn with_ras(mut self, spec: FaultSpec, seed: u64) -> RootPort {
+        self.ras = RasState::new(spec, seed, self.id);
+        self
+    }
+
+    /// Whether this port's endpoint has hard-degraded — the tiering
+    /// engine and the pooled switch steer traffic around it.
+    pub fn is_degraded(&self) -> bool {
+        self.ras.as_ref().map_or(false, |r| r.degraded)
+    }
+
+    /// Latch a scheduled hard degradation once due. The order matters:
+    /// first rescue every dirty byte out of the device cache — queued
+    /// writebacks *and* resident dirty lines retire against the media
+    /// now, while the endpoint still answers — then mark the port
+    /// degraded so penalties and steering kick in. The conservation
+    /// property in `tests/props.rs` proves no dirty byte is lost.
+    fn ras_degrade_check(&mut self, now: Time) {
+        let RootPort { ras, cache, backend, id, .. } = self;
+        let Some(r) = ras else { return };
+        if !r.due_degrade(now, *id) {
+            return;
+        }
+        if let (Some(c), EpBackend::Ssd(s)) = (cache.as_mut(), &mut *backend) {
+            let line = c.line_bytes();
+            for addr in c.drain_all_dirty() {
+                s.write_internal(now, addr, line);
+                r.stats.dirty_rescued_bytes += line;
+            }
+        }
+        r.mark_degraded();
+    }
+
+    /// Request-side RAS effects for one transfer of `flits` link flits:
+    /// CRC retry/replay legs, poison containment (the payload is lost
+    /// past the retry budget but the requester still holds it — the LLC
+    /// line or the DS copy — so re-issuing costs a timeout window plus
+    /// one retransmit leg), spontaneous controller timeouts with
+    /// exponential backoff, a media latency spike, and the
+    /// degraded-endpoint penalty. Zero when RAS is off.
+    fn ras_request_extra(&mut self, at: Time, flits: u64, leg: Time) -> Time {
+        let Some(r) = &mut self.ras else { return 0 };
+        let lr = r.link_transfer(at, flits, leg);
+        let mut extra = lr.extra;
+        if lr.poisoned {
+            extra += r.base_timeout() + leg;
+        }
+        extra + r.timeout_wait() + r.media_spike() + r.degrade_penalty()
+    }
+
+    /// Response-side RAS effects: CRC retry/replay legs, and on poison
+    /// the containment re-fetch — the completion data is gone, but the
+    /// source still holds it (the EP's internal DRAM for reads), so the
+    /// re-issue costs a timeout window, `refetch`, and one more leg.
+    fn ras_response_extra(&mut self, at: Time, flits: u64, leg: Time, refetch: Time) -> Time {
+        let Some(r) = &mut self.ras else { return 0 };
+        let lr = r.link_transfer(at, flits, leg);
+        let mut extra = lr.extra;
+        if lr.poisoned {
+            extra += r.base_timeout() + refetch + leg;
+        }
+        extra
+    }
+
+    /// Cost of re-reading a just-fetched line out of the endpoint for
+    /// poisoned-read containment: the data never left the EP's internal
+    /// DRAM, so the re-fetch is a device-DRAM hit, not a media access.
+    fn ep_reread_cost(&self) -> Time {
+        match &self.backend {
+            EpBackend::Dram(d) => d.hit_latency(),
+            EpBackend::Ssd(s) => s.params.dram_lat,
+        }
     }
 
     /// Drop cached lines in the device-address range `[lo, hi)` — used
@@ -177,12 +260,18 @@ impl RootPort {
     /// Acquire the earliest free memory-queue slot at or after `now`.
     /// Returns (slot index, start time).
     fn acquire_slot(&mut self, now: Time) -> (usize, Time) {
-        let (idx, &free) = self
-            .slots
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, &t)| t)
-            .expect("slots nonempty");
+        // `slots` is sized MEM_QUEUE_CAP at construction and never
+        // shrinks; scan by value so the hot path carries no `expect`
+        // unwind edge (the invariant is debug-asserted instead).
+        debug_assert!(!self.slots.is_empty());
+        let mut idx = 0;
+        let mut free = Time::MAX;
+        for (i, &t) in self.slots.iter().enumerate() {
+            if t < free {
+                idx = i;
+                free = t;
+            }
+        }
         if free > now {
             self.stats.queue_full_waits += 1;
         }
@@ -232,6 +321,7 @@ impl RootPort {
     /// Service a demand load of `len` bytes at EP-relative address `addr`.
     pub fn load(&mut self, now: Time, addr: u64, len: u64) -> LoadOutcome {
         self.stats.loads += 1;
+        self.ras_degrade_check(now);
 
         // DS read interception: buffered lines are served from GPU local
         // memory, never touching the congested EP.
@@ -287,7 +377,9 @@ impl RootPort {
         // (admission permitting) with one backend read, or bypass —
         // which is byte-for-byte the uncached path.
         let flit = Flit { op: MemOpcode::MemRd, addr, len, issued_at: start, req_id: rid };
-        let at_ep = start + self.ctrl.request_leg(&flit);
+        let req_leg = self.ctrl.request_leg(&flit);
+        // RAS, request side: the read command is a single link flit.
+        let at_ep = start + req_leg + self.ras_request_extra(start, 1, req_leg);
         let RootPort { backend, cache, .. } = self;
         let (media_done, path) = match backend {
             EpBackend::Dram(d) => (d.access(at_ep, addr, len, false), LoadPath::Media),
@@ -325,7 +417,14 @@ impl RootPort {
                 }
             },
         };
-        let done = media_done + self.ctrl.response_leg(&flit);
+        let resp_leg = self.ctrl.response_leg(&flit);
+        // RAS, response side: the completion carries the data flits; a
+        // poisoned completion is contained by re-fetching from the EP's
+        // internal DRAM (the line just landed there) after a timeout.
+        let refetch = req_leg + self.ep_reread_cost();
+        let done = media_done
+            + resp_leg
+            + self.ras_response_extra(media_done, flit.link_flits(), resp_leg, refetch);
         self.slots[slot] = done;
         self.remember(addr);
         self.stats.load_latency.add((done - now) as f64);
@@ -348,6 +447,7 @@ impl RootPort {
     /// Service a store (LLC writeback or streaming store).
     pub fn store(&mut self, now: Time, addr: u64, len: u64, rng: &mut Pcg32) -> StoreOutcome {
         self.stats.stores += 1;
+        self.ras_degrade_check(now);
         let dl_now = self.devload(now);
         let action = if self.backend.is_ssd() {
             self.ds.on_store(now, addr, len, dl_now)
@@ -369,7 +469,13 @@ impl RootPort {
                 let (slot, start) = self.acquire_slot(now);
                 let flit =
                     Flit { op: MemOpcode::MemWr, addr, len, issued_at: start, req_id: 0 };
-                let at_ep = start + self.ctrl.request_leg(&flit);
+                let req_leg = self.ctrl.request_leg(&flit);
+                // RAS: the write's data rides the request leg. The ack
+                // already happened at GPU-memory speed (the DS copy is
+                // the recovery source), so only the background slot
+                // occupancy stretches.
+                let at_ep =
+                    start + req_leg + self.ras_request_extra(start, flit.link_flits(), req_leg);
                 let RootPort { backend, cache, .. } = self;
                 let done = match backend {
                     EpBackend::Ssd(s) => ssd_write_through_cache(cache, s, at_ep, addr, len, rng),
@@ -383,7 +489,13 @@ impl RootPort {
                 let (slot, start) = self.acquire_slot(now);
                 let flit =
                     Flit { op: MemOpcode::MemWr, addr, len, issued_at: start, req_id: 0 };
-                let at_ep = start + self.ctrl.request_leg(&flit);
+                let req_leg = self.ctrl.request_leg(&flit);
+                // RAS: the write's data rides the request leg; the
+                // requester holds the line until the ack, so a poison
+                // re-issues from there.
+                let at_ep =
+                    start + req_leg + self.ras_request_extra(start, flit.link_flits(), req_leg);
+                let resp_leg = self.ctrl.response_leg(&flit);
                 let RootPort { backend, cache, ctrl, .. } = self;
                 let ack = match backend {
                     EpBackend::Dram(d) => {
@@ -404,6 +516,10 @@ impl RootPort {
                         media_done + ctrl.response_leg(&flit)
                     }
                 };
+                // RAS, response side: the NDR completion is one flit
+                // with nothing to re-fetch — a poisoned ack just costs
+                // a timeout and a clean retransmit of the completion.
+                let ack = ack + self.ras_response_extra(ack, 1, resp_leg, 0);
                 self.slots[slot] = ack;
                 self.stats.store_latency.add((ack - now) as f64);
                 StoreOutcome { ack, buffered: false }
@@ -426,10 +542,16 @@ impl RootPort {
     /// completion time.
     pub fn migrate(&mut self, now: Time, addr: u64, len: u64, is_write: bool, rng: &mut Pcg32) -> Time {
         self.stats.migrations += 1;
+        self.ras_degrade_check(now);
         let (slot, start) = self.acquire_slot(now);
         let op = if is_write { MemOpcode::MemWr } else { MemOpcode::MemRd };
         let flit = Flit { op, addr, len, issued_at: start, req_id: 0 };
-        let at_ep = start + self.ctrl.request_leg(&flit);
+        let req_leg = self.ctrl.request_leg(&flit);
+        // RAS: page-move data rides the request leg on a write and the
+        // response leg on a read; the opposite leg is a one-flit
+        // command/completion.
+        let req_flits = if is_write { flit.link_flits() } else { 1 };
+        let at_ep = start + req_leg + self.ras_request_extra(start, req_flits, req_leg);
         let media_done = match &mut self.backend {
             EpBackend::Dram(d) => d.access(at_ep, addr, len, is_write),
             EpBackend::Ssd(s) => {
@@ -441,7 +563,15 @@ impl RootPort {
                 }
             }
         };
-        let done = media_done + self.ctrl.response_leg(&flit);
+        let resp_leg = self.ctrl.response_leg(&flit);
+        let (resp_flits, refetch) = if is_write {
+            (1, 0)
+        } else {
+            (flit.link_flits(), req_leg + self.ep_reread_cost())
+        };
+        let done = media_done
+            + resp_leg
+            + self.ras_response_extra(media_done, resp_flits, resp_leg, refetch);
         self.slots[slot] = done;
         done
     }
@@ -811,5 +941,78 @@ mod tests {
             now = now.max(a.done) + 100;
         }
         assert_eq!(plain.stats.queue_hwm, zero.stats.queue_hwm);
+    }
+
+    #[test]
+    fn inert_ras_spec_attaches_no_state() {
+        let armed_but_zero = FaultSpec { enabled: true, ..FaultSpec::default() };
+        let p = ssd_port(SrPolicy::Off, false).with_ras(armed_but_zero, 42);
+        assert!(p.ras.is_none(), "zero-rate spec must build nothing");
+        let live = FaultSpec { enabled: true, crc_error_rate: 1e-6, ..FaultSpec::default() };
+        assert!(ssd_port(SrPolicy::Off, false).with_ras(live, 42).ras.is_some());
+    }
+
+    #[test]
+    fn crc_errors_charge_retry_legs_on_loads() {
+        let spec = FaultSpec { enabled: true, crc_error_rate: 0.3, ..FaultSpec::default() };
+        let mut faulty = ssd_port(SrPolicy::Off, false).with_ras(spec, 42);
+        let mut clean = ssd_port(SrPolicy::Off, false);
+        let (mut tf, mut tc) = (0u64, 0u64);
+        let mut now = 0;
+        for i in 0..300u64 {
+            let a = faulty.load(now, i * 4096, 64);
+            let b = clean.load(now, i * 4096, 64);
+            tf += a.done - now;
+            tc += b.done - now;
+            now = a.done.max(b.done) + NS;
+        }
+        let r = faulty.ras.as_ref().expect("armed");
+        assert!(r.stats.retries > 0, "30% flit corruption must retry");
+        assert!(tf > tc, "retry legs must cost wall time: {tf} vs {tc}");
+        // Exactly-once link accounting holds after every transfer.
+        assert_eq!(r.replay.in_flight(), 0);
+        let rs = r.replay.stats;
+        assert_eq!(rs.sent, rs.delivered + rs.poisoned);
+    }
+
+    #[test]
+    fn scheduled_degradation_rescues_dirty_lines_first() {
+        let mut rng = Pcg32::new(9, 9);
+        let spec = FaultSpec {
+            enabled: true,
+            degrade_at: 10 * US,
+            degrade_port: 0,
+            degrade_penalty: 5 * US,
+            ..FaultSpec::default()
+        };
+        let mut p = cached_ssd_port(admit_all_spec()).with_ras(spec, 42);
+        let warm = p.load(0, 0x0, 64).done; // install line 0
+        let st = p.store(warm, 0x0, 64, &mut rng); // dirty it in device DRAM
+        assert_eq!(p.cache.as_ref().expect("cache").dirty_lines(), 1);
+        assert!(!p.is_degraded(), "not due yet");
+        // First access past the deadline: drain the dirty line, then latch.
+        p.load(st.ack.max(10 * US), 0x8000, 64);
+        assert!(p.is_degraded());
+        let r = p.ras.as_ref().expect("armed");
+        assert_eq!(r.stats.failovers, 1);
+        assert_eq!(r.stats.dirty_rescued_bytes, 256, "one 256B line rescued");
+        assert_eq!(p.cache.as_ref().expect("cache").dirty_lines(), 0);
+        let EpBackend::Ssd(s) = &p.backend else { unreachable!() };
+        assert!(s.stats.writes >= 2, "the rescue must be charged as a media write");
+    }
+
+    #[test]
+    fn degraded_port_pays_the_penalty_on_every_access() {
+        let spec = FaultSpec {
+            enabled: true,
+            degrade_at: 1,
+            degrade_port: 0,
+            degrade_penalty: 50 * US,
+            ..FaultSpec::default()
+        };
+        let mut p = ssd_port(SrPolicy::Off, false).with_ras(spec, 42);
+        let out = p.load(10, 0x1000, 64);
+        assert!(p.is_degraded());
+        assert!(out.done - 10 >= 50 * US, "degraded access must pay the penalty");
     }
 }

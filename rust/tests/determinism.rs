@@ -60,6 +60,17 @@ fn fingerprint(m: &RunMetrics) -> Vec<u64> {
         m.cache_writebacks,
         m.cache_bypasses,
         m.cache_wb_hwm,
+        // RAS counters (DESIGN.md §15): every fault draw comes from a
+        // forked per-port sub-stream, so retry/poison/timeout counts are
+        // part of the deterministic surface (zero for fault-free configs
+        // — which is what makes the zero-rate identity tests below
+        // meaningful).
+        m.ras_retries,
+        m.ras_replays,
+        m.ras_poisons,
+        m.ras_timeouts,
+        m.ras_failovers,
+        m.ras_dirty_rescued_bytes,
     ]
 }
 
@@ -87,6 +98,9 @@ fn repeated_runs_are_bit_identical() {
         // admission predictor).
         ("cxl-cache", MediaKind::Znand, "hot75"),
         ("cxl-cache-bypass", MediaKind::Znand, "hot75"),
+        // RAS fault injection: the forked fault sub-streams, retry legs
+        // and containment waits must replay bit-for-bit too.
+        ("cxl-ras", MediaKind::Znand, "bfs"),
     ] {
         let cfg = small(name, media);
         let a = System::new(spec(wl), &cfg).run();
@@ -184,6 +198,59 @@ fn zero_capacity_cache_reproduces_cxl_bit_identically() {
             assert_eq!(cached.cache_hits + cached.cache_misses, 0);
         }
     }
+}
+
+/// The zero-rate identity (DESIGN.md §15): a `cxl-ras` whose every fault
+/// rate is zero and whose degradation is unscheduled builds *no RAS
+/// state at all* — the spec is inert even with `enabled` left on — so
+/// every port path must be byte-identical to plain `cxl`: same event
+/// counts, same latched latency bits, all RAS counters zero. Same for
+/// `cxl-pool-ras` against `cxl-pool`. Arming the config family without
+/// giving it a fault to inject cannot perturb a single bit.
+#[test]
+fn zero_rate_ras_reproduces_baselines_bit_identically() {
+    for (armed, baseline, media, wl) in [
+        ("cxl-ras", "cxl", MediaKind::Znand, "bfs"),
+        ("cxl-ras", "cxl", MediaKind::Ddr5, "gnn"),
+        ("cxl-pool-ras", "cxl-pool", MediaKind::Znand, "bfs"),
+    ] {
+        let base = System::new(spec(wl), &small(baseline, media)).run();
+        let mut cfg = small(armed, media);
+        cfg.ras.crc_error_rate = 0.0;
+        cfg.ras.media_spike_rate = 0.0;
+        cfg.ras.timeout_rate = 0.0;
+        cfg.ras.degrade_at = cxl_gpu::sim::Time::MAX;
+        assert!(cfg.ras.enabled && cfg.ras.is_inert(), "zeroed spec must be inert");
+        let ras = System::new(spec(wl), &cfg).run();
+        assert_eq!(
+            fingerprint(&base),
+            fingerprint(&ras),
+            "{armed}/{wl} on {media:?} at zero rates is not bit-identical to {baseline}"
+        );
+        assert_eq!(
+            ras.ras_retries + ras.ras_poisons + ras.ras_timeouts + ras.ras_failovers,
+            0
+        );
+    }
+}
+
+/// Fixed-seed fault reproducibility: with real fault rates armed, the
+/// injected sequence — every retry, poison and timeout — must replay
+/// bit-for-bit across runs, and the counters must show the faults
+/// actually fired (the reproducibility claim is empty on a quiet run).
+#[test]
+fn armed_ras_faults_replay_bit_for_bit() {
+    let mut cfg = small("cxl-ras", MediaKind::Znand);
+    // Hot enough that a 6k-op debug run draws retries for certain.
+    cfg.ras.crc_error_rate = 1e-3;
+    cfg.ras.timeout_rate = 1e-3;
+    cfg.ras.timeout = 2 * cxl_gpu::sim::US;
+    let a = System::new(spec("bfs"), &cfg).run();
+    let b = System::new(spec("bfs"), &cfg).run();
+    assert_eq!(fingerprint(&a), fingerprint(&b), "cxl-ras fault sequence diverged");
+    assert!(a.ras_retries > 0, "armed CRC rate must draw retries");
+    assert!(a.ras_timeouts > 0, "armed timeout rate must draw timeouts");
+    assert!(a.ras_replays >= a.ras_retries, "each retry replays >= 1 flit");
 }
 
 /// Multi-tenant pool runs — the merged event order, the shared switch

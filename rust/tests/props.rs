@@ -597,6 +597,244 @@ fn prop_device_cache_accounting_and_conservation() {
     });
 }
 
+/// RAS link layer (DESIGN.md §15): the go-back replay buffer must
+/// deliver every sent transfer *exactly once, in send order* under an
+/// arbitrary interleaving of sends and corrupted/clean attempts — each
+/// sequence number retires once (as a delivery or a poison, never both),
+/// completions pop in strictly consecutive order, and flit conservation
+/// `sent == delivered + poisoned + in_flight` holds after every step.
+#[test]
+fn prop_replay_buffer_exactly_once_in_order_under_arbitrary_loss() {
+    use cxl_gpu::cxl::{Attempt, ReplayBuffer};
+    check("replay-exactly-once", 0x4EA7, 150, |g| {
+        let max_retries = g.u64("retries", 0, 5) as u32;
+        let mut b = ReplayBuffer::new(max_retries);
+        let mut next_complete = 0u64;
+        let mut sent_flits = 0u64;
+        let ops = g.usize("ops", 1, 300);
+        for i in 0..ops {
+            if g.bool(&format!("send{i}"), 0.5) || b.pending_transfers() == 0 {
+                let flits = g.u64(&format!("f{i}"), 1, 9);
+                b.send(flits);
+                sent_flits += flits;
+            } else {
+                let corrupted = g.bool(&format!("crc{i}"), 0.4);
+                match b.attempt(corrupted) {
+                    Attempt::Delivered { seq, .. } | Attempt::Poisoned { seq, .. } => {
+                        if seq != next_complete {
+                            return Err(format!(
+                                "completion out of order: seq {seq}, want {next_complete}"
+                            ));
+                        }
+                        next_complete += 1;
+                    }
+                    Attempt::Retried { seq } => {
+                        if seq != next_complete {
+                            return Err(format!("retried a non-head transfer: {seq}"));
+                        }
+                    }
+                    Attempt::Idle => return Err("Idle with transfers pending".into()),
+                }
+            }
+            let s = b.stats;
+            if s.sent != s.delivered + s.poisoned + b.in_flight() {
+                return Err(format!(
+                    "conservation broke at op {i}: sent {} != delivered {} + poisoned {} + in-flight {}",
+                    s.sent, s.delivered, s.poisoned, b.in_flight()
+                ));
+            }
+        }
+        // Drain with clean passes: everything left delivers, in order.
+        while b.pending_transfers() > 0 {
+            match b.attempt(false) {
+                Attempt::Delivered { seq, .. } => {
+                    if seq != next_complete {
+                        return Err(format!("drain out of order: {seq} != {next_complete}"));
+                    }
+                    next_complete += 1;
+                }
+                other => return Err(format!("clean drain must deliver, got {other:?}")),
+            }
+        }
+        let s = b.stats;
+        if s.sent != sent_flits || s.sent != s.delivered + s.poisoned || b.in_flight() != 0 {
+            return Err(format!(
+                "final conservation: sent {} delivered {} poisoned {} in-flight {}",
+                s.sent, s.delivered, s.poisoned, b.in_flight()
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// RAS fault injection: for any CRC rate, every [`RasState::link_transfer`]
+/// retires its transfer before returning (nothing in flight), flit
+/// accounting conserves (`sent == delivered + poisoned`), the charged
+/// extra is exactly `retry-legs x leg` on a delivery and bounded by the
+/// retry budget always, and the whole sequence replays bit-for-bit under
+/// the same seed.
+#[test]
+fn prop_link_transfer_conserves_flits_and_replays_deterministically() {
+    use cxl_gpu::ras::{FaultSpec, RasState};
+    use cxl_gpu::sim::NS;
+    check("link-transfer-conservation", 0x11FA, 100, |g| {
+        let rate = *g.choose("rate", &[0.0f64, 1e-4, 0.05, 0.3, 0.9]);
+        let max_retries = g.u64("retries", 0, 4) as u32;
+        let seed = g.u64("seed", 0, 1 << 40);
+        let spec = FaultSpec {
+            enabled: true,
+            crc_error_rate: rate.max(1e-12), // keep the spec non-inert
+            max_retries,
+            ..FaultSpec::default()
+        };
+        let leg = 10 * NS;
+        let run = |n: usize| -> Result<(Vec<u64>, u64, u64), String> {
+            let mut r =
+                RasState::new(spec, seed, 0).ok_or_else(|| "armed spec must build".to_string())?;
+            let mut extras = Vec::new();
+            let mut total_flits = 0u64;
+            for i in 0..n {
+                let flits = 1 + (i as u64 % 8);
+                total_flits += flits;
+                let out = r.link_transfer(i as u64 * NS, flits, leg);
+                if out.extra > max_retries as u64 * leg {
+                    return Err(format!(
+                        "extra {} exceeds the retry budget {} x {leg}",
+                        out.extra, max_retries
+                    ));
+                }
+                if !out.poisoned && out.extra % leg != 0 {
+                    return Err(format!("delivery extra {} is not whole legs", out.extra));
+                }
+                if r.replay.in_flight() != 0 {
+                    return Err("transfer returned with flits in flight".into());
+                }
+                extras.push(out.extra);
+            }
+            let s = r.replay.stats;
+            if s.sent != total_flits || s.sent != s.delivered + s.poisoned {
+                return Err(format!(
+                    "flit conservation: sent {} (pushed {total_flits}) delivered {} poisoned {}",
+                    s.sent, s.delivered, s.poisoned
+                ));
+            }
+            if r.stats.poisons > 0 && max_retries > 0 && r.stats.retries == 0 {
+                return Err("poisons without any retry under a nonzero budget".into());
+            }
+            Ok((extras, r.stats.retries, r.stats.poisons))
+        };
+        let n = g.usize("n", 1, 400);
+        let (a, ra, pa) = run(n)?;
+        let (b, rb, pb) = run(n)?;
+        if a != b || ra != rb || pa != pb {
+            return Err("fixed-seed fault sequence did not replay bit-for-bit".into());
+        }
+        Ok(())
+    });
+}
+
+/// Graceful degradation (DESIGN.md §15): across a random load/store
+/// history on a cached SSD port, a scheduled endpoint degradation must
+/// rescue *every* dirty device-cache byte — the pre-latch drain leaves
+/// zero dirty lines and an empty writeback queue, rescues exactly
+/// `(queued + resident-dirty) x line_bytes` bytes, and the cache's dirty
+/// conservation ledger (`dirtied == writebacks + dropped + resident`)
+/// still balances afterwards.
+#[test]
+fn prop_dirty_bytes_conserved_across_forced_degradation() {
+    use cxl_gpu::cxl::ControllerKind;
+    use cxl_gpu::expander::CacheSpec;
+    use cxl_gpu::media::{SsdModel, SsdParams};
+    use cxl_gpu::ras::FaultSpec;
+    use cxl_gpu::rootcomplex::{EpBackend, RootPort, SrPolicy};
+    use cxl_gpu::util::prng::Pcg32;
+    check("dirty-rescue-conservation", 0xD127, 60, |g| {
+        // Degradation deadline far past any pre-phase timestamp.
+        let degrade_at: u64 = 1 << 40;
+        let ways = *g.choose("ways", &[1usize, 2, 4]);
+        let spec = CacheSpec {
+            enabled: true,
+            capacity_bytes: *g.choose("cap", &[4u64, 8, 16]) << 10,
+            ways,
+            ..CacheSpec::default()
+        }
+        .admit_all();
+        let fault = FaultSpec {
+            enabled: true,
+            degrade_at,
+            degrade_port: 0,
+            degrade_penalty: 1000,
+            ..FaultSpec::default()
+        };
+        let mut p = RootPort::new(
+            0,
+            ControllerKind::Panmnesia,
+            EpBackend::Ssd(SsdModel::new(SsdParams::znand())),
+            SrPolicy::Off,
+            false,
+            0,
+        )
+        .with_cache(spec)
+        .with_ras(fault, g.u64("seed", 0, 1 << 30));
+        let mut rng = Pcg32::new(g.u64("rng", 0, 1 << 30), 77);
+        let mut now = 0u64;
+        let ops = g.usize("ops", 1, 200);
+        for i in 0..ops {
+            let addr = g.u64(&format!("a{i}"), 0, 127) * 64;
+            if g.bool(&format!("st{i}"), 0.5) {
+                now = p.store(now, addr, 64, &mut rng).ack;
+            } else {
+                now = p.load(now, addr, 64).done;
+            }
+            if now >= degrade_at {
+                return Err("pre-phase ran past the degradation deadline".into());
+            }
+        }
+        let line = {
+            let c = p.cache.as_ref().ok_or_else(|| "cache must attach".to_string())?;
+            c.line_bytes()
+        };
+        let (queued, resident) = {
+            let c = p.cache.as_ref().unwrap();
+            (c.wb_pending() as u64, c.dirty_lines())
+        };
+        // The first access past the deadline triggers rescue-then-latch.
+        p.load(degrade_at, 1 << 20, 64);
+        if !p.is_degraded() {
+            return Err("the port must latch degraded past the deadline".into());
+        }
+        let r = p.ras.as_ref().unwrap();
+        if r.stats.failovers != 1 {
+            return Err(format!("one latch, one failover: {}", r.stats.failovers));
+        }
+        if r.stats.dirty_rescued_bytes != (queued + resident) * line {
+            return Err(format!(
+                "rescued {} B, want ({queued} queued + {resident} resident) x {line} B",
+                r.stats.dirty_rescued_bytes
+            ));
+        }
+        let c = p.cache.as_ref().unwrap();
+        if c.dirty_lines() != 0 || c.wb_pending() != 0 {
+            return Err(format!(
+                "dirty state survived the rescue: {} lines, {} queued",
+                c.dirty_lines(),
+                c.wb_pending()
+            ));
+        }
+        let s = c.stats;
+        if s.dirtied != s.writebacks + s.dirty_dropped + c.dirty_lines() {
+            return Err(format!(
+                "dirty ledger broke: dirtied {} != wb {} + dropped {} + resident {}",
+                s.dirtied,
+                s.writebacks,
+                s.dirty_dropped,
+                c.dirty_lines()
+            ));
+        }
+        Ok(())
+    });
+}
+
 /// Device-cache victim selection must be true LRU: against a per-set
 /// reference list (front = least recent), every eviction must name the
 /// reference's front, refreshes must never evict, and sets only evict
