@@ -9,15 +9,32 @@
 //! ```
 //!
 //! (std::net + threads; the offline build has no tokio.)
+//!
+//! The daemon reuses the serving front door's vocabulary (DESIGN.md §16):
+//! shared [`ServeStats`] count every request, and each completion is
+//! checked against a [`ServeSpec`] SLO so the per-connection summary
+//! reports goodput the same way the simulator does. Every fallible edge —
+//! enumerate, bind, clone, even a peer thread that panicked while holding
+//! the lock — degrades to a message or a dropped connection, never to a
+//! daemon crash.
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpListener;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use cxl_gpu::cxl::ControllerKind;
 use cxl_gpu::media::{SsdModel, SsdParams};
 use cxl_gpu::rootcomplex::{EpBackend, RootComplex, RootPort, SrPolicy};
+use cxl_gpu::serve::{ServeSpec, ServeStats};
 use cxl_gpu::sim::{ps_to_ns, Time};
 use cxl_gpu::util::prng::Pcg32;
+
+/// Lock that survives a poisoned mutex: a handler thread that panicked
+/// mid-request leaves the root complex in a consistent state (every
+/// `load`/`store` either completed or never started), so serving must
+/// continue rather than propagate the poison to every future connection.
+fn lock_shared<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 fn main() {
     let ports = (0..2)
@@ -33,16 +50,36 @@ fn main() {
         })
         .collect();
     let mut rc = RootComplex::new(ports);
-    rc.enumerate(64 << 20).expect("HDM enumerate");
+    if let Err(e) = rc.enumerate(64 << 20) {
+        eprintln!("serve_expander: HDM enumerate failed: {e}");
+        std::process::exit(1);
+    }
     let shared = Arc::new(Mutex::new((rc, Pcg32::new(7, 7), 0u64 as Time)));
+    let stats = Arc::new(Mutex::new(ServeStats::default()));
+    // The front door's per-request SLO, reused as this daemon's goodput
+    // threshold for the connection summaries.
+    let slo = ServeSpec::default().slo;
 
-    let listener = TcpListener::bind("127.0.0.1:7999").expect("bind 127.0.0.1:7999");
+    let listener = match TcpListener::bind("127.0.0.1:7999") {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("serve_expander: cannot bind 127.0.0.1:7999: {e}");
+            std::process::exit(1);
+        }
+    };
     println!("serve_expander: listening on 127.0.0.1:7999 (R <hex> | W <hex> | Q)");
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
         let shared = Arc::clone(&shared);
+        let stats = Arc::clone(&stats);
         std::thread::spawn(move || {
-            let mut out = stream.try_clone().expect("clone");
+            let mut out = match stream.try_clone() {
+                Ok(o) => o,
+                Err(e) => {
+                    eprintln!("serve_expander: dropping connection (clone failed: {e})");
+                    return;
+                }
+            };
             let reader = BufReader::new(stream);
             for line in reader.lines() {
                 let Ok(line) = line else { break };
@@ -50,19 +87,23 @@ fn main() {
                 let (op, addr) = (parts.next(), parts.next());
                 let reply = match (op, addr.and_then(|a| u64::from_str_radix(a, 16).ok())) {
                     (Some("R"), Some(addr)) => {
-                        let mut g = shared.lock().unwrap();
+                        let mut g = lock_shared(&shared);
                         let (rc, _, now) = &mut *g;
                         let t = *now;
                         let outp = rc.load(t, addr % (64 << 20), 64);
                         *now = t + 1000; // 1 ns between arrivals
+                        drop(g);
+                        bookkeep(&stats, outp.done - t, slo);
                         format!("OK R {:.1}ns path={:?}\n", ps_to_ns(outp.done - t), outp.path)
                     }
                     (Some("W"), Some(addr)) => {
-                        let mut g = shared.lock().unwrap();
+                        let mut g = lock_shared(&shared);
                         let (rc, rng, now) = &mut *g;
                         let t = *now;
                         let outp = rc.store(t, addr % (64 << 20), 64, rng);
                         *now = t + 1000;
+                        drop(g);
+                        bookkeep(&stats, outp.ack - t, slo);
                         format!(
                             "OK W {:.1}ns buffered={}\n",
                             ps_to_ns(outp.ack - t),
@@ -76,6 +117,24 @@ fn main() {
                     break;
                 }
             }
+            let s = lock_shared(&stats);
+            println!(
+                "serve_expander: connection closed ({} served, {} within the {} ns SLO)",
+                s.completed,
+                s.completed_in_slo,
+                slo / 1000
+            );
         });
+    }
+}
+
+/// Charge one served request to the shared front-door counters.
+fn bookkeep(stats: &Mutex<ServeStats>, latency: Time, slo: Time) {
+    let mut s = lock_shared(stats);
+    s.arrivals += 1;
+    s.admitted += 1;
+    s.completed += 1;
+    if latency <= slo {
+        s.completed_in_slo += 1;
     }
 }

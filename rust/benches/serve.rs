@@ -1,0 +1,139 @@
+//! §16 — online serving front door: knee + graceful-overload floors.
+//!
+//! Runs the `serve` experiment (offered-load ladder per config at a 1 ms
+//! SLO, then 2x-knee open-loop overload), emits `BENCH_serve.json`
+//! (schema: docs/BENCH_SCHEMA.md), and asserts the tentpole's win
+//! conditions: every CXL config has a measurable knee inside the ladder
+//! and above the UVM baseline's; at 2x-knee offered load goodput holds
+//! ≥ 70% of knee goodput with the bounded queue and deadline shedder —
+//! not unbounded queue growth — absorbing the excess.
+use std::collections::BTreeMap;
+
+use cxl_gpu::coordinator::experiments::{serve, Scale, ServePoint};
+use cxl_gpu::util::json::Json;
+
+/// Goodput retention floor at 2x-knee offered load (x knee goodput).
+const FLOOR_OVERLOAD_GOODPUT: f64 = 0.70;
+/// Admission queue bound the experiment arms (requests).
+const QUEUE_CAP: u64 = 32;
+
+fn point_json(p: &ServePoint) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("rate_rps".into(), Json::Num(p.rate_rps));
+    m.insert("p50_us".into(), Json::Num(p.p50_us));
+    m.insert("p99_us".into(), Json::Num(p.p99_us));
+    m.insert("p999_us".into(), Json::Num(p.p999_us));
+    m.insert("goodput_rps".into(), Json::Num(p.goodput_rps));
+    m.insert("arrivals".into(), Json::Num(p.arrivals as f64));
+    m.insert("completed".into(), Json::Num(p.completed as f64));
+    m.insert("shed".into(), Json::Num(p.shed as f64));
+    m.insert("timed_out".into(), Json::Num(p.timed_out as f64));
+    m.insert("rejected".into(), Json::Num(p.rejected as f64));
+    m.insert("queue_hwm".into(), Json::Num(p.queue_hwm as f64));
+    m.insert("sustainable".into(), Json::Bool(p.sustainable));
+    Json::Obj(m)
+}
+
+fn main() {
+    let res = serve(Scale::default(), true);
+
+    let variants: Vec<Json> = res
+        .variants
+        .iter()
+        .map(|v| {
+            let mut m = BTreeMap::new();
+            m.insert("config".into(), Json::Str(v.name.into()));
+            m.insert("media".into(), Json::Str(v.media.name().into()));
+            m.insert("knee_rps".into(), Json::Num(v.knee_rps));
+            m.insert("knee_goodput_rps".into(), Json::Num(v.knee_goodput_rps));
+            m.insert(
+                "overload_goodput_ratio".into(),
+                Json::Num(v.overload_goodput_ratio),
+            );
+            if let Some(o) = &v.overload {
+                m.insert("overload".into(), point_json(o));
+            }
+            m.insert("points".into(), Json::Arr(v.points.iter().map(point_json).collect()));
+            Json::Obj(m)
+        })
+        .collect();
+
+    // Report before asserting so regressions still leave data on disk.
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("serve".into()));
+    top.insert("schema".into(), Json::Str("docs/BENCH_SCHEMA.md".into()));
+    top.insert("floor_overload_goodput".into(), Json::Num(FLOOR_OVERLOAD_GOODPUT));
+    top.insert("queue_cap".into(), Json::Num(QUEUE_CAP as f64));
+    if let Some(b) = &res.bucketed {
+        top.insert("bucketed_overload".into(), point_json(b));
+    }
+    top.insert("results".into(), Json::Arr(variants));
+    let path = "BENCH_serve.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+
+    let uvm = &res.variants[0];
+    assert_eq!(uvm.name, "uvm", "variant 0 is the UVM baseline");
+    let top_rate = uvm.points.last().expect("ladder has rungs").rate_rps;
+    for v in res.variants.iter().skip(1) {
+        // (a) A measurable knee exists: some rung sustains, the top rung
+        // does not, and the CXL knee clears the UVM baseline's.
+        assert!(v.knee_rps > 0.0, "{}: no sustainable rung on the ladder", v.name);
+        assert!(
+            v.knee_rps < top_rate,
+            "{}: knee must sit inside the ladder (top rung unsustainable)",
+            v.name
+        );
+        assert!(
+            v.knee_rps > uvm.knee_rps,
+            "{}: CXL knee ({:.0} rps) must clear the UVM baseline ({:.0} rps)",
+            v.name,
+            v.knee_rps,
+            uvm.knee_rps
+        );
+        // (b) Graceful degradation at 2x knee: goodput holds while the
+        // bounded queue sheds/times out the excess.
+        let o = v.overload.as_ref().expect("kneed variant has an overload run");
+        assert!(
+            v.overload_goodput_ratio >= FLOOR_OVERLOAD_GOODPUT,
+            "{}: goodput at 2x knee fell to {:.0}% of knee goodput (floor {:.0}%)",
+            v.name,
+            100.0 * v.overload_goodput_ratio,
+            100.0 * FLOOR_OVERLOAD_GOODPUT
+        );
+        assert!(
+            o.shed + o.timed_out > 0,
+            "{}: 2x-knee excess must be absorbed by shedding/timeouts",
+            v.name
+        );
+        assert!(
+            o.queue_hwm <= QUEUE_CAP,
+            "{}: admission queue must stay bounded: hwm {} > cap {QUEUE_CAP}",
+            v.name,
+            o.queue_hwm
+        );
+    }
+    // Admission control on top: the token bucket converts overload into
+    // cheap rejections while goodput still holds the floor.
+    let b = res.bucketed.as_ref().expect("a best variant kneed");
+    assert!(b.rejected > 0, "the knee-rate token bucket must reject the 2x excess");
+    assert!(b.queue_hwm <= QUEUE_CAP);
+    println!(
+        "serve bench OK ({} variants; knees {} k rps; worst 2x-knee goodput {:.0}%)",
+        res.variants.len(),
+        res.variants
+            .iter()
+            .map(|v| format!("{:.0}", v.knee_rps / 1e3))
+            .collect::<Vec<_>>()
+            .join("/"),
+        100.0
+            * res
+                .variants
+                .iter()
+                .skip(1)
+                .map(|v| v.overload_goodput_ratio)
+                .fold(f64::INFINITY, f64::min)
+    );
+}

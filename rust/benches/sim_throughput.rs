@@ -36,6 +36,9 @@ fn main() {
         ("cxl-cache", MediaKind::Znand, "hot90"),
         // The RAS fault-injection path (§15) must hold it too.
         ("cxl-ras", MediaKind::Znand, "bfs"),
+        // The serving front door (§16: open-loop arrivals + request
+        // dispatch) must hold it too.
+        ("cxl-serve", MediaKind::Ddr5, "vadd"),
     ] {
         let mut cfg = SystemConfig::named(cfg_name, media);
         // 10x the pre-streaming budget: op streams freed the O(total_ops)

@@ -10,6 +10,7 @@ use crate::gpu::LlcConfig;
 use crate::media::{DramModel, DramTimings, MediaKind, SsdModel, SsdParams};
 use crate::ras::FaultSpec;
 use crate::rootcomplex::{EpBackend, RootPort, SrPolicy, TierConfig};
+use crate::serve::ServeSpec;
 use crate::util::toml::Document;
 
 /// Top-level memory-expansion strategy.
@@ -77,6 +78,13 @@ pub struct SystemConfig {
     /// arms it per-endpoint; an inert spec (all rates zero) attaches
     /// nothing — `cxl-ras` at zero rates is bit-identical to `cxl`.
     pub ras: FaultSpec,
+    /// Online serving front door (DESIGN.md §16): open-loop arrivals,
+    /// admission control, deadlines and load shedding, with each request
+    /// expanded into warp work. Composes with every topology because the
+    /// coordinator swaps the warps' op source, not the memory path; an
+    /// inert spec (disabled or zero rate) builds no front door — the run
+    /// is bit-identical to the same config without serving.
+    pub serve: ServeSpec,
 }
 
 impl SystemConfig {
@@ -108,6 +116,7 @@ impl SystemConfig {
             fabric: FabricSpec::default(),
             cache: CacheSpec::default(),
             ras: FaultSpec::default(),
+            serve: ServeSpec::default(),
         }
     }
 
@@ -183,6 +192,14 @@ impl SystemConfig {
     /// * `cxl-pool-ras` — `cxl-pool` plus the same fault schedule: the
     ///   degraded-endpoint failover scenario on the shared switch (WRR
     ///   demotion, dirty-line rescue, victim-tail bound in `BENCH_ras`).
+    /// * `cxl-serve` — `cxl` driven by the online serving front door
+    ///   (DESIGN.md §16, `serve` experiment): open-loop Poisson arrivals
+    ///   expand into weight-read + KV-append warp work, with admission
+    ///   control, SLO deadlines and load shedding. With the arrival rate
+    ///   zeroed it is bit-identical to `cxl`.
+    /// * `cxl-pool-serve` — `cxl-pool-qos` under the same front door:
+    ///   the serving knee behind the shared QoS switch. With the rate
+    ///   zeroed it is bit-identical to `cxl-pool-qos`.
     ///
     /// Panics on an unknown name; [`SystemConfig::try_named`] is the
     /// message-not-panic variant for CLI/config paths.
@@ -288,6 +305,25 @@ impl SystemConfig {
                 c.fabric.enabled = true;
                 c.ras = FaultSpec::representative();
             }
+            "cxl-serve" => {
+                // Serving front door on the plain expander (DESIGN.md
+                // §16): memory engines mirror `cxl` exactly; only the
+                // request layer is armed, so every delta against `cxl`
+                // is attributable to open-loop arrivals and admission
+                // control.
+                c.strategy = MemStrategy::Cxl;
+                c.serve = ServeSpec::representative();
+            }
+            "cxl-pool-serve" => {
+                // The serving front door over the QoS-pooled fabric:
+                // requests are admitted at the front door, then their
+                // memory traffic is shaped by the switch ingress bucket —
+                // the two throttles the `serve` experiment compares.
+                c.strategy = MemStrategy::Cxl;
+                c.fabric.enabled = true;
+                c.fabric.qos = true;
+                c.serve = ServeSpec::representative();
+            }
             "cxl-pool" | "cxl-pool-qos" => {
                 // Pooled fabric (DESIGN.md §13): the expander endpoints
                 // sit behind a shared virtual CXL switch. Engines stay
@@ -314,6 +350,7 @@ impl SystemConfig {
             "gpu-dram", "uvm", "gds", "cxl", "cxl-naive", "cxl-dyn", "cxl-sr", "cxl-ds",
             "cxl-smt", "cxl-hybrid", "cxl-tier", "cxl-tier-static", "cxl-pool",
             "cxl-pool-qos", "cxl-cache", "cxl-cache-bypass", "cxl-ras", "cxl-pool-ras",
+            "cxl-serve", "cxl-pool-serve",
         ]
     }
 
@@ -347,6 +384,9 @@ impl SystemConfig {
         self.timeline = doc.bool_or("sim.timeline", self.timeline);
         self.cache.capacity_bytes =
             doc.int_or("sim.cache_bytes", self.cache.capacity_bytes as i64) as u64;
+        self.serve.enabled = doc.bool_or("sim.serve", self.serve.enabled);
+        self.serve.rate_rps =
+            doc.int_or("sim.serve_rps", self.serve.rate_rps as i64) as f64;
     }
 }
 
@@ -462,6 +502,33 @@ mod tests {
         assert!(zeroed.build_ports().iter().all(|p| p.ras.is_none()));
         assert!(!SystemConfig::named("cxl", MediaKind::Znand).ras.enabled);
         assert!(!SystemConfig::named("cxl-pool", MediaKind::Znand).ras.enabled);
+    }
+
+    #[test]
+    fn serve_configs_arm_the_front_door() {
+        let serve = SystemConfig::named("cxl-serve", MediaKind::Ddr5);
+        assert!(serve.serve.enabled && !serve.serve.is_inert());
+        assert_eq!(serve.sr_policy, SrPolicy::Off, "engines mirror plain cxl");
+        assert!(!serve.fabric.enabled && !serve.cache.enabled);
+        let pool = SystemConfig::named("cxl-pool-serve", MediaKind::Ddr5);
+        assert!(pool.fabric.enabled && pool.fabric.qos && !pool.serve.is_inert());
+        // Zeroing the arrival rate makes the spec inert — the
+        // bit-transparency lever the determinism suite leans on.
+        let mut zeroed = serve.clone();
+        zeroed.serve.rate_rps = 0.0;
+        assert!(zeroed.serve.is_inert());
+        assert!(!SystemConfig::named("cxl", MediaKind::Ddr5).serve.enabled);
+        assert!(!SystemConfig::named("cxl-pool-qos", MediaKind::Ddr5).serve.enabled);
+    }
+
+    #[test]
+    fn serve_toml_overrides_apply() {
+        let doc =
+            crate::util::toml::parse("[sim]\nserve = true\nserve_rps = 50000").unwrap();
+        let mut c = SystemConfig::base();
+        c.apply_toml(&doc);
+        assert!(c.serve.enabled);
+        assert_eq!(c.serve.rate_rps, 50_000.0);
     }
 
     #[test]

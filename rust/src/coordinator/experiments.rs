@@ -1203,6 +1203,247 @@ pub fn ras(scale: Scale, print: bool) -> RasSweep {
 }
 
 // ---------------------------------------------------------------------------
+// Serve — offered-load knee sweep + 2x-knee overload degradation (§16)
+// ---------------------------------------------------------------------------
+
+/// One offered-load rung of the serving sweep.
+#[derive(Debug, Clone)]
+pub struct ServePoint {
+    /// Offered load (requests per second).
+    pub rate_rps: f64,
+    /// End-to-end request latency percentiles, microseconds.
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    /// In-SLO completions per simulated second.
+    pub goodput_rps: f64,
+    pub arrivals: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub timed_out: u64,
+    pub rejected: u64,
+    pub queue_hwm: u64,
+    /// p99 within SLO and < 1 % of arrivals lost.
+    pub sustainable: bool,
+}
+
+/// The knee sweep for one configuration.
+#[derive(Debug, Clone)]
+pub struct ServeVariant {
+    pub name: &'static str,
+    pub media: MediaKind,
+    pub points: Vec<ServePoint>,
+    /// Max sustainable offered load (0 when no rung sustains).
+    pub knee_rps: f64,
+    /// Goodput at the knee rung.
+    pub knee_goodput_rps: f64,
+    /// 2x-knee open-loop overload, no admission bucket (shedding and
+    /// timeouts must absorb the excess).
+    pub overload: Option<ServePoint>,
+    /// `overload.goodput / knee_goodput` — the graceful-degradation
+    /// metric (`benches/serve.rs` floors it at 0.70).
+    pub overload_goodput_ratio: f64,
+}
+
+/// Aggregate result of [`serve`].
+#[derive(Debug, Clone)]
+pub struct ServeSweep {
+    pub variants: Vec<ServeVariant>,
+    /// The best (highest-knee) variant re-run at 2x knee with the token
+    /// bucket armed at the knee rate: admission control converts queue
+    /// pressure into cheap rejections while goodput holds.
+    pub bucketed: Option<ServePoint>,
+}
+
+/// SLO used by the serving sweep: 1 ms end-to-end.
+const SERVE_SLO: crate::sim::Time = crate::sim::MS;
+
+/// The serving experiment (`--fig serve`): sweep offered load across a
+/// geometric rate ladder per configuration (UVM vs plain CXL vs cached
+/// Z-NAND CXL vs the QoS pool) to locate each config's max-sustainable-
+/// rate knee at a 1 ms SLO, then drive 2x-knee overload to show goodput
+/// degrades gracefully (bounded queue; shed/timeout counters absorb the
+/// excess). Backs `benches/serve.rs` → `BENCH_serve.json`.
+pub fn serve(scale: Scale, print: bool) -> ServeSweep {
+    const VARIANTS: [(&'static str, MediaKind); 4] = [
+        ("uvm", MediaKind::Ddr5),
+        ("cxl-serve", MediaKind::Ddr5),
+        ("cxl-cache", MediaKind::Znand),
+        ("cxl-pool-serve", MediaKind::Ddr5),
+    ];
+    /// Geometric (x2) offered-load ladder, 20k → 5.12M rps: brackets the
+    /// UVM knee from below and the DDR5-expander knee from above, so the
+    /// top rung is unsustainable for every config (a measurable knee).
+    const RATES: [f64; 9] =
+        [2e4, 4e4, 8e4, 1.6e5, 3.2e5, 6.4e5, 1.28e6, 2.56e6, 5.12e6];
+
+    let serve_cfg = |name: &str, media: MediaKind, rate: f64, bucket: f64| {
+        let mut cfg = SystemConfig::named(name, media);
+        // A quarter of the SSD budget per rung: the ladder runs 9 rungs
+        // per variant, and 1/80th of the ops buys one request anyway.
+        cfg.total_ops = (scale.ssd_ops / 4).max(4_000);
+        cfg.ssd_scale();
+        cfg.serve = crate::serve::ServeSpec {
+            enabled: true,
+            rate_rps: rate,
+            slo: SERVE_SLO,
+            // Small enough that a full queue's drain time sits well
+            // inside the SLO at every CXL config's knee.
+            queue_cap: 32,
+            bucket_rps: bucket,
+            ..Default::default()
+        };
+        cfg
+    };
+    let point = |rate: f64, m: &super::metrics::RunMetrics| {
+        let lost = m.serve_shed + m.serve_timed_out + m.serve_rejected;
+        ServePoint {
+            rate_rps: rate,
+            p50_us: m.request_p50_us(),
+            p99_us: m.request_p99_us(),
+            p999_us: m.request_p999_us(),
+            goodput_rps: m.goodput_rps(),
+            arrivals: m.serve_arrivals,
+            completed: m.serve_completed,
+            shed: m.serve_shed,
+            timed_out: m.serve_timed_out,
+            rejected: m.serve_rejected,
+            queue_hwm: m.serve_queue_hwm,
+            sustainable: m.request_p99_us() <= SERVE_SLO as f64 / 1e6
+                && lost * 100 <= m.serve_arrivals,
+        }
+    };
+
+    // Phase 1: the full ladder, one flat parallel batch.
+    let mut jobs: Vec<SweepJob> = Vec::new();
+    for &(name, media) in &VARIANTS {
+        for &rate in &RATES {
+            jobs.push((spec("vadd"), serve_cfg(name, media, rate, 0.0)));
+        }
+    }
+    let results = run_jobs(&jobs);
+
+    let mut variants: Vec<ServeVariant> = VARIANTS
+        .iter()
+        .enumerate()
+        .map(|(vi, &(name, media))| {
+            let points: Vec<ServePoint> = RATES
+                .iter()
+                .enumerate()
+                .map(|(ri, &rate)| point(rate, &results[vi * RATES.len() + ri].metrics))
+                .collect();
+            // The knee is the highest sustainable rung (open-loop knees
+            // are monotone in practice; taking the max keeps a single
+            // noisy mid-ladder rung from faking a higher knee).
+            let knee = points.iter().filter(|p| p.sustainable).last();
+            let knee_rps = knee.map_or(0.0, |p| p.rate_rps);
+            let knee_goodput_rps = knee.map_or(0.0, |p| p.goodput_rps);
+            ServeVariant {
+                name,
+                media,
+                points,
+                knee_rps,
+                knee_goodput_rps,
+                overload: None,
+                overload_goodput_ratio: 0.0,
+            }
+        })
+        .collect();
+
+    // Phase 2: 2x-knee overload per kneed variant (no bucket — the
+    // bounded queue and deadline shedder are on their own), plus the
+    // admission-controlled overload of the best variant.
+    let mut jobs: Vec<SweepJob> = Vec::new();
+    let mut order: Vec<usize> = Vec::new();
+    for (vi, v) in variants.iter().enumerate() {
+        if v.knee_rps > 0.0 {
+            jobs.push((
+                spec("vadd"),
+                serve_cfg(v.name, v.media, 2.0 * v.knee_rps, 0.0),
+            ));
+            order.push(vi);
+        }
+    }
+    let best = variants
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.knee_rps.total_cmp(&b.1.knee_rps))
+        .map(|(i, _)| i);
+    if let Some(bi) = best.filter(|&bi| variants[bi].knee_rps > 0.0) {
+        let v = &variants[bi];
+        jobs.push((
+            spec("vadd"),
+            serve_cfg(v.name, v.media, 2.0 * v.knee_rps, v.knee_rps),
+        ));
+    }
+    let mut over = run_jobs(&jobs);
+    let bucketed = if best.map_or(false, |bi| variants[bi].knee_rps > 0.0) {
+        let r = over.pop().expect("bucketed overload job");
+        let bi = best.expect("best variant");
+        Some(point(2.0 * variants[bi].knee_rps, &r.metrics))
+    } else {
+        None
+    };
+    for (oi, &vi) in order.iter().enumerate() {
+        let v = &mut variants[vi];
+        let p = point(2.0 * v.knee_rps, &over[oi].metrics);
+        v.overload_goodput_ratio = if v.knee_goodput_rps > 0.0 {
+            p.goodput_rps / v.knee_goodput_rps
+        } else {
+            0.0
+        };
+        v.overload = Some(p);
+    }
+
+    let res = ServeSweep { variants, bucketed };
+    if print {
+        let mut t = Table::new(
+            "Serve — offered-load ladder (1 ms SLO; weight-read + KV-append requests)",
+            &["config", "offered (k rps)", "p50", "p99", "goodput (k rps)", "lost", "ok?"],
+        );
+        for v in &res.variants {
+            for p in &v.points {
+                t.rowv(vec![
+                    v.name.into(),
+                    format!("{:.0}", p.rate_rps / 1e3),
+                    format!("{:.0} µs", p.p50_us),
+                    format!("{:.0} µs", p.p99_us),
+                    format!("{:.1}", p.goodput_rps / 1e3),
+                    (p.shed + p.timed_out + p.rejected).to_string(),
+                    if p.sustainable { "y" } else { "-" }.into(),
+                ]);
+            }
+        }
+        t.print();
+        for v in &res.variants {
+            match &v.overload {
+                Some(o) => println!(
+                    "{}: knee {:.0}k rps (goodput {:.1}k); 2x-knee overload goodput {:.1}k = {:.0}% of knee, {} shed / {} timed out, queue hwm {}",
+                    v.name,
+                    v.knee_rps / 1e3,
+                    v.knee_goodput_rps / 1e3,
+                    o.goodput_rps / 1e3,
+                    100.0 * v.overload_goodput_ratio,
+                    o.shed,
+                    o.timed_out,
+                    o.queue_hwm
+                ),
+                None => println!("{}: no sustainable rung on the ladder", v.name),
+            }
+        }
+        if let Some(b) = &res.bucketed {
+            println!(
+                "admission-controlled 2x-knee: {} rejected at the bucket, goodput {:.1}k rps, p99 {:.0} µs",
+                b.rejected,
+                b.goodput_rps / 1e3,
+                b.p99_us
+            );
+        }
+    }
+    res
+}
+
+// ---------------------------------------------------------------------------
 // Headline — 2.36x over UVM, 1.36x over the commercial EP controller
 // ---------------------------------------------------------------------------
 

@@ -10,13 +10,15 @@
 //!   root port queue logic, CXL controller, EP media), with optional SR
 //!   and DS engines.
 
+use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
 
 use crate::baselines::{GdsManager, UvmManager};
 use crate::fabric::{CxlSwitch, FabricLink};
-use crate::gpu::{line_of, AccessResult, Llc, MemMap, Op, Region, Warp, LINE};
+use crate::gpu::{line_of, AccessResult, Llc, MemMap, Op, OpSource, Region, Warp, LINE};
 use crate::media::{DramModel, DramTimings, MediaKind, SsdModel, SsdParams};
 use crate::rootcomplex::{EpBackend, LoadPath, RootComplex};
+use crate::serve::FrontDoor;
 use crate::sim::{EventQueue, Steppable, Time, US};
 use crate::util::prng::Pcg32;
 use crate::workloads::{OpStream, TraceParams, WorkloadSpec};
@@ -37,6 +39,8 @@ enum Ev {
     FlushTick,
     /// Tiering epoch boundary: scan access counters, run migrations.
     TierTick,
+    /// One open-loop serving request lands at the front door.
+    RequestArrival,
 }
 
 /// Memory backend behind the system bus.
@@ -69,6 +73,13 @@ pub struct System {
     /// Second buffer for the MSHR wake path; swapped with `mshr_blocked`
     /// so neither side's capacity is ever dropped.
     wake_scratch: Vec<usize>,
+    /// Serving front door (`None` on closed-loop runs — every config
+    /// whose `ServeSpec` is inert, which keeps them bit-identical to the
+    /// pre-serve code path).
+    serve: Option<FrontDoor>,
+    /// Scratch for front-door dispatches, reused across every arrival
+    /// and completion (same no-alloc discipline as `fill_scratch`).
+    dispatch_scratch: Vec<(usize, VecDeque<Op>)>,
     /// Construction instant, for the wall-clock perf metric (the
     /// stepping API means `run()` no longer brackets the whole run).
     started: std::time::Instant,
@@ -135,12 +146,24 @@ impl System {
             seed: cfg.seed,
             ..Default::default()
         };
+        // Serving runs replace the closed-loop op streams with requests
+        // expanded by the front door; an inert spec builds no door, so
+        // the closed-loop path below is taken unchanged (bit-identity
+        // with pre-serve configs — pinned in tests/determinism.rs).
+        let serve =
+            FrontDoor::new(&cfg.serve, cfg.footprint, cfg.warps, cfg.total_ops, cfg.seed);
         // Each warp pulls ops lazily from its own stream: no up-front
         // trace materialization, so memory stays O(warps) at any op
         // budget and no generation latency precedes the first event.
         let warps: Vec<Warp> = (0..cfg.warps)
             .map(|i| {
-                Warp::from_source(i, Box::new(OpStream::new(spec, &trace_params, i)), cfg.mlp)
+                let src: Box<dyn OpSource> = if serve.is_some() {
+                    // Idle until the front door dispatches a request.
+                    Box::new(VecDeque::<Op>::new())
+                } else {
+                    Box::new(OpStream::new(spec, &trace_params, i))
+                };
+                Warp::from_source(i, src, cfg.mlp)
             })
             .collect();
 
@@ -230,6 +253,8 @@ impl System {
             mshr_blocked: Vec::new(),
             fill_scratch: Vec::new(),
             wake_scratch: Vec::new(),
+            serve,
+            dispatch_scratch: Vec::new(),
             warps,
             llc: Llc::new(cfg.llc),
             memmap,
@@ -241,12 +266,18 @@ impl System {
         })
     }
 
-    /// Seed the calendar: one `Resume` per warp plus the background
-    /// ticks. Must run once before [`System::step_one`]; [`System::run`]
-    /// calls it for you.
+    /// Seed the calendar: one `Resume` per warp (closed-loop) or the
+    /// first `RequestArrival` (serving), plus the background ticks. Must
+    /// run once before [`System::step_one`]; [`System::run`] calls it
+    /// for you.
     pub fn prime(&mut self) {
-        for w in 0..self.warps.len() {
-            self.q.push_at(0, Ev::Resume(w));
+        if let Some(fd) = &mut self.serve {
+            let gap = fd.first_gap();
+            self.q.push_at(gap, Ev::RequestArrival);
+        } else {
+            for w in 0..self.warps.len() {
+                self.q.push_at(0, Ev::Resume(w));
+            }
         }
         if self.cfg.ds_enabled {
             self.q.push_at(10 * US, Ev::FlushTick);
@@ -327,6 +358,7 @@ impl System {
                         self.q.push_in(self.cfg.tier.epoch, Ev::TierTick);
                     }
                 }
+                Ev::RequestArrival => self.serve_arrival(now),
         }
         true
     }
@@ -426,6 +458,18 @@ impl System {
             Backend::Gds(g) => self.metrics.gc_episodes = g.ssd.stats.gc_episodes,
             _ => {}
         }
+        if let Some(fd) = &self.serve {
+            let s = &fd.stats;
+            self.metrics.serve_arrivals = s.arrivals;
+            self.metrics.serve_admitted = s.admitted;
+            self.metrics.serve_rejected = s.rejected;
+            self.metrics.serve_shed = s.shed;
+            self.metrics.serve_timed_out = s.timed_out;
+            self.metrics.serve_retried = s.retried;
+            self.metrics.serve_completed = s.completed;
+            self.metrics.serve_completed_in_slo = s.completed_in_slo;
+            self.metrics.serve_queue_hwm = s.queue_hwm;
+        }
         self.metrics.wall_ns = self.started.elapsed().as_nanos();
         self.metrics
     }
@@ -438,8 +482,70 @@ impl System {
         } else if w.done && w.outstanding == 0 {
             // Already finished issuing; nothing to do.
         } else if w.peek().is_none() && w.outstanding == 0 && !w.done {
-            w.finish(now);
+            self.warp_drained(now, warp);
+        }
+    }
+
+    /// A warp ran out of ops with no loads in flight. Closed-loop runs
+    /// retire it; serving runs credit the completed request, charge its
+    /// end-to-end latency, and backfill idle warps from the admission
+    /// queue.
+    fn warp_drained(&mut self, now: Time, warp: usize) {
+        if self.serve.is_none() {
+            self.warps[warp].finish(now);
             self.active_warps -= 1;
+            return;
+        }
+        let mut out = std::mem::take(&mut self.dispatch_scratch);
+        if let Some(fd) = &mut self.serve {
+            // `None` = stale wakeup on a warp holding no request.
+            if let Some((arrived, _deadline)) = fd.on_warp_drained(now, warp, &mut out) {
+                let lat = (now - arrived) as f64;
+                self.metrics.req_latency.add(lat);
+                self.metrics.req_pctl.add(lat);
+            }
+        }
+        self.launch(now, &mut out);
+        self.dispatch_scratch = out;
+        self.maybe_retire_serve(now);
+    }
+
+    /// One open-loop arrival: run it through the front door, hand any
+    /// dispatched work to warps, and schedule the next arrival.
+    fn serve_arrival(&mut self, now: Time) {
+        let mut out = std::mem::take(&mut self.dispatch_scratch);
+        let next = match &mut self.serve {
+            Some(fd) => fd.on_arrival(now, &mut out),
+            None => None,
+        };
+        self.launch(now, &mut out);
+        self.dispatch_scratch = out;
+        if let Some(gap) = next {
+            self.q.push_in(gap, Ev::RequestArrival);
+        }
+        self.maybe_retire_serve(now);
+    }
+
+    /// Hand front-door dispatches to their warps and schedule them.
+    fn launch(&mut self, now: Time, out: &mut Vec<(usize, VecDeque<Op>)>) {
+        for (w, ops) in out.drain(..) {
+            self.warps[w].refill(Box::new(ops));
+            self.q.push_at(now, Ev::Resume(w));
+        }
+    }
+
+    /// Once the front door is fully drained (every request emitted and
+    /// accounted for), retire the idle warps so `finished()` flips and
+    /// the background ticks stop re-arming.
+    fn maybe_retire_serve(&mut self, now: Time) {
+        let done = self.serve.as_ref().map_or(false, |fd| fd.drained());
+        if done && self.active_warps > 0 {
+            for w in &mut self.warps {
+                if !w.done {
+                    w.finish(now);
+                }
+            }
+            self.active_warps = 0;
         }
     }
 
@@ -452,8 +558,7 @@ impl System {
             let Some(&op) = self.warps[w].peek() else {
                 // Stream exhausted: finish once all loads returned.
                 if self.warps[w].outstanding == 0 {
-                    self.warps[w].finish(now);
-                    self.active_warps -= 1;
+                    self.warp_drained(now, w);
                 } else {
                     self.warps[w].waiting = true;
                 }
@@ -892,6 +997,60 @@ mod tests {
         assert_eq!(whole.exec_time, stepped.exec_time);
         assert_eq!(whole.events, stepped.events);
         assert_eq!(whole.expander_loads, stepped.expander_loads);
+    }
+
+    #[test]
+    fn serve_run_completes_and_balances_the_books() {
+        let m = System::new(spec("vadd"), &tiny("cxl-serve", MediaKind::Ddr5)).run();
+        // 8k ops / 80 ops-per-request = 100 requests.
+        assert_eq!(m.serve_arrivals, 100);
+        assert_eq!(m.serve_arrivals, m.serve_admitted + m.serve_rejected);
+        assert_eq!(
+            m.serve_admitted,
+            m.serve_completed + m.serve_shed + m.serve_timed_out,
+            "front-door conservation after drain"
+        );
+        assert_eq!(m.req_latency.count(), m.serve_completed);
+        assert!(m.serve_completed > 0);
+        assert!(m.expander_loads > 0, "requests must reach the expander");
+        assert!(m.exec_time > 0);
+        assert!(m.request_p99_us() > 0.0);
+    }
+
+    #[test]
+    fn serve_runs_are_deterministic() {
+        let c = tiny("cxl-serve", MediaKind::Ddr5);
+        let a = System::new(spec("vadd"), &c).run();
+        let b = System::new(spec("vadd"), &c).run();
+        assert_eq!(a.exec_time, b.exec_time);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.serve_completed, b.serve_completed);
+        assert_eq!(a.req_latency.mean().to_bits(), b.req_latency.mean().to_bits());
+    }
+
+    #[test]
+    fn serve_overload_sheds_instead_of_collapsing() {
+        let mut c = tiny("cxl-serve", MediaKind::Ddr5);
+        // Offer ~100x what two slow warps can serve, under a tight SLO.
+        c.warps = 2;
+        c.serve.rate_rps = 5e6;
+        c.serve.slo = 20 * US;
+        c.serve.queue_cap = 8;
+        let m = System::new(spec("vadd"), &c).run();
+        assert!(
+            m.serve_shed + m.serve_timed_out > 0,
+            "overload must exit via shed/timeout: {m:?}"
+        );
+        assert!(m.serve_queue_hwm <= 8, "queue must stay bounded");
+        assert_eq!(m.serve_admitted, m.serve_completed + m.serve_shed + m.serve_timed_out);
+    }
+
+    #[test]
+    fn pooled_serve_config_runs_through_the_fabric() {
+        let m = System::new(spec("vadd"), &tiny("cxl-pool-serve", MediaKind::Ddr5)).run();
+        assert!(m.serve_completed > 0);
+        assert!(m.expander_loads > 0);
+        assert!(m.ingress_hwm >= 1, "QoS pool must track its ingress queue");
     }
 
     #[test]

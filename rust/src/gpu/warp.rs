@@ -148,6 +148,18 @@ impl Warp {
         self.done = true;
         self.stats.finish = now;
     }
+
+    /// Hand the warp a fresh op stream (the serving front door reuses
+    /// idle warps across requests). Only legal between requests: the
+    /// previous source must be drained with no loads outstanding, and
+    /// the warp must not have been retired via [`Warp::finish`].
+    pub fn refill(&mut self, source: Box<dyn OpSource>) {
+        debug_assert_eq!(self.outstanding, 0, "refill with loads in flight");
+        debug_assert!(!self.done, "refill on a finished warp");
+        self.source = source;
+        self.peeked = None;
+        self.waiting = false;
+    }
 }
 
 #[cfg(test)]
@@ -233,6 +245,27 @@ mod tests {
         assert!(!w.waiting);
         w.issue_load();
         assert!(!w.complete_load(), "non-waiting warp needs no wake");
+    }
+
+    #[test]
+    fn refill_restarts_a_drained_warp() {
+        let mut w = Warp::new(0, vec![Op::Load { addr: 64 }], 2);
+        assert_eq!(w.pop(), Some(Op::Load { addr: 64 }));
+        assert_eq!(w.peek(), None, "first stream drained");
+        w.waiting = true;
+        w.refill(Box::new(VecDeque::from(vec![Op::Store { addr: 128 }])));
+        assert!(!w.waiting, "refill clears the stall flag");
+        assert_eq!(w.peek(), Some(&Op::Store { addr: 128 }));
+        assert_eq!(w.remaining(), 1);
+    }
+
+    #[test]
+    fn refill_discards_stale_lookahead() {
+        let mut w = Warp::new(0, vec![Op::Load { addr: 64 }, Op::Load { addr: 192 }], 2);
+        assert_eq!(w.peek(), Some(&Op::Load { addr: 64 }), "lookahead filled");
+        w.refill(Box::new(VecDeque::from(vec![Op::Compute { dur: NS }])));
+        assert_eq!(w.pop(), Some(Op::Compute { dur: NS }), "old lookahead dropped");
+        assert_eq!(w.pop(), None);
     }
 
     #[test]

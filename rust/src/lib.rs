@@ -34,6 +34,7 @@ pub mod rootcomplex;
 /// simulator and coordinator never depend on it.
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod workloads;

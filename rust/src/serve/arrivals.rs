@@ -1,0 +1,166 @@
+//! Deterministic open-loop arrival processes for the serving front door.
+//!
+//! Open-loop means the generator decides inter-arrival gaps independently
+//! of service state — requests keep landing whether or not the backend
+//! keeps up, which is what exposes the knee and the overload regime
+//! (closed-loop clients self-throttle and can never push past saturation).
+//!
+//! Three processes cover the shapes serving traffic actually takes:
+//! Poisson (memoryless steady state), MMPP bursts (a two-state Markov-
+//! modulated Poisson process — flash crowds), and a diurnal ramp (slow
+//! rate swing across the run). All draws come from a private [`Pcg32`]
+//! stream, so arrival sequences are bit-replayable from the seed and
+//! adding serving to a config cannot perturb any other subsystem's RNG.
+
+use crate::sim::Time;
+use crate::util::prng::Pcg32;
+
+/// Picoseconds per second: converts requests/s to a mean gap in sim time.
+pub const PS_PER_SEC: f64 = 1e12;
+
+/// PCG stream id for arrival draws (distinct from the system stream
+/// `0xD15C` and the RAS stream `0xFA17`).
+pub const ARRIVAL_STREAM: u64 = 0x5EAF;
+
+/// Arrival process taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalKind {
+    /// Memoryless: i.i.d. exponential gaps at the configured mean rate.
+    Poisson,
+    /// Two-state Markov-modulated Poisson process: a quiet state at the
+    /// base rate and a burst state at `burst_mult` times it. State flips
+    /// are evaluated once per arrival: quiet enters the burst with
+    /// probability `enter`, the burst exits with probability `exit`, so
+    /// bursts last `1/exit` arrivals on average. Bursts ride *on top of*
+    /// the base rate — the long-run mean rate is above the configured
+    /// one, which is the point: the knee must survive flash crowds.
+    Mmpp { burst_mult: f64, enter: f64, exit: f64 },
+    /// Diurnal ramp: the rate is modulated by a triangle wave of the
+    /// given `period`, swinging by `±amp` around the base rate (floored
+    /// at 5 % so the trough never stalls the run). A triangle (not a
+    /// sinusoid) keeps the modulation pure arithmetic — bit-identical
+    /// across platforms, where `sin` would be at libm's mercy.
+    Diurnal { amp: f64, period: Time },
+}
+
+/// Stateful gap generator for one arrival process.
+#[derive(Debug, Clone)]
+pub struct ArrivalGen {
+    kind: ArrivalKind,
+    /// Mean inter-arrival gap at the base rate, in picoseconds.
+    mean_gap: f64,
+    rng: Pcg32,
+    /// MMPP state: currently inside a burst.
+    burst: bool,
+}
+
+impl ArrivalGen {
+    /// Generator for `rate_rps` requests per second (must be > 0).
+    pub fn new(kind: ArrivalKind, rate_rps: f64, seed: u64) -> ArrivalGen {
+        assert!(rate_rps > 0.0, "arrival rate must be positive, got {rate_rps}");
+        ArrivalGen {
+            kind,
+            mean_gap: PS_PER_SEC / rate_rps,
+            rng: Pcg32::new(seed, ARRIVAL_STREAM),
+            burst: false,
+        }
+    }
+
+    /// Draw the gap to the next arrival, given the current sim time (the
+    /// diurnal process needs `now` to locate itself on the wave). Gaps
+    /// are clamped to ≥ 1 ps so consecutive arrivals always advance time.
+    pub fn next_gap(&mut self, now: Time) -> Time {
+        let mean = match self.kind {
+            ArrivalKind::Poisson => self.mean_gap,
+            ArrivalKind::Mmpp { burst_mult, enter, exit } => {
+                if self.burst {
+                    if self.rng.chance(exit) {
+                        self.burst = false;
+                    }
+                } else if self.rng.chance(enter) {
+                    self.burst = true;
+                }
+                if self.burst {
+                    self.mean_gap / burst_mult.max(1.0)
+                } else {
+                    self.mean_gap
+                }
+            }
+            ArrivalKind::Diurnal { amp, period } => {
+                debug_assert!(period > 0);
+                let phase = (now % period) as f64 / period as f64;
+                // Triangle in [-1, 1]: peak at phase 0.5, trough at 0/1.
+                let tri = 1.0 - 4.0 * (phase - 0.5).abs();
+                self.mean_gap / (1.0 + amp * tri).max(0.05)
+            }
+        };
+        (self.rng.exponential(mean) as u64).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{MS, US};
+
+    #[test]
+    fn poisson_gaps_replay_bit_for_bit() {
+        let mut a = ArrivalGen::new(ArrivalKind::Poisson, 1e6, 42);
+        let mut b = ArrivalGen::new(ArrivalKind::Poisson, 1e6, 42);
+        let mut now = 0;
+        for _ in 0..10_000 {
+            let (ga, gb) = (a.next_gap(now), b.next_gap(now));
+            assert_eq!(ga, gb);
+            now += ga;
+        }
+    }
+
+    #[test]
+    fn poisson_empirical_rate_matches() {
+        // 1M rps → mean gap 1 µs. 200k draws pin the mean within 1 %.
+        let mut g = ArrivalGen::new(ArrivalKind::Poisson, 1e6, 7);
+        let n = 200_000u64;
+        let total: Time = (0..n).map(|_| g.next_gap(0)).sum();
+        let mean = total as f64 / n as f64;
+        assert!((mean - US as f64).abs() / US as f64 < 0.01, "mean gap {mean} ps");
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson_but_visits_both_states() {
+        // enter == exit → the chain spends half its arrivals in the
+        // burst state, whose gaps are 8x shorter. The gap mixture's true
+        // squared coefficient of variation is ~2.21, comfortably above
+        // the exponential's 1 (sampling noise at 100k draws is ~0.03).
+        let kind = ArrivalKind::Mmpp { burst_mult: 8.0, enter: 0.05, exit: 0.05 };
+        let mut g = ArrivalGen::new(kind, 1e6, 9);
+        let gaps: Vec<f64> = (0..100_000).map(|_| g.next_gap(0) as f64).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        // Bursts ride on top of the base rate: long-run mean gap shrinks.
+        assert!(mean < US as f64, "mmpp mean gap {mean} not below base");
+        // Squared coefficient of variation well above the exponential's 1.
+        let var = gaps.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / gaps.len() as f64;
+        let scv = var / (mean * mean);
+        assert!(scv > 1.5, "mmpp scv {scv} not burstier than Poisson");
+    }
+
+    #[test]
+    fn diurnal_peak_outpaces_trough() {
+        let kind = ArrivalKind::Diurnal { amp: 0.8, period: 10 * MS };
+        let mut g = ArrivalGen::new(kind, 1e6, 3);
+        let at = |g: &mut ArrivalGen, t: Time| -> f64 {
+            (0..20_000).map(|_| g.next_gap(t) as f64).sum::<f64>() / 20_000.0
+        };
+        let peak = at(&mut g, 5 * MS); // phase 0.5
+        let trough = at(&mut g, 0); // phase 0
+        assert!(peak < trough * 0.8, "peak gap {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn gaps_always_advance_time() {
+        // Absurd rate: exponential draws round to 0 ps, clamp must hold.
+        let mut g = ArrivalGen::new(ArrivalKind::Poisson, 1e13, 1);
+        for _ in 0..1000 {
+            assert!(g.next_gap(0) >= 1);
+        }
+    }
+}

@@ -1,0 +1,550 @@
+//! Serving front door: bounded admission queue, token-bucket admission
+//! control, per-request deadlines with bounded timeout-and-retry, and
+//! load shedding that drops oldest-beyond-deadline work first.
+//!
+//! The front door sits between the open-loop arrival process
+//! ([`super::arrivals::ArrivalGen`]) and the warp scheduler. Each
+//! admitted request expands into a short burst of warp work — a
+//! weight-read phase of loads followed by a KV-append phase of stores,
+//! generated from the existing workload [`Pattern`]s — so service time
+//! is charged through the real SR/DS/cache/tiering/pool path, not a
+//! synthetic service-time distribution.
+//!
+//! Request lifecycle (DESIGN.md §16):
+//!
+//! ```text
+//! arrival ──token bucket──▶ admitted ──queue──▶ dispatched ──▶ completed
+//!     │ no token                │ cap reached       │ expired
+//!     ▼                         ▼                   ▼
+//!  rejected                   shed          retried (≤ max) / timed_out
+//! ```
+//!
+//! Overload therefore degrades by design: excess work exits through the
+//! `rejected`/`shed`/`timed_out` counters while the queue stays bounded,
+//! instead of collapsing into unbounded queue growth.
+
+use std::collections::VecDeque;
+
+use crate::gpu::warp::Op;
+use crate::sim::{Time, MS};
+use crate::util::prng::Pcg32;
+use crate::workloads::patterns::{Pattern, PatternKind};
+
+use super::arrivals::{ArrivalGen, ArrivalKind, PS_PER_SEC};
+
+/// PCG stream id for request expansion (addresses of the weight-read and
+/// KV-append phases). Distinct from the arrival stream so reordering
+/// dispatches cannot perturb arrival times.
+pub const EXPAND_STREAM: u64 = 0x5E4E;
+
+/// Serving-layer configuration. `Default` is inert: a config carrying a
+/// default `ServeSpec` builds no front door and is bit-identical to the
+/// same config without one (the determinism suite pins this).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeSpec {
+    /// Master switch; `false` (default) leaves the system closed-loop.
+    pub enabled: bool,
+    /// Arrival process.
+    pub kind: ArrivalKind,
+    /// Offered load in requests per second; `<= 0` is inert.
+    pub rate_rps: f64,
+    /// Total requests to emit; `0` derives `total_ops / ops-per-request`
+    /// so serve runs consume the same op budget as closed-loop runs.
+    pub requests: u64,
+    /// Bounded admission-queue capacity (requests beyond it shed work).
+    pub queue_cap: usize,
+    /// Per-request deadline (SLO) measured from arrival.
+    pub slo: Time,
+    /// Retries granted to a request found expired at dispatch time.
+    pub max_retries: u32,
+    /// Token-bucket refill rate in requests per second; `<= 0` disables
+    /// the bucket (every arrival is admitted to the queue).
+    pub bucket_rps: f64,
+    /// Token-bucket burst capacity.
+    pub bucket_burst: f64,
+    /// Weight-read phase: loads per request.
+    pub weight_loads: u32,
+    /// KV-append phase: stores per request.
+    pub kv_stores: u32,
+    /// Address pattern both phases draw from.
+    pub pattern: PatternKind,
+}
+
+impl Default for ServeSpec {
+    fn default() -> ServeSpec {
+        ServeSpec {
+            enabled: false,
+            kind: ArrivalKind::Poisson,
+            rate_rps: 0.0,
+            requests: 0,
+            queue_cap: 64,
+            slo: MS,
+            max_retries: 2,
+            bucket_rps: 0.0,
+            bucket_burst: 32.0,
+            // 64 weight reads + 16 KV appends ≈ a decode step touching
+            // 4 KiB of weights and 1 KiB of KV cache per request.
+            weight_loads: 64,
+            kv_stores: 16,
+            pattern: PatternKind::HotCold { hot_permille: 850, hot_pages: 64 },
+        }
+    }
+}
+
+impl ServeSpec {
+    /// The armed spec the `cxl-serve` configs carry: Poisson arrivals at
+    /// a rate comfortably below the DDR5 expander knee, 1 ms SLO.
+    pub fn representative() -> ServeSpec {
+        ServeSpec { enabled: true, rate_rps: 200_000.0, ..ServeSpec::default() }
+    }
+
+    /// True when the spec cannot generate any request: disabled, zero
+    /// rate, or requests that would expand to zero ops. An inert spec
+    /// builds no [`FrontDoor`], so the run is bit-identical to the same
+    /// config with serving absent.
+    pub fn is_inert(&self) -> bool {
+        !self.enabled || self.rate_rps <= 0.0 || self.weight_loads + self.kv_stores == 0
+    }
+}
+
+/// Counters the coordinator copies into `RunMetrics` (all fingerprinted).
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Open-loop arrivals generated.
+    pub arrivals: u64,
+    /// Arrivals that passed the token bucket.
+    pub admitted: u64,
+    /// Arrivals refused by the token bucket.
+    pub rejected: u64,
+    /// Queued requests dropped to make room (oldest-beyond-deadline
+    /// first, then oldest).
+    pub shed: u64,
+    /// Requests abandoned after exhausting their retry budget.
+    pub timed_out: u64,
+    /// Deadline extensions granted (a request can contribute several).
+    pub retried: u64,
+    /// Requests whose warp work ran to completion.
+    pub completed: u64,
+    /// Completions that beat their (possibly extended) deadline.
+    pub completed_in_slo: u64,
+    /// Admission-queue high-water mark.
+    pub queue_hwm: u64,
+}
+
+/// One admitted request waiting for, or occupying, a warp.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    arrived: Time,
+    deadline: Time,
+    retries: u32,
+}
+
+/// The serving front door (see module docs for the state machine).
+#[derive(Debug)]
+pub struct FrontDoor {
+    spec: ServeSpec,
+    gen: ArrivalGen,
+    rng: Pcg32,
+    /// Per-warp address generators: requests dispatched to warp `w` draw
+    /// from `pats[w]`, so the fleet covers the footprint the same way a
+    /// closed-loop run's warps do.
+    pats: Vec<Pattern>,
+    queue: VecDeque<Pending>,
+    /// `running[w]` is the request currently occupying warp `w`.
+    running: Vec<Option<Pending>>,
+    tokens: f64,
+    last_refill: Time,
+    /// Requests the run will emit / has emitted.
+    total: u64,
+    emitted: u64,
+    in_flight: usize,
+    pub stats: ServeStats,
+}
+
+impl FrontDoor {
+    /// Build the front door, or `None` when the spec is inert (the
+    /// coordinator then takes the exact closed-loop code path).
+    pub fn new(
+        spec: &ServeSpec,
+        footprint: u64,
+        warps: usize,
+        total_ops: u64,
+        seed: u64,
+    ) -> Option<FrontDoor> {
+        if spec.is_inert() {
+            return None;
+        }
+        assert!(warps > 0, "serve needs at least one warp");
+        let mut rng = Pcg32::new(seed, EXPAND_STREAM);
+        let pats = (0..warps)
+            .map(|w| Pattern::new(spec.pattern, footprint, w, warps, &mut rng))
+            .collect();
+        let ops_per_req = (spec.weight_loads + spec.kv_stores) as u64;
+        let total =
+            if spec.requests > 0 { spec.requests } else { (total_ops / ops_per_req).max(1) };
+        Some(FrontDoor {
+            spec: *spec,
+            gen: ArrivalGen::new(spec.kind, spec.rate_rps, seed),
+            rng,
+            pats,
+            queue: VecDeque::new(),
+            running: (0..warps).map(|_| None).collect(),
+            tokens: spec.bucket_burst,
+            last_refill: 0,
+            total,
+            emitted: 0,
+            in_flight: 0,
+            stats: ServeStats::default(),
+        })
+    }
+
+    /// Gap to the first arrival (the coordinator schedules the first
+    /// `RequestArrival` event at this offset).
+    pub fn first_gap(&mut self) -> Time {
+        self.gen.next_gap(0)
+    }
+
+    /// Process one arrival at `now`. Dispatched work is appended to
+    /// `out` as `(warp, ops)` pairs; returns the gap to the next arrival
+    /// or `None` once the emission budget is spent.
+    pub fn on_arrival(&mut self, now: Time, out: &mut Vec<(usize, VecDeque<Op>)>) -> Option<Time> {
+        self.emitted += 1;
+        self.stats.arrivals += 1;
+        if self.take_token(now) {
+            self.stats.admitted += 1;
+            if self.queue.len() >= self.spec.queue_cap.max(1) {
+                // Shed the oldest request already past its deadline —
+                // it is the least likely to still produce goodput. If
+                // none has expired yet, shed the oldest outright.
+                let victim =
+                    self.queue.iter().position(|p| p.deadline < now).unwrap_or(0);
+                self.queue.remove(victim);
+                self.stats.shed += 1;
+            }
+            self.queue.push_back(Pending {
+                arrived: now,
+                deadline: now + self.spec.slo,
+                retries: 0,
+            });
+            self.stats.queue_hwm = self.stats.queue_hwm.max(self.queue.len() as u64);
+            self.dispatch(now, out);
+        } else {
+            self.stats.rejected += 1;
+        }
+        if self.emitted < self.total {
+            Some(self.gen.next_gap(now))
+        } else {
+            None
+        }
+    }
+
+    /// Token-bucket admission check. A disabled bucket admits everything.
+    fn take_token(&mut self, now: Time) -> bool {
+        if self.spec.bucket_rps <= 0.0 {
+            return true;
+        }
+        let dt = now.saturating_sub(self.last_refill) as f64;
+        self.last_refill = now;
+        self.tokens =
+            (self.tokens + dt * self.spec.bucket_rps / PS_PER_SEC).min(self.spec.bucket_burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Move queued requests onto idle warps. A request found expired at
+    /// dispatch gets a retry with an exponentially-backed-off deadline
+    /// (the §15 RAS timeout idiom: `slo << retries`) until its retry
+    /// budget runs out, then counts as timed out.
+    fn dispatch(&mut self, now: Time, out: &mut Vec<(usize, VecDeque<Op>)>) {
+        while !self.queue.is_empty() {
+            let Some(w) = self.running.iter().position(|r| r.is_none()) else { return };
+            let mut p = self.queue.pop_front().expect("queue non-empty");
+            if p.deadline < now {
+                if p.retries < self.spec.max_retries {
+                    p.retries += 1;
+                    p.deadline = now + (self.spec.slo << p.retries.min(20));
+                    self.stats.retried += 1;
+                    self.queue.push_back(p);
+                    continue;
+                }
+                self.stats.timed_out += 1;
+                continue;
+            }
+            let ops = self.expand(w);
+            self.running[w] = Some(p);
+            self.in_flight += 1;
+            out.push((w, ops));
+        }
+    }
+
+    /// Expand a request into warp work: the weight-read loads, then the
+    /// KV-append stores.
+    fn expand(&mut self, w: usize) -> VecDeque<Op> {
+        let n = (self.spec.weight_loads + self.spec.kv_stores) as usize;
+        let mut ops = VecDeque::with_capacity(n);
+        for _ in 0..self.spec.weight_loads {
+            ops.push_back(Op::Load { addr: self.pats[w].next_load(&mut self.rng) });
+        }
+        for _ in 0..self.spec.kv_stores {
+            ops.push_back(Op::Store { addr: self.pats[w].next_store(&mut self.rng) });
+        }
+        ops
+    }
+
+    /// Warp `warp` finished its request's ops: record the completion and
+    /// backfill idle warps from the queue. Returns `(arrived, deadline)`
+    /// of the completed request so the caller can charge end-to-end
+    /// latency, or `None` if the warp held no request (stale wakeup).
+    pub fn on_warp_drained(
+        &mut self,
+        now: Time,
+        warp: usize,
+        out: &mut Vec<(usize, VecDeque<Op>)>,
+    ) -> Option<(Time, Time)> {
+        let p = self.running[warp].take()?;
+        self.in_flight -= 1;
+        self.stats.completed += 1;
+        if now <= p.deadline {
+            self.stats.completed_in_slo += 1;
+        }
+        self.dispatch(now, out);
+        Some((p.arrived, p.deadline))
+    }
+
+    /// All requests emitted and none queued or in flight: the run is
+    /// over (the coordinator retires the remaining idle warps).
+    pub fn drained(&self) -> bool {
+        self.emitted >= self.total && self.queue.is_empty() && self.in_flight == 0
+    }
+
+    /// Requests currently occupying warps.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Requests currently queued.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::US;
+
+    fn armed(rate: f64) -> ServeSpec {
+        ServeSpec { enabled: true, rate_rps: rate, ..ServeSpec::default() }
+    }
+
+    fn door(spec: &ServeSpec, warps: usize) -> FrontDoor {
+        FrontDoor::new(spec, 32 << 20, warps, 300_000, 0xC11A).expect("armed spec")
+    }
+
+    #[test]
+    fn inert_specs_build_no_front_door() {
+        let fp = 32 << 20;
+        assert!(FrontDoor::new(&ServeSpec::default(), fp, 4, 1000, 1).is_none());
+        let zero_rate = ServeSpec { rate_rps: 0.0, ..armed(1.0) };
+        assert!(FrontDoor::new(&zero_rate, fp, 4, 1000, 1).is_none());
+        let no_ops = ServeSpec { weight_loads: 0, kv_stores: 0, ..armed(1e6) };
+        assert!(FrontDoor::new(&no_ops, fp, 4, 1000, 1).is_none());
+        assert!(FrontDoor::new(&armed(1e6), fp, 4, 1000, 1).is_some());
+    }
+
+    #[test]
+    fn request_budget_derives_from_total_ops() {
+        // 300k ops / 80 ops-per-request = 3750 requests.
+        let fd = door(&armed(1e6), 4);
+        assert_eq!(fd.total, 3750);
+        let pinned = ServeSpec { requests: 17, ..armed(1e6) };
+        assert_eq!(door(&pinned, 4).total, 17);
+    }
+
+    #[test]
+    fn arrivals_replay_bit_for_bit() {
+        let spec = armed(5e5);
+        let (mut a, mut b) = (door(&spec, 2), door(&spec, 2));
+        let mut out = Vec::new();
+        let (mut ta, mut tb) = (a.first_gap(), b.first_gap());
+        assert_eq!(ta, tb);
+        for _ in 0..200 {
+            let ga = a.on_arrival(ta, &mut out);
+            out.clear();
+            let gb = b.on_arrival(tb, &mut out);
+            out.clear();
+            assert_eq!(ga, gb);
+            match ga {
+                Some(g) => {
+                    ta += g;
+                    tb += g;
+                }
+                None => break,
+            }
+        }
+        assert_eq!(a.stats.arrivals, b.stats.arrivals);
+    }
+
+    #[test]
+    fn dispatch_fills_idle_warps_and_expands_both_phases() {
+        let mut fd = door(&armed(1e6), 2);
+        let mut out = Vec::new();
+        fd.on_arrival(10, &mut out);
+        assert_eq!(out.len(), 1);
+        let (w, ops) = &out[0];
+        assert_eq!(*w, 0);
+        assert_eq!(ops.len(), (64 + 16) as usize);
+        let loads = ops.iter().filter(|o| matches!(o, Op::Load { .. })).count();
+        assert_eq!(loads, 64, "weight-read phase first");
+        assert!(matches!(ops[79], Op::Store { .. }), "KV-append phase last");
+        assert_eq!(fd.in_flight(), 1);
+        // Second and third arrivals: warp 1, then queued (no idle warp).
+        out.clear();
+        fd.on_arrival(20, &mut out);
+        assert_eq!(out[0].0, 1);
+        out.clear();
+        fd.on_arrival(30, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(fd.queued(), 1);
+    }
+
+    #[test]
+    fn completion_backfills_from_the_queue_and_reports_latency_pair() {
+        let mut fd = door(&armed(1e6), 1);
+        let mut out = Vec::new();
+        fd.on_arrival(10, &mut out);
+        out.clear();
+        fd.on_arrival(20, &mut out);
+        assert!(out.is_empty());
+        let (arrived, deadline) = fd.on_warp_drained(500, 0, &mut out).expect("held a request");
+        assert_eq!(arrived, 10);
+        assert_eq!(deadline, 10 + MS);
+        assert_eq!(out.len(), 1, "queued request backfills the warp");
+        assert_eq!(fd.stats.completed, 1);
+        assert_eq!(fd.stats.completed_in_slo, 1);
+        // Stale wakeup on an idle warp is a no-op.
+        out.clear();
+        fd.on_warp_drained(600, 0, &mut out);
+        assert!(fd.on_warp_drained(700, 0, &mut out).is_none());
+        assert_eq!(fd.stats.completed, 2);
+    }
+
+    #[test]
+    fn full_queue_sheds_expired_first_then_oldest() {
+        let spec = ServeSpec { queue_cap: 2, slo: 100 * US, ..armed(1e6) };
+        let mut fd = door(&spec, 1);
+        let mut out = Vec::new();
+        fd.on_arrival(0, &mut out); // occupies the only warp
+        fd.on_arrival(1, &mut out); // queued, deadline 1 + 100µs
+        fd.on_arrival(2, &mut out); // queued, deadline 2 + 100µs
+        out.clear();
+        // Queue full; the queued entries are now expired → shed the
+        // oldest expired one each time.
+        fd.on_arrival(200 * US, &mut out);
+        assert_eq!(fd.stats.shed, 1);
+        assert_eq!(fd.queued(), 2);
+        fd.on_arrival(200 * US + 10, &mut out);
+        assert_eq!(fd.stats.shed, 2);
+        assert_eq!(fd.queued(), 2);
+        // Queue now holds only fresh entries; nothing expired → the
+        // oldest goes outright.
+        fd.on_arrival(200 * US + 20, &mut out);
+        assert_eq!(fd.stats.shed, 3);
+        assert_eq!(fd.queued(), 2);
+    }
+
+    #[test]
+    fn expired_dispatch_retries_with_backoff_then_times_out() {
+        let spec =
+            ServeSpec { queue_cap: 64, slo: 10 * US, max_retries: 1, ..armed(1e6) };
+        let mut fd = door(&spec, 1);
+        let mut out = Vec::new();
+        fd.on_arrival(0, &mut out); // A occupies the only warp
+        fd.on_arrival(1, &mut out); // B queued, deadline 1 + 10 µs
+        fd.on_arrival(2, &mut out); // C queued, deadline 2 + 10 µs
+        out.clear();
+        // A drains long after both queued deadlines: B and C each get
+        // their retry (deadline now + slo<<1); B takes the freed warp, C
+        // stays queued behind it.
+        let drain = 50 * US;
+        fd.on_warp_drained(drain, 0, &mut out);
+        assert_eq!(fd.stats.retried, 2);
+        assert_eq!(out.len(), 1, "retried request redispatches");
+        assert_eq!(fd.running[0].expect("occupied").deadline, drain + (10 * US << 1));
+        assert_eq!(fd.queued(), 1);
+        // B drains past C's extended deadline too; C's retry budget is
+        // spent, so it dies instead of dispatching.
+        out.clear();
+        fd.on_warp_drained(drain + 500 * US, 0, &mut out);
+        assert_eq!(fd.stats.timed_out, 1);
+        assert!(out.is_empty());
+        assert_eq!(fd.queued(), 0);
+    }
+
+    #[test]
+    fn token_bucket_rejects_past_burst_and_refills_over_time() {
+        let spec = ServeSpec {
+            bucket_rps: 1e6, // one token per µs
+            bucket_burst: 2.0,
+            queue_cap: 1024,
+            ..armed(1e6)
+        };
+        let mut fd = door(&spec, 1);
+        let mut out = Vec::new();
+        // Burst of 4 at t≈0: two tokens, then rejections.
+        for t in 0..4 {
+            fd.on_arrival(t, &mut out);
+        }
+        assert_eq!(fd.stats.admitted, 2);
+        assert_eq!(fd.stats.rejected, 2);
+        // 3 µs later the bucket refilled (capped at burst=2): admits again.
+        fd.on_arrival(3 * US, &mut out);
+        assert_eq!(fd.stats.admitted, 3);
+    }
+
+    #[test]
+    fn conservation_holds_under_synthetic_overload() {
+        // One slow warp, high rate, tight queue: most work sheds or
+        // times out, and the books must still balance.
+        let spec = ServeSpec {
+            queue_cap: 4,
+            slo: 50 * US,
+            max_retries: 1,
+            ..armed(2e6)
+        };
+        let mut fd = door(&spec, 2);
+        let mut out = Vec::new();
+        let mut now = fd.first_gap();
+        let mut drain_at = 100 * US; // a warp drains every 100 µs
+        for _ in 0..5_000 {
+            if now >= drain_at {
+                let w = (drain_at / (100 * US)) as usize % 2;
+                fd.on_warp_drained(drain_at, w, &mut out);
+                out.clear();
+                drain_at += 100 * US;
+            }
+            let Some(gap) = fd.on_arrival(now, &mut out) else { break };
+            out.clear();
+            now += gap;
+        }
+        let s = &fd.stats;
+        assert_eq!(s.arrivals, s.admitted + s.rejected);
+        assert_eq!(
+            s.admitted,
+            s.completed
+                + s.shed
+                + s.timed_out
+                + fd.in_flight() as u64
+                + fd.queued() as u64,
+            "conservation: {s:?} in_flight={} queued={}",
+            fd.in_flight(),
+            fd.queued()
+        );
+        assert!(s.shed + s.timed_out > 0, "overload must shed or time out");
+        assert!(s.queue_hwm <= 4);
+    }
+}

@@ -1,0 +1,10 @@
+//! Online serving layer (DESIGN.md §16): open-loop arrival processes
+//! plus an admission-controlled front door that turns requests into warp
+//! work, so every config can be asked "what request rate do you sustain
+//! at an SLO, and how do you fail past it?".
+
+pub mod arrivals;
+pub mod frontdoor;
+
+pub use arrivals::{ArrivalGen, ArrivalKind};
+pub use frontdoor::{FrontDoor, ServeSpec, ServeStats};

@@ -71,6 +71,23 @@ fn fingerprint(m: &RunMetrics) -> Vec<u64> {
         m.ras_timeouts,
         m.ras_failovers,
         m.ras_dirty_rescued_bytes,
+        // Serving front-door counters (DESIGN.md §16): arrivals, the
+        // admission verdicts and the request-latency accumulator are part
+        // of the deterministic surface (zero for closed-loop configs —
+        // which is what makes the zero-rate identity test below
+        // meaningful).
+        m.serve_arrivals,
+        m.serve_admitted,
+        m.serve_rejected,
+        m.serve_shed,
+        m.serve_timed_out,
+        m.serve_retried,
+        m.serve_completed,
+        m.serve_completed_in_slo,
+        m.serve_queue_hwm,
+        m.req_latency.count(),
+        m.req_latency.mean().to_bits(),
+        m.req_latency.max().to_bits(),
     ]
 }
 
@@ -101,6 +118,11 @@ fn repeated_runs_are_bit_identical() {
         // RAS fault injection: the forked fault sub-streams, retry legs
         // and containment waits must replay bit-for-bit too.
         ("cxl-ras", MediaKind::Znand, "bfs"),
+        // Serving front door: open-loop arrival draws, admission
+        // decisions and request expansions must replay bit-for-bit,
+        // direct and pooled.
+        ("cxl-serve", MediaKind::Ddr5, "vadd"),
+        ("cxl-pool-serve", MediaKind::Znand, "bfs"),
     ] {
         let cfg = small(name, media);
         let a = System::new(spec(wl), &cfg).run();
@@ -232,6 +254,58 @@ fn zero_rate_ras_reproduces_baselines_bit_identically() {
             0
         );
     }
+}
+
+/// The zero-rate serve identity (DESIGN.md §16): a `cxl-serve` whose
+/// arrival rate is zero builds *no front door at all* — the spec is
+/// inert even with `enabled` left on — so the run takes the exact
+/// closed-loop code path and must be byte-identical to plain `cxl`:
+/// same event counts, same latched latency bits, all serve counters
+/// zero. Same for `cxl-pool-serve` against `cxl-pool-qos` (its base
+/// topology). Arming the config family without offering it a single
+/// request cannot perturb a bit.
+#[test]
+fn zero_rate_serve_reproduces_baselines_bit_identically() {
+    for (armed, baseline, media, wl) in [
+        ("cxl-serve", "cxl", MediaKind::Ddr5, "vadd"),
+        ("cxl-serve", "cxl", MediaKind::Znand, "bfs"),
+        ("cxl-pool-serve", "cxl-pool-qos", MediaKind::Znand, "bfs"),
+    ] {
+        let base = System::new(spec(wl), &small(baseline, media)).run();
+        let mut cfg = small(armed, media);
+        cfg.serve.rate_rps = 0.0;
+        assert!(cfg.serve.enabled && cfg.serve.is_inert(), "zero-rate spec must be inert");
+        let served = System::new(spec(wl), &cfg).run();
+        assert_eq!(
+            fingerprint(&base),
+            fingerprint(&served),
+            "{armed}/{wl} on {media:?} at zero rate is not bit-identical to {baseline}"
+        );
+        assert_eq!(served.serve_arrivals, 0);
+        assert_eq!(served.req_latency.count(), 0);
+    }
+}
+
+/// Fixed-seed open-loop reproducibility: with a real arrival rate armed,
+/// the request sequence — every arrival draw, admission verdict, warp
+/// expansion and end-to-end latency sample — must replay bit-for-bit,
+/// and the counters must show requests actually flowed.
+#[test]
+fn armed_serve_requests_replay_bit_for_bit() {
+    let mut cfg = small("cxl-serve", MediaKind::Ddr5);
+    let a = System::new(spec("vadd"), &cfg).run();
+    let b = System::new(spec("vadd"), &cfg).run();
+    assert_eq!(fingerprint(&a), fingerprint(&b), "cxl-serve request sequence diverged");
+    assert!(a.serve_arrivals > 0, "armed rate must draw arrivals");
+    assert_eq!(a.serve_completed, a.req_latency.count(), "one latency sample per completion");
+    // Overloaded variant: shedding/timeout decisions replay too.
+    cfg.serve.rate_rps = 5e6;
+    cfg.serve.slo = 20 * cxl_gpu::sim::US;
+    cfg.serve.queue_cap = 8;
+    let oa = System::new(spec("vadd"), &cfg).run();
+    let ob = System::new(spec("vadd"), &cfg).run();
+    assert_eq!(fingerprint(&oa), fingerprint(&ob), "overloaded serve run diverged");
+    assert!(oa.serve_shed + oa.serve_timed_out > 0, "overload must shed or time out");
 }
 
 /// Fixed-seed fault reproducibility: with real fault rates armed, the

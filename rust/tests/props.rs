@@ -904,3 +904,133 @@ fn prop_device_cache_lru_victim_matches_reference() {
         Ok(())
     });
 }
+
+/// Arrival generators (DESIGN.md §16) are pure functions of (kind, rate,
+/// seed): two generators built alike must emit bit-identical gap
+/// sequences under an identically-advancing clock, every gap at least
+/// one tick, over all three processes and a wide rate range.
+#[test]
+fn prop_arrival_generators_replay_bit_for_bit() {
+    use cxl_gpu::serve::{ArrivalGen, ArrivalKind};
+    use cxl_gpu::sim::{MS, US};
+    check("arrivals-replay", 0x5EAF, 80, |g| {
+        let kind = match g.usize("kind", 0, 2) {
+            0 => ArrivalKind::Poisson,
+            1 => ArrivalKind::Mmpp {
+                burst_mult: 1.0 + g.u64("burst", 1, 16) as f64,
+                enter: g.unit_f64("enter").max(0.01),
+                exit: g.unit_f64("exit").max(0.01),
+            },
+            _ => ArrivalKind::Diurnal {
+                amp: g.unit_f64("amp"),
+                period: g.u64("period", 10 * US, 5 * MS),
+            },
+        };
+        let rate = g.u64("rate", 1_000, 5_000_000) as f64;
+        let seed = g.u64("seed", 0, u64::MAX / 2);
+        let mut a = ArrivalGen::new(kind, rate, seed);
+        let mut b = ArrivalGen::new(kind, rate, seed);
+        let (mut ta, mut tb) = (0u64, 0u64);
+        for i in 0..500 {
+            let (ga, gb) = (a.next_gap(ta), b.next_gap(tb));
+            if ga != gb {
+                return Err(format!("gap {i} diverged: {ga} vs {gb}"));
+            }
+            if ga == 0 {
+                return Err(format!("gap {i} is zero (arrivals must advance time)"));
+            }
+            ta += ga;
+            tb += gb;
+        }
+        Ok(())
+    });
+}
+
+/// Poisson arrivals must actually realize the configured offered load:
+/// the empirical mean gap over a long draw converges to 1/rate (within
+/// 6% — far outside the ~1% standard error at this sample size).
+#[test]
+fn prop_poisson_empirical_mean_matches_rate() {
+    use cxl_gpu::serve::{ArrivalGen, ArrivalKind};
+    check("poisson-mean", 0xA11E, 40, |g| {
+        let rate = g.u64("rate", 50_000, 2_000_000) as f64;
+        let seed = g.u64("seed", 0, u64::MAX / 2);
+        let mut gen = ArrivalGen::new(ArrivalKind::Poisson, rate, seed);
+        let n = 10_000u64;
+        let (mut now, mut sum) = (0u64, 0u64);
+        for _ in 0..n {
+            let gap = gen.next_gap(now);
+            now += gap;
+            sum += gap;
+        }
+        let want = 1e12 / rate;
+        let got = sum as f64 / n as f64;
+        if (got - want).abs() > 0.06 * want {
+            return Err(format!(
+                "mean gap off at {rate} rps: got {got:.0} ps, want {want:.0} ps"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Front-door conservation under arbitrary overload, end to end through
+/// the simulator: every arrival is admitted or rejected, and every
+/// admitted request exits exactly once — completed, shed, or timed out
+/// (the run drains its queue before retiring, so nothing stays queued or
+/// in flight). The queue must respect its configured bound throughout.
+#[test]
+fn prop_front_door_conserves_requests_under_overload() {
+    use cxl_gpu::coordinator::config::SystemConfig;
+    use cxl_gpu::coordinator::system::System;
+    use cxl_gpu::media::MediaKind;
+    use cxl_gpu::sim::US;
+    use cxl_gpu::workloads::table1b::spec;
+    check("serve-conservation", 0x5E12, 6, |g| {
+        let mut cfg = SystemConfig::named("cxl-serve", MediaKind::Ddr5);
+        cfg.total_ops = 6_000;
+        cfg.ssd_scale();
+        cfg.seed = g.u64("seed", 0, 1 << 30);
+        cfg.warps = g.usize("warps", 1, 8);
+        cfg.serve.rate_rps = g.u64("rate_krps", 100, 10_000) as f64 * 1e3;
+        cfg.serve.slo = g.u64("slo_us", 10, 1_000) * US;
+        cfg.serve.queue_cap = g.usize("queue_cap", 1, 64);
+        cfg.serve.max_retries = g.u64("retries", 0, 4) as u32;
+        if g.bool("bucket", 0.5) {
+            cfg.serve.bucket_rps = g.u64("bucket_krps", 50, 5_000) as f64 * 1e3;
+        }
+        let m = System::new(spec("vadd"), &cfg).run();
+        if m.serve_arrivals == 0 {
+            return Err("armed front door generated no arrivals".into());
+        }
+        if m.serve_arrivals != m.serve_admitted + m.serve_rejected {
+            return Err(format!(
+                "admission books off: {} arrivals vs {} + {}",
+                m.serve_arrivals, m.serve_admitted, m.serve_rejected
+            ));
+        }
+        if m.serve_admitted != m.serve_completed + m.serve_shed + m.serve_timed_out {
+            return Err(format!(
+                "exit books off: {} admitted vs {} completed + {} shed + {} timed out",
+                m.serve_admitted, m.serve_completed, m.serve_shed, m.serve_timed_out
+            ));
+        }
+        if m.serve_completed_in_slo > m.serve_completed {
+            return Err("in-SLO completions exceed completions".into());
+        }
+        if m.req_latency.count() != m.serve_completed {
+            return Err(format!(
+                "latency samples ({}) != completions ({})",
+                m.req_latency.count(),
+                m.serve_completed
+            ));
+        }
+        if m.serve_queue_hwm > cfg.serve.queue_cap as u64 {
+            return Err(format!(
+                "queue hwm {} exceeds cap {}",
+                m.serve_queue_hwm, cfg.serve.queue_cap
+            ));
+        }
+        Ok(())
+    });
+}
