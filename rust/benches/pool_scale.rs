@@ -1,0 +1,71 @@
+//! §17 — sharded conservative-lookahead pool coordinator: wall-clock
+//! scaling with bit-identity to the serial merge.
+//!
+//! Runs the `pool-scale` experiment (8/16/64-tenant pools, each at
+//! 1/2/4/8 shards), emits `BENCH_pool_scale.json` (schema:
+//! docs/BENCH_SCHEMA.md), and asserts the tentpole's win condition:
+//! every cell's tenant fingerprints + pool sums equal the serial
+//! `run_pool` bit-for-bit, and the 64-tenant pool at 4 shards runs
+//! ≥ 2.5x faster than the serial coordinator.
+use std::collections::BTreeMap;
+
+use cxl_gpu::coordinator::experiments::{pool_scale, Scale};
+use cxl_gpu::util::json::Json;
+
+/// 64-tenant × 4-shard wall-clock speedup floor over serial.
+const FLOOR_SPEEDUP_64X4: f64 = 2.5;
+
+fn main() {
+    let res = pool_scale(Scale::default(), true);
+
+    let rows: Vec<Json> = res
+        .rows
+        .iter()
+        .map(|r| {
+            let cells: Vec<Json> = r
+                .cells
+                .iter()
+                .map(|c| {
+                    let mut m = BTreeMap::new();
+                    m.insert("shards".into(), Json::Num(c.shards as f64));
+                    m.insert("wall_ms".into(), Json::Num(c.wall_ms));
+                    m.insert("speedup".into(), Json::Num(c.speedup));
+                    m.insert("identical".into(), Json::Bool(c.identical));
+                    Json::Obj(m)
+                })
+                .collect();
+            let mut m = BTreeMap::new();
+            m.insert("tenants".into(), Json::Num(r.tenants as f64));
+            m.insert("serial_wall_ms".into(), Json::Num(r.serial_wall_ms));
+            m.insert("events".into(), Json::Num(r.events as f64));
+            m.insert("pool_loads".into(), Json::Num(r.pool_loads as f64));
+            m.insert("cells".into(), Json::Arr(cells));
+            Json::Obj(m)
+        })
+        .collect();
+
+    // Report before asserting so regressions still leave data on disk.
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("pool_scale".into()));
+    top.insert("schema".into(), Json::Str("docs/BENCH_SCHEMA.md".into()));
+    top.insert("floor_speedup_64x4".into(), Json::Num(FLOOR_SPEEDUP_64X4));
+    top.insert("all_identical".into(), Json::Bool(res.all_identical));
+    top.insert("results".into(), Json::Arr(rows));
+    let path = "BENCH_pool_scale.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+
+    assert!(
+        res.all_identical,
+        "sharded pool runs must match the serial coordinator bit-for-bit \
+         (and exercise the fabric): identity is the whole contract"
+    );
+    let speedup = res.speedup_at(64, 4);
+    assert!(
+        speedup >= FLOOR_SPEEDUP_64X4,
+        "64-tenant x 4-shard pool below the {FLOOR_SPEEDUP_64X4}x wall-clock floor: {speedup:.2}x"
+    );
+    println!("pool_scale bench OK (64x4 speedup {speedup:.2}x, all cells bit-identical)");
+}

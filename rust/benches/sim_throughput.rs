@@ -39,6 +39,10 @@ fn main() {
         // The serving front door (§16: open-loop arrivals + request
         // dispatch) must hold it too.
         ("cxl-serve", MediaKind::Ddr5, "vadd"),
+        // The sharded-pool config (§17) must hold it too. Standalone it
+        // builds like `cxl-pool` (a one-tenant fabric); the per-event
+        // cost it probes is the deferral-capable hot path.
+        ("cxl-pool-shard", MediaKind::Ddr5, "vadd"),
     ] {
         let mut cfg = SystemConfig::named(cfg_name, media);
         // 10x the pre-streaming budget: op streams freed the O(total_ops)

@@ -65,6 +65,12 @@ pub struct SystemConfig {
     /// through a virtual CXL switch instead of direct root ports, with
     /// optional per-tenant QoS. Mutually exclusive with `tier`.
     pub fabric: FabricSpec,
+    /// Shard count for sharded pool runs (`fabric::shard`, DESIGN.md
+    /// §17): how many contiguous tenant groups the conservative-
+    /// lookahead coordinator advances in parallel. `0` = auto (one
+    /// shard per tenant). Purely a wall-clock knob — results are
+    /// bit-identical to the serial pool at every value.
+    pub pool_shards: usize,
     /// Expander-side device DRAM cache inside each SSD endpoint
     /// (DESIGN.md §14). Composes with every topology — direct, tiered,
     /// pooled — because [`SystemConfig::build_ports`] attaches it
@@ -114,6 +120,7 @@ impl SystemConfig {
             media_per_port: None,
             tier: TierConfig::default(),
             fabric: FabricSpec::default(),
+            pool_shards: 0,
             cache: CacheSpec::default(),
             ras: FaultSpec::default(),
             serve: ServeSpec::default(),
@@ -179,6 +186,11 @@ impl SystemConfig {
     ///   attachment (the passthrough invariant).
     /// * `cxl-pool-qos` — `cxl-pool` plus the per-tenant QoS token
     ///   bucket on switch ingress (the QoS ablation point).
+    /// * `cxl-pool-shard` — `cxl-pool` with the sharded conservative-
+    ///   lookahead coordinator armed (DESIGN.md §17, `pool-scale`
+    ///   experiment): identical switch spec, so results are
+    ///   bit-identical to `cxl-pool`; only `pool_shards` (wall-clock
+    ///   parallelism) differs.
     /// * `cxl-cache` — `cxl` plus the expander-side device DRAM cache
     ///   with adaptive admission (DESIGN.md §14, `cache` experiment);
     ///   at zero capacity it is bit-identical to `cxl`.
@@ -324,12 +336,16 @@ impl SystemConfig {
                 c.fabric.qos = true;
                 c.serve = ServeSpec::representative();
             }
-            "cxl-pool" | "cxl-pool-qos" => {
+            "cxl-pool" | "cxl-pool-qos" | "cxl-pool-shard" => {
                 // Pooled fabric (DESIGN.md §13): the expander endpoints
                 // sit behind a shared virtual CXL switch. Engines stay
                 // exactly as in `cxl` so the single-tenant, no-QoS pool
                 // reproduces direct attachment bit-identically; the
-                // `-qos` variant arms the per-tenant token bucket.
+                // `-qos` variant arms the per-tenant token bucket. The
+                // `-shard` variant keeps `cxl-pool`'s exact switch spec
+                // (bit-identity across the two is a determinism-suite
+                // guarantee) and arms the sharded coordinator's
+                // auto shard count (DESIGN.md §17).
                 c.strategy = MemStrategy::Cxl;
                 c.fabric.enabled = true;
                 c.fabric.qos = name == "cxl-pool-qos";
@@ -349,8 +365,8 @@ impl SystemConfig {
         &[
             "gpu-dram", "uvm", "gds", "cxl", "cxl-naive", "cxl-dyn", "cxl-sr", "cxl-ds",
             "cxl-smt", "cxl-hybrid", "cxl-tier", "cxl-tier-static", "cxl-pool",
-            "cxl-pool-qos", "cxl-cache", "cxl-cache-bypass", "cxl-ras", "cxl-pool-ras",
-            "cxl-serve", "cxl-pool-serve",
+            "cxl-pool-qos", "cxl-pool-shard", "cxl-cache", "cxl-cache-bypass", "cxl-ras",
+            "cxl-pool-ras", "cxl-serve", "cxl-pool-serve",
         ]
     }
 
@@ -370,6 +386,18 @@ impl SystemConfig {
         self
     }
 
+    /// Effective shard count for a sharded pool run over `tenants`
+    /// tenants: the `pool_shards` knob, where `0` (auto) means one
+    /// shard per tenant — maximum overlap; the engine clamps to the
+    /// tenant count either way.
+    pub fn effective_shards(&self, tenants: usize) -> usize {
+        if self.pool_shards == 0 {
+            tenants.max(1)
+        } else {
+            self.pool_shards
+        }
+    }
+
     /// Apply overrides from a parsed TOML document (`[sim]` table).
     pub fn apply_toml(&mut self, doc: &Document) {
         self.local_bytes = doc.int_or("sim.local_bytes", self.local_bytes as i64) as u64;
@@ -382,6 +410,7 @@ impl SystemConfig {
         self.ports = doc.int_or("sim.ports", self.ports as i64) as usize;
         self.ds_capacity = doc.int_or("sim.ds_capacity", self.ds_capacity as i64) as u64;
         self.timeline = doc.bool_or("sim.timeline", self.timeline);
+        self.pool_shards = doc.int_or("sim.pool_shards", self.pool_shards as i64) as usize;
         self.cache.capacity_bytes =
             doc.int_or("sim.cache_bytes", self.cache.capacity_bytes as i64) as u64;
         self.serve.enabled = doc.bool_or("sim.serve", self.serve.enabled);
@@ -559,6 +588,26 @@ mod tests {
     }
 
     #[test]
+    fn pool_shard_config_keeps_the_serial_pool_switch_spec() {
+        // The §17 bit-identity guarantee leans on this: `cxl-pool-shard`
+        // must describe the exact same simulated machine as `cxl-pool` —
+        // the shard count is wall-clock parallelism, not model state.
+        let pool = SystemConfig::named("cxl-pool", MediaKind::Znand);
+        let shard = SystemConfig::named("cxl-pool-shard", MediaKind::Znand);
+        assert_eq!(shard.fabric, pool.fabric);
+        assert_eq!(shard.strategy, pool.strategy);
+        assert_eq!(shard.sr_policy, pool.sr_policy);
+        assert_eq!(shard.ports, pool.ports);
+        // The knob: 0 = auto (one shard per tenant), explicit otherwise.
+        assert_eq!(shard.pool_shards, 0);
+        assert_eq!(shard.effective_shards(8), 8);
+        assert_eq!(shard.effective_shards(0), 1);
+        let mut pinned = shard.clone();
+        pinned.pool_shards = 4;
+        assert_eq!(pinned.effective_shards(64), 4);
+    }
+
+    #[test]
     fn build_ports_follows_media_per_port_and_gates_ds_on_ssd() {
         let c = SystemConfig::named("cxl-hybrid", MediaKind::Znand);
         let ports = c.build_ports();
@@ -571,11 +620,13 @@ mod tests {
 
     #[test]
     fn toml_overrides_apply() {
-        let doc = crate::util::toml::parse("[sim]\nwarps = 8\ntotal_ops = 1000").unwrap();
+        let doc = crate::util::toml::parse("[sim]\nwarps = 8\ntotal_ops = 1000\npool_shards = 4")
+            .unwrap();
         let mut c = SystemConfig::base();
         c.apply_toml(&doc);
         assert_eq!(c.warps, 8);
         assert_eq!(c.total_ops, 1000);
+        assert_eq!(c.pool_shards, 4);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! who wins, by roughly what factor, where the crossovers fall.
 
 use crate::cxl::{ControllerKind, CxlController};
-use crate::fabric::{run_pool, PoolResult, Tenant};
+use crate::fabric::{run_pool, run_pool_sharded, PoolResult, Tenant};
 use crate::media::MediaKind;
 use crate::rootcomplex::SrPolicy;
 use crate::sim::ps_to_ns;
@@ -1469,6 +1469,164 @@ pub fn headline(scale: Scale, print: bool) -> Headline {
         println!(
             "headline: CXL over UVM {:.2}x (paper 2.36x aggregate / 44.2x DRAM-EP figure); over commercial EP controller {:.2}x (paper 1.36x)",
             res.cxl_over_uvm, res.cxl_over_smt
+        );
+    }
+    res
+}
+
+// ---------------------------------------------------------------------------
+// Pool-scale — sharded conservative-lookahead coordinator (DESIGN.md §17)
+// ---------------------------------------------------------------------------
+
+/// Tenant counts swept by [`pool_scale`] (`--fig pool-scale`,
+/// `benches/pool_scale.rs`).
+pub const POOL_SCALE_TENANTS: [usize; 3] = [8, 16, 64];
+/// Shard counts swept per tenant count. 1 exercises the serial-fallback
+/// path; the rest exercise the parallel engine.
+pub const POOL_SCALE_SHARDS: [usize; 4] = [1, 2, 4, 8];
+
+/// One sharded cell of the pool-scale sweep.
+#[derive(Debug, Clone)]
+pub struct PoolScaleCell {
+    pub shards: usize,
+    /// Host wall-clock for the sharded run, milliseconds.
+    pub wall_ms: f64,
+    /// `serial wall / sharded wall` for the same tenant set.
+    pub speedup: f64,
+    /// Every tenant fingerprint AND the pool sums equal the serial
+    /// run's, bit for bit. The sweep is meaningless when false.
+    pub identical: bool,
+}
+
+/// One tenant-count row: the serial baseline plus every shard count.
+#[derive(Debug, Clone)]
+pub struct PoolScaleRow {
+    pub tenants: usize,
+    /// Host wall-clock for the serial `run_pool`, milliseconds.
+    pub serial_wall_ms: f64,
+    /// Merged event count (identical across every cell by construction).
+    pub events: u64,
+    /// Expander loads summed over tenants — must be nonzero, or the
+    /// bit-identity claim is vacuous.
+    pub pool_loads: u64,
+    pub cells: Vec<PoolScaleCell>,
+}
+
+/// Aggregate result of [`pool_scale`].
+#[derive(Debug, Clone)]
+pub struct PoolScaleSweep {
+    pub rows: Vec<PoolScaleRow>,
+    /// AND over every cell's `identical`.
+    pub all_identical: bool,
+}
+
+impl PoolScaleSweep {
+    /// Speedup of one (tenants, shards) cell; 0.0 if the sweep did not
+    /// run that shape. The bench floor reads `speedup_at(64, 4)`.
+    pub fn speedup_at(&self, tenants: usize, shards: usize) -> f64 {
+        self.rows
+            .iter()
+            .find(|r| r.tenants == tenants)
+            .and_then(|r| r.cells.iter().find(|c| c.shards == shards))
+            .map_or(0.0, |c| c.speedup)
+    }
+}
+
+/// Build the pool-scale tenant set: `n` homogeneous `vadd` tenants on
+/// DRAM expanders, mostly-local footprints (1/16 expander share) and
+/// per-tenant seeds. Mostly-local is the point: the serial barrier
+/// phase replays only fabric interactions, so a small expander share
+/// keeps the Amdahl serial fraction small enough for the bench's 2.5x
+/// floor while still crossing the switch thousands of times per tenant.
+fn pool_scale_tenants(n: usize, scale: Scale) -> Vec<Tenant> {
+    // Fixed total work per row: more tenants = shorter tenants, so the
+    // serial baseline stays tractable at 64 tenants (floored so quick
+    // scales still draw expander traffic).
+    let ops = (scale.total_ops / n).max(2_000);
+    (0..n)
+        .map(|i| {
+            let mut cfg = SystemConfig::named("cxl-pool-shard", MediaKind::Ddr5);
+            cfg.total_ops = ops;
+            cfg.warps = 8;
+            cfg.mlp = 4;
+            cfg.footprint = 8 << 20;
+            cfg.local_bytes = (8 << 20) - (512 << 10);
+            cfg.seed = 0xC11A ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            Tenant { workload: spec("vadd"), cfg }
+        })
+        .collect()
+}
+
+/// Everything deterministic about a pool run, flattened for exact
+/// comparison: every tenant's `RunMetrics::fingerprint()` plus the
+/// shared endpoints' pool sums and the merged event count.
+fn pool_fingerprint(run: &PoolResult) -> (Vec<Vec<u64>>, String, u64) {
+    (
+        run.tenants.iter().map(|t| t.metrics.fingerprint()).collect(),
+        format!("{:?}", run.pool),
+        run.events,
+    )
+}
+
+/// The pool-scale experiment (`--fig pool-scale`): for each tenant
+/// count, run the serial coordinator once, then the sharded coordinator
+/// at each shard count — asserting bit-identity and measuring the
+/// wall-clock speedup. Cells run back to back on the measuring thread
+/// (a parallel sweep would corrupt the timings). Backs
+/// `benches/pool_scale.rs` → `BENCH_pool_scale.json`.
+pub fn pool_scale(scale: Scale, print: bool) -> PoolScaleSweep {
+    let mut rows = Vec::new();
+    for &n in &POOL_SCALE_TENANTS {
+        let t0 = std::time::Instant::now();
+        let serial = run_pool(&pool_scale_tenants(n, scale))
+            .unwrap_or_else(|e| panic!("pool-scale serial {n}: {e}"));
+        let serial_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let serial_fp = pool_fingerprint(&serial);
+        let pool_loads = serial.pool.loads;
+
+        let cells: Vec<PoolScaleCell> = POOL_SCALE_SHARDS
+            .iter()
+            .map(|&shards| {
+                let t0 = std::time::Instant::now();
+                let run = run_pool_sharded(&pool_scale_tenants(n, scale), shards, None)
+                    .unwrap_or_else(|e| panic!("pool-scale {n}x{shards}: {e}"));
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                PoolScaleCell {
+                    shards,
+                    wall_ms,
+                    speedup: serial_wall_ms / wall_ms.max(1e-9),
+                    identical: pool_fingerprint(&run) == serial_fp,
+                }
+            })
+            .collect();
+        rows.push(PoolScaleRow {
+            tenants: n,
+            serial_wall_ms,
+            events: serial.events,
+            pool_loads,
+            cells,
+        });
+    }
+    let all_identical = rows
+        .iter()
+        .all(|r| r.pool_loads > 0 && r.cells.iter().all(|c| c.identical));
+    let res = PoolScaleSweep { rows, all_identical };
+    if print {
+        let mut t = Table::new(
+            "Pool-scale — sharded conservative-lookahead coordinator vs serial merge",
+            &["tenants", "serial", "1 shard", "2 shards", "4 shards", "8 shards", "bit-identical"],
+        );
+        for r in &res.rows {
+            let mut row = vec![r.tenants.to_string(), format!("{:.0} ms", r.serial_wall_ms)];
+            for c in &r.cells {
+                row.push(format!("{:.0} ms ({:.2}x)", c.wall_ms, c.speedup));
+            }
+            row.push(if r.cells.iter().all(|c| c.identical) { "y" } else { "DIVERGED" }.into());
+            t.rowv(row);
+        }
+        t.print();
+        println!(
+            "identity: every cell's tenant fingerprints + pool sums equal the serial run bit-for-bit; floor: 64 tenants x 4 shards >= 2.5x (benches/pool_scale.rs)"
         );
     }
     res

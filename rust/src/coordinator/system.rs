@@ -19,7 +19,7 @@ use crate::gpu::{line_of, AccessResult, Llc, MemMap, Op, OpSource, Region, Warp,
 use crate::media::{DramModel, DramTimings, MediaKind, SsdModel, SsdParams};
 use crate::rootcomplex::{EpBackend, LoadPath, RootComplex};
 use crate::serve::FrontDoor;
-use crate::sim::{EventQueue, Steppable, Time, US};
+use crate::sim::{EventQueue, Lookahead, Steppable, Time, US};
 use crate::util::prng::Pcg32;
 use crate::workloads::{OpStream, TraceParams, WorkloadSpec};
 
@@ -41,6 +41,33 @@ enum Ev {
     TierTick,
     /// One open-loop serving request lands at the front door.
     RequestArrival,
+}
+
+/// One fabric interaction recorded instead of executed during a sharded
+/// parallel phase (DESIGN.md §17). `at` is the event time at which the
+/// serial run would have made the call; the shard coordinator replays
+/// pending ops in global (at, tenant, record-order) — which reproduces
+/// the serial run's switch-call sequence, and therefore the shared
+/// fabric's state evolution, bit for bit.
+#[derive(Debug, Clone, Copy)]
+enum FabricOp {
+    /// An expander LLC fill. Replay performs the root-complex load and
+    /// schedules the `Fill` under the queue sequence number reserved at
+    /// issue time, so same-time tie-breaks match the serial run.
+    Load { at: Time, addr: u64, seq: u64 },
+    /// A dirty-victim writeback (fire-and-forget: no completion event,
+    /// only the store-latency metrics).
+    Store { at: Time, line: u64 },
+    /// A DS background flush tick forwarded to the pooled endpoints.
+    Flush { at: Time },
+}
+
+impl FabricOp {
+    fn at(&self) -> Time {
+        match *self {
+            FabricOp::Load { at, .. } | FabricOp::Store { at, .. } | FabricOp::Flush { at } => at,
+        }
+    }
 }
 
 /// Memory backend behind the system bus.
@@ -83,6 +110,13 @@ pub struct System {
     /// Construction instant, for the wall-clock perf metric (the
     /// stepping API means `run()` no longer brackets the whole run).
     started: std::time::Instant,
+    /// When set (sharded pool parallel phase), fabric interactions are
+    /// recorded into `deferred` instead of executed; the coordinator
+    /// replays them serially at the next barrier. Always `false` outside
+    /// `fabric::shard` runs, so every other path is bit-untouched.
+    defer_fabric: bool,
+    /// Pending recorded fabric interactions, in program order.
+    deferred: VecDeque<FabricOp>,
     pub metrics: RunMetrics,
 }
 
@@ -262,6 +296,8 @@ impl System {
             backend,
             rng: Pcg32::new(cfg.seed, 0xD15C),
             started: std::time::Instant::now(),
+            defer_fabric: false,
+            deferred: VecDeque::new(),
             metrics,
         })
     }
@@ -343,7 +379,11 @@ impl System {
                     }
                 }
                 Ev::FlushTick => {
-                    if let Backend::Cxl(rc) = &mut self.backend {
+                    if self.defer_fabric {
+                        if matches!(self.backend, Backend::Cxl(_)) {
+                            self.deferred.push_back(FabricOp::Flush { at: now });
+                        }
+                    } else if let Backend::Cxl(rc) = &mut self.backend {
                         rc.flush_tick(now, &mut self.rng);
                     }
                     if self.active_warps > 0 {
@@ -593,8 +633,7 @@ impl System {
                             if let Some(victim) = victim_writeback {
                                 self.do_writeback(now, victim);
                             }
-                            let done = self.fill(now, addr, false);
-                            self.q.push_at(done, Ev::Fill { line: line_of(addr), issued: now });
+                            self.schedule_fill(now, addr);
                         }
                         AccessResult::MshrFull { .. } => {
                             self.mshr_blocked.push(w);
@@ -634,6 +673,25 @@ impl System {
                 }
             }
         }
+    }
+
+    /// Route a miss's fill and schedule its `Fill` arrival — or, while
+    /// deferring (sharded pool parallel phase), record the fabric load
+    /// and reserve the queue sequence number the immediate push would
+    /// have used, so the coordinator's later `push_at_seq` reproduces
+    /// the serial tie order exactly. Local fills never touch the fabric
+    /// and always take the immediate path.
+    fn schedule_fill(&mut self, now: Time, addr: u64) {
+        if self.defer_fabric
+            && matches!(self.memmap.region(addr), Region::Expander | Region::Host)
+            && matches!(self.backend, Backend::Cxl(_))
+        {
+            let seq = self.q.reserve_seq();
+            self.deferred.push_back(FabricOp::Load { at: now, addr, seq });
+            return;
+        }
+        let done = self.fill(now, addr, false);
+        self.q.push_at(done, Ev::Fill { line: line_of(addr), issued: now });
     }
 
     /// Route an LLC fill (read) through the memory system; returns the
@@ -711,48 +769,129 @@ impl System {
         match self.memmap.region(victim_line) {
             Region::Local => {}
             Region::Expander | Region::Host => {
-                self.metrics.expander_stores += 1;
-                let off = victim_line - self.memmap.local_bytes;
-                let ack = match &mut self.backend {
-                    Backend::None => {
-                        self.local.access(now, victim_line, LINE, true);
-                        now
-                    }
-                    Backend::Cxl(rc) => {
-                        let out = rc.store(now, off, LINE, &mut self.rng);
-                        self.metrics.store_latency.add((out.ack - now) as f64);
-                        out.ack
-                    }
-                    Backend::Uvm(u) => {
-                        // The dirty line is staged locally (free — see the
-                        // doc comment); a write fault additionally runs
-                        // the page migration on the shared host-runtime /
-                        // PCIe path, delaying later faults.
-                        let t = if u.is_ready(victim_line, now) {
-                            u.touch(victim_line, true);
-                            now
-                        } else {
-                            u.fault(now, victim_line, true, 0)
-                        };
-                        self.metrics.store_latency.add((t - now) as f64);
-                        t
-                    }
-                    Backend::Gds(g) => {
-                        let t = if g.is_ready(victim_line, now) {
-                            g.touch(victim_line, true);
-                            now
-                        } else {
-                            g.fault(now, victim_line, true, &mut self.rng)
-                        };
-                        self.metrics.store_latency.add((t - now) as f64);
-                        t
-                    }
+                if self.defer_fabric && matches!(self.backend, Backend::Cxl(_)) {
+                    self.deferred.push_back(FabricOp::Store { at: now, line: victim_line });
+                    return;
+                }
+                self.writeback_expander(now, victim_line);
+            }
+        }
+    }
+
+    /// The expander leg of [`Self::do_writeback`], split out so deferred
+    /// stores replay through the identical path (same RNG draws, same
+    /// metric-accumulator order).
+    fn writeback_expander(&mut self, now: Time, victim_line: u64) {
+        self.metrics.expander_stores += 1;
+        let off = victim_line - self.memmap.local_bytes;
+        let ack = match &mut self.backend {
+            Backend::None => {
+                self.local.access(now, victim_line, LINE, true);
+                now
+            }
+            Backend::Cxl(rc) => {
+                let out = rc.store(now, off, LINE, &mut self.rng);
+                self.metrics.store_latency.add((out.ack - now) as f64);
+                out.ack
+            }
+            Backend::Uvm(u) => {
+                // The dirty line is staged locally (free — see the
+                // doc comment); a write fault additionally runs
+                // the page migration on the shared host-runtime /
+                // PCIe path, delaying later faults.
+                let t = if u.is_ready(victim_line, now) {
+                    u.touch(victim_line, true);
+                    now
+                } else {
+                    u.fault(now, victim_line, true, 0)
                 };
-                if let Some(series) = &mut self.metrics.series {
-                    series.store_latency.record(now, (ack - now) as f64 / 1000.0);
+                self.metrics.store_latency.add((t - now) as f64);
+                t
+            }
+            Backend::Gds(g) => {
+                let t = if g.is_ready(victim_line, now) {
+                    g.touch(victim_line, true);
+                    now
+                } else {
+                    g.fault(now, victim_line, true, &mut self.rng)
+                };
+                self.metrics.store_latency.add((t - now) as f64);
+                t
+            }
+        };
+        if let Some(series) = &mut self.metrics.series {
+            series.store_latency.record(now, (ack - now) as f64 / 1000.0);
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Conservative-lookahead hooks (fabric::shard / sim::pdes, §17)
+    // -----------------------------------------------------------------
+
+    /// Switch the system into (or out of) fabric-deferral mode. While
+    /// deferring, every pooled-fabric interaction is recorded into the
+    /// pending queue instead of executed; the shard coordinator replays
+    /// them with [`Self::replay_next_deferred`] in global order.
+    pub(crate) fn set_defer_fabric(&mut self, on: bool) {
+        self.defer_fabric = on;
+    }
+
+    /// Event time of the earliest pending deferred fabric op.
+    pub(crate) fn deferred_head(&self) -> Option<Time> {
+        self.deferred.front().map(|op| op.at())
+    }
+
+    /// Finished *and* holding no pending fabric ops — fully drained from
+    /// the shard coordinator's point of view.
+    pub(crate) fn shard_drained(&self) -> bool {
+        self.finished() && self.deferred.is_empty()
+    }
+
+    /// Parallel-phase drive: step events while the next one is strictly
+    /// below `earliest pending fabric op + lookahead`. The bound is
+    /// sound because a deferred load's fill can only land at or after
+    /// `op.at + lookahead` (the switch charges `hop_lat` each way), so
+    /// no event below that horizon can depend on a withheld completion;
+    /// stores and flushes feed nothing back into the calendar. Returns
+    /// steps executed.
+    pub(crate) fn advance_deferred(&mut self, lookahead: Time) -> u64 {
+        debug_assert!(self.defer_fabric, "advance_deferred outside deferral mode");
+        let mut steps = 0;
+        while let Some(t) = self.next_event_time() {
+            if let Some(head) = self.deferred_head() {
+                if t >= head.saturating_add(lookahead) {
+                    break;
+                }
+            }
+            if !self.step_one() {
+                break;
+            }
+            steps += 1;
+        }
+        steps
+    }
+
+    /// Serial-phase drive: execute the earliest pending fabric op
+    /// against the shared switch — the root-complex call, the metric
+    /// updates, and (for loads) the `Fill` scheduled under its reserved
+    /// sequence number. Per-tenant replay order is record order, which
+    /// is program order, so RNG draws and floating-point accumulators
+    /// see the exact serial sequence.
+    pub(crate) fn replay_next_deferred(&mut self) -> bool {
+        let Some(op) = self.deferred.pop_front() else { return false };
+        match op {
+            FabricOp::Load { at, addr, seq } => {
+                let done = self.expander_load(at, addr);
+                self.q.push_at_seq(done, seq, Ev::Fill { line: line_of(addr), issued: at });
+            }
+            FabricOp::Store { at, line } => self.writeback_expander(at, line),
+            FabricOp::Flush { at } => {
+                if let Backend::Cxl(rc) = &mut self.backend {
+                    rc.flush_tick(at, &mut self.rng);
                 }
             }
         }
+        true
     }
 }
 
@@ -764,6 +903,25 @@ impl Steppable for System {
     }
     fn step(&mut self) -> bool {
         self.step_one()
+    }
+}
+
+/// The sharded pool coordinator (`fabric::shard`) drives tenants through
+/// [`crate::sim::run_conservative`]: parallel epochs record fabric ops,
+/// barrier phases replay them in global order. Only meaningful after
+/// [`System::set_defer_fabric`]`(true)`.
+impl Lookahead for System {
+    fn advance(&mut self, lookahead: Time) -> u64 {
+        self.advance_deferred(lookahead)
+    }
+    fn pending_head(&self) -> Option<Time> {
+        self.deferred_head()
+    }
+    fn replay_head(&mut self) -> bool {
+        self.replay_next_deferred()
+    }
+    fn drained(&self) -> bool {
+        self.shard_drained()
     }
 }
 

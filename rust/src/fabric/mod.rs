@@ -15,6 +15,10 @@
 //!   [`System`](crate::coordinator::system::System)s stepped against the
 //!   shared pool in one deterministic global event order
 //!   ([`crate::sim::interleave()`]).
+//! * [`shard`] — the parallel twin: tenants partitioned across worker
+//!   threads under the conservative-lookahead engine
+//!   ([`crate::sim::pdes`]), bit-identical to [`pool`] by construction
+//!   (DESIGN.md §17).
 //!
 //! Tenants address disjoint device-address slices of the pooled
 //! endpoints (per-tenant `dpa_base` in the HDM walk), so pooling is a
@@ -22,9 +26,11 @@
 //! aliasing is not. Design notes: DESIGN.md §13.
 
 pub mod pool;
+pub mod shard;
 pub mod switch;
 
-pub use pool::{run_pool, PoolResult, Tenant, TenantResult};
+pub use pool::{run_pool, PoolError, PoolResult, Tenant, TenantResult};
+pub use shard::run_pool_sharded;
 pub use switch::{CxlSwitch, PoolSums, TenantFabricStats, TokenBucket};
 
 use std::sync::{Arc, Mutex};

@@ -10,10 +10,15 @@
 //! order one global queue would produce — so pool runs are
 //! bit-reproducible (guarded in `tests/determinism.rs`).
 //!
+//! [`super::shard::run_pool_sharded`] is the parallel twin: same
+//! validation, same systems, same results bit-for-bit, via the
+//! conservative-lookahead engine in [`crate::sim::pdes`].
+//!
 //! Tenants receive disjoint device-address slices of the pool (stacked
 //! `dpa_base` offsets in each tenant's HDM walk): pooling shares
 //! *bandwidth and queues*, never aliases *data*.
 
+use std::fmt;
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::config::{MemStrategy, SystemConfig};
@@ -52,49 +57,116 @@ pub struct PoolResult {
     pub events: u64,
 }
 
-/// Run `tenants` against one shared pool to completion.
+/// Why a pool run could not be built or started.
 ///
-/// Validation: every tenant must be a fabric-enabled CXL configuration
-/// with an expander footprint, and all tenants must agree on the pool
-/// topology (port count and media) and the switch spec (QoS on/off,
-/// hop, ingress depth) — the switch is built once from tenant 0's
-/// config plus every tenant's weight.
-pub fn run_pool(tenants: &[Tenant]) -> Result<PoolResult, String> {
-    let base = &tenants
-        .first()
-        .ok_or_else(|| "pool needs at least one tenant".to_string())?
-        .cfg;
+/// Every variant carries the context needed to point at the offending
+/// tenant configuration; `Display` renders the operator-facing message
+/// (and keeps the historical wording that callers and tests match on).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PoolError {
+    /// The tenant list was empty.
+    EmptyPool,
+    /// A tenant's config is not a fabric-enabled CXL configuration.
+    NotPooledConfig { name: String },
+    /// A tenant's footprint fits entirely in local HBM — it would never
+    /// touch the pool it claims to share.
+    NoExpander { name: String },
+    /// A tenant disagrees with tenant 0 on port count / media / fanout.
+    TopologyMismatch { name: String, base: String },
+    /// A tenant disagrees with tenant 0's switch spec (QoS, hop,
+    /// ingress depth, rate bounds) — only the WRR weight may differ.
+    SwitchSpecMismatch { name: String, base: String },
+    /// A sharded run was asked for zero shards.
+    BadShardCount { shards: usize },
+    /// A sharded run needs a nonzero switch hop to build its
+    /// conservative-lookahead window from.
+    NoLookahead { name: String },
+    /// Timeline capture samples shared switch state mid-epoch, which a
+    /// sharded run cannot reproduce bit-identically.
+    TimelineUnsupported { name: String },
+    /// A tenant `System` failed to build (bad warps/mlp/footprint...).
+    Tenant(String),
+}
+
+impl fmt::Display for PoolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PoolError::EmptyPool => write!(f, "pool needs at least one tenant"),
+            PoolError::NotPooledConfig { name } => {
+                write!(f, "tenant config `{name}` is not a pooled-fabric configuration")
+            }
+            PoolError::NoExpander { name } => {
+                write!(f, "tenant config `{name}` has no expander footprint")
+            }
+            PoolError::TopologyMismatch { name, base } => {
+                write!(f, "tenant config `{name}` disagrees with the pool topology of `{base}`")
+            }
+            PoolError::SwitchSpecMismatch { name, base } => {
+                write!(f, "tenant config `{name}` disagrees with the switch spec of `{base}`")
+            }
+            PoolError::BadShardCount { shards } => {
+                write!(f, "sharded pool needs at least one shard (got {shards})")
+            }
+            PoolError::NoLookahead { name } => write!(
+                f,
+                "tenant config `{name}` has a zero switch hop latency: \
+                 a sharded run has no conservative-lookahead window"
+            ),
+            PoolError::TimelineUnsupported { name } => write!(
+                f,
+                "tenant config `{name}` requests timeline capture, \
+                 which sharded pool runs do not support"
+            ),
+            PoolError::Tenant(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// `System::new_tenant` / `System::try_new` report `String` errors;
+/// wrap them so `?` composes inside the pool builders.
+impl From<String> for PoolError {
+    fn from(msg: String) -> Self {
+        PoolError::Tenant(msg)
+    }
+}
+
+/// Check the tenant list is a coherent pool; returns tenant 0's config
+/// (the pool's base: the switch is built from it plus every tenant's
+/// weight).
+pub(crate) fn validate(tenants: &[Tenant]) -> Result<&SystemConfig, PoolError> {
+    let base = &tenants.first().ok_or(PoolError::EmptyPool)?.cfg;
     for t in tenants {
         let c = &t.cfg;
-        let name = &c.name;
+        let name = || c.name.clone();
         if c.strategy != MemStrategy::Cxl || !c.fabric.enabled {
-            return Err(format!(
-                "tenant config `{name}` is not a pooled-fabric configuration"
-            ));
+            return Err(PoolError::NotPooledConfig { name: name() });
         }
         if c.footprint <= c.local_bytes {
-            return Err(format!("tenant config `{name}` has no expander footprint"));
+            return Err(PoolError::NoExpander { name: name() });
         }
         if c.ports != base.ports || c.media != base.media || c.media_per_port != base.media_per_port
         {
-            return Err(format!(
-                "tenant config `{name}` disagrees with the pool topology of `{}`",
-                base.name
-            ));
+            return Err(PoolError::TopologyMismatch { name: name(), base: base.name.clone() });
         }
-        // The switch is built once from tenant 0's spec: every field
-        // except the per-tenant WRR weight must agree, or a tenant's
-        // QoS/topology knobs would be silently discarded.
+        // Every switch-spec field except the per-tenant WRR weight must
+        // agree, or a tenant's QoS/topology knobs would be silently
+        // discarded.
         let mut normalized = c.fabric;
         normalized.weight = base.fabric.weight;
         if normalized != base.fabric {
-            return Err(format!(
-                "tenant config `{name}` disagrees with the switch spec of `{}`",
-                base.name
-            ));
+            return Err(PoolError::SwitchSpecMismatch { name: name(), base: base.name.clone() });
         }
     }
+    Ok(base)
+}
 
+/// Build the shared switch and one primed `System` per tenant, each on
+/// its own disjoint device-address slice. Shared by the serial and
+/// sharded coordinators so both run literally the same systems.
+pub(crate) fn build_pool(tenants: &[Tenant]) -> Result<(Vec<System>, FabricLink), PoolError> {
+    let base = validate(tenants)?;
     let weights: Vec<u32> = tenants.iter().map(|t| t.cfg.fabric.weight).collect();
     let link: FabricLink =
         Arc::new(Mutex::new(CxlSwitch::new(base.build_ports(), base.fabric, &weights)));
@@ -108,12 +180,14 @@ pub fn run_pool(tenants: &[Tenant]) -> Result<PoolResult, String> {
         systems.push(System::new_tenant(t.workload, &t.cfg, Arc::clone(&link), i, dpa_base)?);
         dpa_base += expander / t.cfg.ports as u64;
     }
-
     for s in &mut systems {
         s.prime();
     }
-    interleave(&mut systems);
+    Ok((systems, link))
+}
 
+/// Collect per-tenant metrics and the pool-level sums after a run.
+pub(crate) fn harvest_pool(systems: Vec<System>, tenants: &[Tenant], link: &FabricLink) -> PoolResult {
     let pool = link.lock().expect("fabric mutex poisoned").pool_sums();
     let tenants_out: Vec<TenantResult> = systems
         .into_iter()
@@ -125,7 +199,20 @@ pub fn run_pool(tenants: &[Tenant]) -> Result<PoolResult, String> {
         })
         .collect();
     let events = tenants_out.iter().map(|t| t.metrics.events).sum();
-    Ok(PoolResult { tenants: tenants_out, pool, events })
+    PoolResult { tenants: tenants_out, pool, events }
+}
+
+/// Run `tenants` against one shared pool to completion, serially.
+///
+/// Validation: every tenant must be a fabric-enabled CXL configuration
+/// with an expander footprint, and all tenants must agree on the pool
+/// topology (port count and media) and the switch spec (QoS on/off,
+/// hop, ingress depth) — the switch is built once from tenant 0's
+/// config plus every tenant's weight.
+pub fn run_pool(tenants: &[Tenant]) -> Result<PoolResult, PoolError> {
+    let (mut systems, link) = build_pool(tenants)?;
+    interleave(&mut systems);
+    Ok(harvest_pool(systems, tenants, &link))
 }
 
 #[cfg(test)]
@@ -169,19 +256,58 @@ mod tests {
         let a = tenant("cxl-pool", "bfs", 1_000);
         let mut b = tenant("cxl-pool", "vadd", 1_000);
         b.cfg.ports = 2;
-        assert!(run_pool(&[a, b]).unwrap_err().contains("pool topology"));
+        let err = run_pool(&[a, b]).unwrap_err();
+        assert!(matches!(err, PoolError::TopologyMismatch { .. }), "{err:?}");
+        assert!(err.to_string().contains("pool topology"));
 
         let a = tenant("cxl-pool", "bfs", 1_000);
         let b = tenant("cxl-pool-qos", "vadd", 1_000);
-        assert!(run_pool(&[a, b]).unwrap_err().contains("switch spec"));
+        let err = run_pool(&[a, b]).unwrap_err();
+        assert!(matches!(err, PoolError::SwitchSpecMismatch { .. }), "{err:?}");
+        assert!(err.to_string().contains("switch spec"));
 
         let direct = {
             let mut t = tenant("cxl-pool", "bfs", 1_000);
             t.cfg = SystemConfig::named("cxl", MediaKind::Ddr5);
             t
         };
-        assert!(run_pool(&[direct]).unwrap_err().contains("not a pooled-fabric"));
-        assert!(run_pool(&[]).unwrap_err().contains("at least one tenant"));
+        let err = run_pool(&[direct]).unwrap_err();
+        assert!(matches!(err, PoolError::NotPooledConfig { .. }), "{err:?}");
+        assert!(err.to_string().contains("not a pooled-fabric"));
+
+        let err = run_pool(&[]).unwrap_err();
+        assert_eq!(err, PoolError::EmptyPool);
+        assert!(err.to_string().contains("at least one tenant"));
+    }
+
+    #[test]
+    fn pool_rejects_a_tenant_with_no_expander_share() {
+        let mut local_only = tenant("cxl-pool", "bfs", 1_000);
+        local_only.cfg.local_bytes = local_only.cfg.footprint;
+        let err = run_pool(&[local_only]).unwrap_err();
+        assert!(matches!(err, PoolError::NoExpander { .. }), "{err:?}");
+        assert!(err.to_string().contains("has no expander footprint"));
+    }
+
+    #[test]
+    fn pool_error_display_names_the_offender() {
+        // Each contextful variant must surface the tenant config name,
+        // so a 64-tenant pool failure points at the one bad config.
+        let errs = [
+            PoolError::NotPooledConfig { name: "t7".into() },
+            PoolError::NoExpander { name: "t7".into() },
+            PoolError::TopologyMismatch { name: "t7".into(), base: "t0".into() },
+            PoolError::SwitchSpecMismatch { name: "t7".into(), base: "t0".into() },
+            PoolError::NoLookahead { name: "t7".into() },
+            PoolError::TimelineUnsupported { name: "t7".into() },
+        ];
+        for e in &errs {
+            assert!(e.to_string().contains("t7"), "{e:?} lost the tenant name");
+        }
+        assert!(PoolError::BadShardCount { shards: 0 }.to_string().contains("got 0"));
+        // And the std::error::Error plumbing works end to end.
+        let boxed: Box<dyn std::error::Error> = Box::new(PoolError::EmptyPool);
+        assert_eq!(boxed.to_string(), "pool needs at least one tenant");
     }
 
     #[test]

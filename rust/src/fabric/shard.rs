@@ -1,0 +1,192 @@
+//! Sharded pool coordinator: the parallel twin of [`super::pool`],
+//! bit-identical to it by construction.
+//!
+//! [`run_pool_sharded`] partitions a pool's tenants into contiguous
+//! shards and drives them through the conservative-lookahead engine
+//! ([`crate::sim::run_conservative`]): worker threads advance each
+//! shard's tenants independently with every fabric interaction
+//! *deferred*, then a serial barrier phase replays the deferred
+//! interactions against the shared switch in exactly the global
+//! `(time, tenant, program order)` the serial [`run_pool`] coordinator
+//! would have produced. Same switch-call sequence, same per-tenant RNG
+//! draw order, same floating-point accumulation order — so every
+//! `RunMetrics::fingerprint()` and the pool sums match the serial run
+//! bit-for-bit, for any shard count and any worker count. DESIGN.md §17
+//! gives the full argument; `tests/props.rs` and
+//! `benches/pool_scale.rs` enforce it.
+//!
+//! The lookahead window is the switch's round-trip hop cost
+//! (`2 * hop_lat`): with two or more tenants the switch is never in
+//! passthrough mode, so every deferred load's fill is at least that far
+//! in the deferring tenant's future, and deferred stores/flushes feed
+//! nothing back into its calendar at all.
+
+use crate::coordinator::runner::thread_count;
+use crate::sim::{interleave, run_conservative, Time};
+
+use super::pool::{build_pool, harvest_pool, validate, PoolError, PoolResult, Tenant};
+
+/// Run `tenants` against one shared pool to completion on `shards`
+/// shards and up to `threads` worker threads (`None` = the
+/// `CXL_GPU_THREADS` override, else every available core — the same
+/// rule as the sweep runner). Results are bit-identical to
+/// [`run_pool`]`(tenants)` regardless of both knobs.
+///
+/// Single-tenant pools and `shards == 1` take the serial coordinator
+/// directly: there is nothing to overlap, and the single-tenant switch
+/// is in passthrough mode (no hop charged), which would void the
+/// lookahead bound.
+///
+/// [`run_pool`]: super::pool::run_pool
+pub fn run_pool_sharded(
+    tenants: &[Tenant],
+    shards: usize,
+    threads: Option<usize>,
+) -> Result<PoolResult, PoolError> {
+    if shards == 0 {
+        return Err(PoolError::BadShardCount { shards });
+    }
+    let base = validate(tenants)?;
+    let lookahead: Time = 2 * base.fabric.hop_lat;
+    for t in tenants {
+        if t.cfg.timeline {
+            // Timeline capture samples shared switch occupancy inside a
+            // tenant's (parallel-phase) load path — unreproducible here.
+            return Err(PoolError::TimelineUnsupported { name: t.cfg.name.clone() });
+        }
+    }
+    if tenants.len() > 1 && lookahead == 0 {
+        return Err(PoolError::NoLookahead { name: base.name.clone() });
+    }
+
+    let (mut systems, link) = build_pool(tenants)?;
+    if shards == 1 || systems.len() == 1 {
+        interleave(&mut systems);
+        return Ok(harvest_pool(systems, tenants, &link));
+    }
+
+    for s in &mut systems {
+        s.set_defer_fabric(true);
+    }
+    let (mut systems, _steps) =
+        run_conservative(systems, shards, threads.unwrap_or_else(thread_count), lookahead);
+    for s in &mut systems {
+        s.set_defer_fabric(false);
+    }
+    Ok(harvest_pool(systems, tenants, &link))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::SystemConfig;
+    use crate::fabric::run_pool;
+    use crate::media::MediaKind;
+    use crate::workloads::table1b::spec;
+
+    fn tenant(wl: &str, warps: usize, mlp: usize, seed: u64) -> Tenant {
+        let mut cfg = SystemConfig::named("cxl-pool-qos", MediaKind::Ddr5);
+        cfg.total_ops = 5_000;
+        cfg.warps = warps;
+        cfg.mlp = mlp;
+        cfg.seed = seed;
+        cfg.footprint = 4 << 20;
+        cfg.local_bytes = 64 << 10;
+        Tenant { workload: spec(wl), cfg }
+    }
+
+    fn mixed_pool() -> Vec<Tenant> {
+        vec![
+            tenant("bfs", 8, 4, 1),
+            tenant("vadd", 16, 2, 2),
+            tenant("sort", 8, 8, 3),
+        ]
+    }
+
+    /// Full PoolResult equality: per-tenant fingerprints, pool sums and
+    /// the merged event count.
+    fn assert_same(a: &PoolResult, b: &PoolResult, what: &str) {
+        assert_eq!(a.events, b.events, "{what}: merged event count diverged");
+        assert_eq!(
+            format!("{:?}", a.pool),
+            format!("{:?}", b.pool),
+            "{what}: pool sums diverged"
+        );
+        for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(
+                ta.metrics.fingerprint(),
+                tb.metrics.fingerprint(),
+                "{what}: tenant {} diverged",
+                ta.workload
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_run_is_bit_identical_to_serial_for_every_shape() {
+        let serial = run_pool(&mixed_pool()).unwrap();
+        assert!(
+            serial.tenants.iter().all(|t| t.metrics.expander_loads > 0),
+            "pool must actually exercise the fabric for the identity to mean anything"
+        );
+        // Shard counts beyond the tenant count clamp; 2 does not divide
+        // 3, so one shard is wider than the other.
+        for shards in [1, 2, 3, 8] {
+            for threads in [1, 2, 4] {
+                let sharded =
+                    run_pool_sharded(&mixed_pool(), shards, Some(threads)).unwrap();
+                assert_same(&serial, &sharded, &format!("shards={shards} threads={threads}"));
+            }
+        }
+    }
+
+    #[test]
+    fn single_tenant_pool_takes_the_passthrough_fallback() {
+        let one = || vec![tenant("vadd", 8, 4, 7)];
+        let serial = run_pool(&one()).unwrap();
+        let sharded = run_pool_sharded(&one(), 4, Some(4)).unwrap();
+        assert_same(&serial, &sharded, "single tenant");
+    }
+
+    #[test]
+    fn zero_shards_is_rejected() {
+        let err = run_pool_sharded(&mixed_pool(), 0, None).unwrap_err();
+        assert_eq!(err, PoolError::BadShardCount { shards: 0 });
+    }
+
+    #[test]
+    fn timeline_capture_is_rejected() {
+        let mut tenants = mixed_pool();
+        tenants[1].cfg.timeline = true;
+        let err = run_pool_sharded(&tenants, 2, None).unwrap_err();
+        assert!(matches!(err, PoolError::TimelineUnsupported { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn zero_hop_multi_tenant_pool_has_no_lookahead() {
+        let mut tenants = mixed_pool();
+        for t in &mut tenants {
+            t.cfg.fabric.hop_lat = 0;
+        }
+        let err = run_pool_sharded(&tenants, 2, None).unwrap_err();
+        assert!(matches!(err, PoolError::NoLookahead { .. }), "{err:?}");
+        // ...but a single zero-hop tenant is fine: it takes the serial
+        // passthrough fallback and never needs the window.
+        let solo = vec![{
+            let mut t = tenant("vadd", 8, 4, 9);
+            t.cfg.fabric.hop_lat = 0;
+            t
+        }];
+        assert!(run_pool_sharded(&solo, 4, None).is_ok());
+    }
+
+    #[test]
+    fn validation_errors_match_the_serial_coordinator() {
+        let err = run_pool_sharded(&[], 2, None).unwrap_err();
+        assert_eq!(err, PoolError::EmptyPool);
+        let mut tenants = mixed_pool();
+        tenants[2].cfg.ports = 2;
+        let err = run_pool_sharded(&tenants, 2, None).unwrap_err();
+        assert!(matches!(err, PoolError::TopologyMismatch { .. }), "{err:?}");
+    }
+}

@@ -33,7 +33,11 @@ pub enum Op {
 /// Sources are consumed strictly in order; `None` is final (a source must
 /// keep returning `None` once exhausted — the warp caches exhaustion via
 /// its lookahead slot either way).
-pub trait OpSource: std::fmt::Debug {
+///
+/// `Send` is part of the contract: sharded pool runs (`fabric::shard`)
+/// move whole `System`s — and thus their warps' sources — across worker
+/// threads between epochs.
+pub trait OpSource: std::fmt::Debug + Send {
     /// Produce the next op, advancing the source.
     fn next_op(&mut self) -> Option<Op>;
 

@@ -60,7 +60,7 @@ fn usage() -> String {
         &[
             ("run", "simulate one workload under one configuration"),
             ("suite", "simulate all 13 workloads under one configuration"),
-            ("experiments", "reproduce the paper's figures (--fig 3b|9a|9b|9c|9d|9e|table1b|headline|tier|mt|cache|ras|serve)"),
+            ("experiments", "reproduce the paper's figures (--fig 3b|9a|9b|9c|9d|9e|table1b|headline|tier|mt|cache|ras|serve|pool-scale)"),
             ("latency", "Fig. 3b controller round-trip comparison"),
             ("execute", "run an AOT workload artifact via PJRT (real compute)"),
             ("list", "show workloads, configurations and media"),
@@ -175,6 +175,9 @@ fn cmd_experiments(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
             "serve" => {
                 experiments::serve(scale, true);
             }
+            "pool-scale" => {
+                experiments::pool_scale(scale, true);
+            }
             other => return Err(format!("unknown figure `{other}`")),
         }
         Ok(())
@@ -182,7 +185,7 @@ fn cmd_experiments(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
     if which == "all" {
         for f in [
             "3b", "table1b", "9a", "9b", "9c", "9d", "9e", "headline", "tier", "mt", "cache",
-            "ras", "serve",
+            "ras", "serve", "pool-scale",
         ] {
             run_one(f)?;
         }

@@ -9,10 +9,25 @@
 //! lowest index — which is exactly the (time, tenant) order one global
 //! calendar would produce. Deterministic by construction: no wall
 //! clock, no thread scheduling, a total order over every event.
+//!
+//! The merge is a min-heap keyed on `(time, index)` rather than an
+//! O(N) scan per step: each system has exactly one entry while it has
+//! pending work, popped and re-pushed as it advances, so a step costs
+//! `O(log N)` at rack-scale tenant counts. The tuple key makes the
+//! serial tie rule (lowest index first on equal times) part of the heap
+//! order itself.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use super::Time;
 
 /// An event-driven system that can be single-stepped by a coordinator.
+///
+/// Coordinators assume *isolation*: stepping one system never changes
+/// another system's `next_time()`. Tenant `System`s satisfy this — their
+/// calendars are private, and shared-fabric calls complete synchronously
+/// within the caller's step.
 pub trait Steppable {
     /// Time of the next pending event, or `None` when this system has
     /// nothing more to do (finished, or queue drained).
@@ -20,27 +35,47 @@ pub trait Steppable {
     /// Pop and process one event. Returns `false` if there was nothing
     /// to pop.
     fn step(&mut self) -> bool;
+
+    /// Step until the next pending event is at or past `horizon`
+    /// (exclusive: an event exactly at the horizon does *not* run) or
+    /// the system finishes. Returns the number of steps executed. The
+    /// conservative-lookahead engine (`sim::pdes`) advances each shard
+    /// with this bounded drain.
+    fn step_until(&mut self, horizon: Time) -> u64 {
+        let mut steps = 0;
+        while let Some(t) = self.next_time() {
+            if t >= horizon || !self.step() {
+                break;
+            }
+            steps += 1;
+        }
+        steps
+    }
 }
 
 /// Drain `systems` to completion in global (time, index) order; returns
 /// the number of steps executed.
 pub fn interleave<T: Steppable>(systems: &mut [T]) -> u64 {
+    let mut heap: BinaryHeap<Reverse<(Time, usize)>> = systems
+        .iter()
+        .enumerate()
+        .filter_map(|(i, s)| s.next_time().map(|t| Reverse((t, i))))
+        .collect();
     let mut steps = 0;
-    loop {
-        let mut best: Option<(Time, usize)> = None;
-        for (i, s) in systems.iter().enumerate() {
-            if let Some(t) = s.next_time() {
-                // Strict `<` keeps the earliest index on ties.
-                if best.map_or(true, |(bt, _)| t < bt) {
-                    best = Some((t, i));
-                }
-            }
-        }
-        let Some((_, i)) = best else { return steps };
+    while let Some(Reverse((t, i))) = heap.pop() {
+        // An entry is refreshed every time its system steps, and only
+        // its own steps can move its clock (the isolation contract), so
+        // the heap key is never stale.
+        debug_assert_eq!(systems[i].next_time(), Some(t), "heap key went stale");
         if systems[i].step() {
             steps += 1;
         }
+        if let Some(next) = systems[i].next_time() {
+            debug_assert!(next >= t, "system {i} scheduled backwards: {next} < {t}");
+            heap.push(Reverse((next, i)));
+        }
     }
+    steps
 }
 
 #[cfg(test)]
@@ -92,5 +127,61 @@ mod tests {
         let mut one = vec![Toy { id: 7, times: vec![2, 4], cursor: 0, log: &log }];
         assert_eq!(interleave(&mut one), 2);
         assert_eq!(log.into_inner(), vec![(2, 7), (4, 7)]);
+    }
+
+    /// Many-way tie storm: five systems all carrying runs of equal
+    /// timestamps must drain in strict index order *within every
+    /// timestamp*, including a system whose whole schedule ties and one
+    /// that joins a tie mid-run. Guards the heap rewrite against any
+    /// `BinaryHeap` tie-handling subtlety the 2-system toy would miss.
+    #[test]
+    fn equal_timestamp_ties_across_many_systems_resolve_by_index() {
+        let log = std::cell::RefCell::new(Vec::new());
+        let mut toys = vec![
+            Toy { id: 0, times: vec![10, 10, 20], cursor: 0, log: &log },
+            Toy { id: 1, times: vec![10, 20, 20], cursor: 0, log: &log },
+            Toy { id: 2, times: vec![10, 10, 10], cursor: 0, log: &log },
+            Toy { id: 3, times: vec![5, 10, 20], cursor: 0, log: &log },
+            Toy { id: 4, times: vec![20, 20, 20], cursor: 0, log: &log },
+        ];
+        let steps = interleave(&mut toys);
+        assert_eq!(steps, 15);
+        assert_eq!(
+            log.into_inner(),
+            vec![
+                (5, 3),
+                // t=10: index order, and a system that stays at 10 keeps
+                // winning its slot before higher indices run theirs.
+                (10, 0),
+                (10, 0),
+                (10, 1),
+                (10, 2),
+                (10, 2),
+                (10, 2),
+                (10, 3),
+                // t=20: index order again, repeated entries contiguous.
+                (20, 0),
+                (20, 1),
+                (20, 1),
+                (20, 3),
+                (20, 4),
+                (20, 4),
+                (20, 4),
+            ],
+            "equal timestamps must drain lowest-index-first, repeatedly"
+        );
+    }
+
+    #[test]
+    fn step_until_respects_an_exclusive_horizon() {
+        let log = std::cell::RefCell::new(Vec::new());
+        let mut toy = Toy { id: 0, times: vec![1, 5, 10, 10, 12], cursor: 0, log: &log };
+        // Events strictly before 10 run; the ones at 10 wait.
+        assert_eq!(toy.step_until(10), 2);
+        assert_eq!(toy.next_time(), Some(10));
+        // Horizon past the end drains the rest.
+        assert_eq!(toy.step_until(Time::MAX), 3);
+        assert_eq!(toy.next_time(), None);
+        assert_eq!(log.into_inner(), vec![(1, 0), (5, 0), (10, 0), (10, 0), (12, 0)]);
     }
 }

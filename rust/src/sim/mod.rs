@@ -8,10 +8,12 @@
 //! behaviour (Evaluation §Methodology).
 
 pub mod interleave;
+pub mod pdes;
 pub mod queue;
 pub mod timeline;
 
 pub use interleave::{interleave, Steppable};
+pub use pdes::{run_conservative, Lookahead};
 pub use queue::EventQueue;
 pub use timeline::Timeline;
 

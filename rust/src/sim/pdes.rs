@@ -1,0 +1,302 @@
+//! Conservative-lookahead parallel discrete-event simulation (PDES).
+//!
+//! [`run_conservative`] advances N event-driven systems on worker
+//! threads while guaranteeing the *exact* event order — and therefore
+//! bit-identical results — of the serial [`interleave()`] merge. The
+//! classic conservative argument (Chandy–Misra–Bryant, specialized to a
+//! hub-and-spoke topology): systems only interact through one shared
+//! hub (the CXL switch), and every interaction's effect lands at least
+//! `lookahead` after its cause, so a system may safely run ahead of its
+//! own earliest un-executed interaction by up to that window without
+//! ever processing an event that the response could have preceded.
+//!
+//! The run alternates two phases:
+//!
+//! * **Parallel epoch** — every system independently records (defers)
+//!   its hub interactions and advances until its next event would cross
+//!   `earliest recorded interaction + lookahead`, or it finishes.
+//!   Systems share nothing here, so thread scheduling cannot influence
+//!   the outcome.
+//! * **Serial reconciliation** — one coordinator replays the recorded
+//!   interactions against the hub in global `(time, system index,
+//!   record order)` order, stopping at the conservative cut: an
+//!   interaction at `(t, i)` replays only while every other live system
+//!   `j` satisfies `(t, i) < (next_time_j, j)` — past that point system
+//!   `j` could still generate an earlier-ordered interaction once
+//!   resumed. The cut is re-evaluated live because replaying a load
+//!   re-arms its system's calendar (the fill lands), pulling
+//!   `next_time` down.
+//!
+//! Progress: after an epoch every unfinished system is blocked on its
+//! own earliest recorded interaction at `t_head`, with
+//! `next_time >= t_head + lookahead > t_head`; the globally minimal
+//! recorded interaction therefore always passes the cut, so every round
+//! retires at least one interaction or finishes a system.
+//!
+//! Determinism: phase boundaries and the replay order are functions of
+//! simulation state only — worker count, shard count, and OS scheduling
+//! affect wall-clock, never results. `fabric::shard` pins this with a
+//! bit-equality harness against the serial run.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+
+use super::{Steppable, Time};
+
+/// A [`Steppable`] system that can defer its shared-hub interactions
+/// for barrier-phase replay. `coordinator::System` implements this for
+/// pooled-fabric tenants (`fabric::shard`).
+pub trait Lookahead: Steppable + Send {
+    /// Advance until the next event would reach `earliest pending
+    /// interaction + lookahead`, or the system finishes. Must not touch
+    /// any shared state.
+    fn advance(&mut self, lookahead: Time) -> u64;
+    /// Event time of the earliest pending recorded interaction.
+    fn pending_head(&self) -> Option<Time>;
+    /// Execute the earliest pending interaction against the hub.
+    fn replay_head(&mut self) -> bool;
+    /// Finished with nothing left to replay.
+    fn drained(&self) -> bool;
+}
+
+/// Drain `systems` to completion, bit-identically to
+/// `interleave(systems)`, using up to `threads` workers over `shards`
+/// contiguous system groups. Returns the systems plus the total steps
+/// executed (equal to the serial merge's step count).
+///
+/// `lookahead` must be a lower bound on the cause→effect delay of every
+/// hub interaction (for the CXL pool: one switch hop each way). A
+/// larger-than-true value is unsound; a smaller one only costs rounds.
+pub fn run_conservative<T: Lookahead>(
+    systems: Vec<T>,
+    shards: usize,
+    threads: usize,
+    lookahead: Time,
+) -> (Vec<T>, u64) {
+    let n = systems.len();
+    if n == 0 {
+        return (systems, 0);
+    }
+    let shards = shards.clamp(1, n);
+    let workers = threads.clamp(1, shards);
+    // Shard s owns the contiguous range [s*per, (s+1)*per); worker w
+    // round-robins over shards w, w+workers, ... — a fixed partition,
+    // though results never depend on it (epochs share nothing).
+    let per = n.div_ceil(shards);
+    let cells: Vec<Mutex<T>> = systems.into_iter().map(Mutex::new).collect();
+    let steps = AtomicU64::new(0);
+    let stop = AtomicBool::new(false);
+    let barrier = Barrier::new(workers + 1);
+
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let (cells, steps, stop, barrier) = (&cells, &steps, &stop, &barrier);
+            scope.spawn(move || loop {
+                barrier.wait();
+                if stop.load(Ordering::Acquire) {
+                    return;
+                }
+                let mut local = 0;
+                let mut s = w;
+                while s * per < n {
+                    let hi = ((s + 1) * per).min(n);
+                    for cell in &cells[s * per..hi] {
+                        local += cell.lock().expect("pdes tenant mutex poisoned").advance(lookahead);
+                    }
+                    s += workers;
+                }
+                steps.fetch_add(local, Ordering::Relaxed);
+                barrier.wait();
+            });
+        }
+
+        loop {
+            barrier.wait(); // release workers into a parallel epoch
+            barrier.wait(); // epoch done: every system blocked or finished
+            let mut guards: Vec<_> = cells
+                .iter()
+                .map(|c| c.lock().expect("pdes tenant mutex poisoned"))
+                .collect();
+            loop {
+                // Globally earliest recorded interaction (ties to the
+                // lowest index — the serial merge's tie rule).
+                let mut cand: Option<(Time, usize)> = None;
+                for (i, g) in guards.iter().enumerate() {
+                    if let Some(t) = g.pending_head() {
+                        if cand.map_or(true, |(bt, _)| t < bt) {
+                            cand = Some((t, i));
+                        }
+                    }
+                }
+                let Some((t, i)) = cand else { break };
+                // The conservative cut (see module docs).
+                let safe = guards
+                    .iter()
+                    .enumerate()
+                    .all(|(j, g)| j == i || g.next_time().map_or(true, |nj| (t, i) < (nj, j)));
+                if !safe {
+                    break;
+                }
+                guards[i].replay_head();
+            }
+            let done = guards.iter().all(|g| g.drained());
+            drop(guards);
+            if done {
+                stop.store(true, Ordering::Release);
+                barrier.wait(); // workers observe `stop` and exit
+                break;
+            }
+        }
+    });
+
+    let out = cells
+        .into_iter()
+        .map(|c| c.into_inner().expect("pdes tenant mutex poisoned"))
+        .collect();
+    (out, steps.load(Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::interleave;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Toy hub-coupled system: a schedule of (time, is_interaction)
+    /// events; interactions append (time, id, local order) to a shared
+    /// log (the "hub") and, like a real fabric load, schedule a local
+    /// follow-up event at `time + LAT`. `LAT >= LOOKAHEAD` keeps the toy
+    /// honest about the causality bound.
+    const LAT: Time = 10;
+    const LOOKAHEAD: Time = 10;
+
+    #[derive(Debug)]
+    struct Toy<'a> {
+        id: usize,
+        /// (time, hub-interaction?) events, merged with scheduled
+        /// follow-ups; kept sorted ascending by (time, insertion).
+        queue: std::collections::VecDeque<(Time, bool)>,
+        hub: &'a Mutex<Vec<(Time, usize)>>,
+        /// Deferred interaction times (deferral mode on = record).
+        defer: bool,
+        pending: std::collections::VecDeque<Time>,
+        steps_hint: &'a AtomicU64,
+    }
+
+    impl Toy<'_> {
+        fn interact(&mut self, t: Time) {
+            self.hub.lock().unwrap().push((t, self.id));
+            // Follow-up lands a full latency later; insert keeping the
+            // queue time-sorted (stable for equal times).
+            let at = t + LAT;
+            let pos = self.queue.partition_point(|&(qt, _)| qt <= at);
+            self.queue.insert(pos, (at, false));
+        }
+    }
+
+    impl Steppable for Toy<'_> {
+        fn next_time(&self) -> Option<Time> {
+            self.queue.front().map(|&(t, _)| t)
+        }
+        fn step(&mut self) -> bool {
+            let Some((t, hub)) = self.queue.pop_front() else { return false };
+            self.steps_hint.fetch_add(1, Ordering::Relaxed);
+            if hub {
+                if self.defer {
+                    self.pending.push_back(t);
+                } else {
+                    self.interact(t);
+                }
+            }
+            true
+        }
+    }
+
+    impl Lookahead for Toy<'_> {
+        fn advance(&mut self, lookahead: Time) -> u64 {
+            let mut steps = 0;
+            while let Some(t) = self.next_time() {
+                if let Some(&head) = self.pending.front() {
+                    if t >= head + lookahead {
+                        break;
+                    }
+                }
+                if !self.step() {
+                    break;
+                }
+                steps += 1;
+            }
+            steps
+        }
+        fn pending_head(&self) -> Option<Time> {
+            self.pending.front().copied()
+        }
+        fn replay_head(&mut self) -> bool {
+            let Some(t) = self.pending.pop_front() else { return false };
+            self.interact(t);
+            true
+        }
+        fn drained(&self) -> bool {
+            self.queue.is_empty() && self.pending.is_empty()
+        }
+    }
+
+    fn build<'a>(
+        hub: &'a Mutex<Vec<(Time, usize)>>,
+        steps: &'a AtomicU64,
+        defer: bool,
+    ) -> Vec<Toy<'a>> {
+        // Deliberately rough mix: equal times across systems, bursts,
+        // hub interactions back-to-back within the lookahead window.
+        let schedules: [&[(Time, bool)]; 5] = [
+            &[(0, true), (3, false), (25, true), (25, true), (90, false)],
+            &[(0, false), (5, true), (25, true), (60, true)],
+            &[(2, true), (2, true), (40, false), (80, true)],
+            &[(7, false), (8, false), (9, false)],
+            &[(5, true), (26, true), (47, true), (68, true), (89, true)],
+        ];
+        schedules
+            .iter()
+            .enumerate()
+            .map(|(id, sched)| Toy {
+                id,
+                queue: sched.iter().copied().collect(),
+                hub,
+                defer,
+                pending: std::collections::VecDeque::new(),
+                steps_hint: steps,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn conservative_run_matches_serial_interleave_exactly() {
+        let serial_hub = Mutex::new(Vec::new());
+        let serial_steps = AtomicU64::new(0);
+        let mut serial = build(&serial_hub, &serial_steps, false);
+        let steps = interleave(&mut serial);
+
+        for shards in [1, 2, 3, 5] {
+            for threads in [1, 2, 4] {
+                let hub = Mutex::new(Vec::new());
+                let hint = AtomicU64::new(0);
+                let systems = build(&hub, &hint, true);
+                let (out, psteps) = run_conservative(systems, shards, threads, LOOKAHEAD);
+                assert!(out.iter().all(|t| t.drained()));
+                assert_eq!(psteps, steps, "step count (shards {shards}, threads {threads})");
+                assert_eq!(
+                    *hub.lock().unwrap(),
+                    *serial_hub.lock().unwrap(),
+                    "hub order diverged at shards {shards}, threads {threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input_is_a_noop() {
+        let (out, steps) = run_conservative(Vec::<Toy>::new(), 4, 4, LOOKAHEAD);
+        assert!(out.is_empty());
+        assert_eq!(steps, 0);
+    }
+}

@@ -152,6 +152,35 @@ impl<E> EventQueue<E> {
         self.push_at(self.now + delay, event);
     }
 
+    /// Claim the sequence number the *next* `push_at` would have used,
+    /// without scheduling anything. Pair with [`push_at_seq`] to defer a
+    /// push while preserving the exact tie-break position it would have
+    /// had if made immediately — the mechanism the sharded pool
+    /// (`fabric::shard`) uses to replay deferred fabric completions
+    /// bit-identically to the serial run.
+    ///
+    /// [`push_at_seq`]: EventQueue::push_at_seq
+    #[inline]
+    pub fn reserve_seq(&mut self) -> u64 {
+        let s = self.seq;
+        self.seq += 1;
+        s
+    }
+
+    /// Schedule `event` at `at` under a sequence number previously
+    /// claimed with [`reserve_seq`]. The caller must use each reserved
+    /// seq at most once — (time, seq) keys must stay unique for the
+    /// active-bucket binary insert.
+    ///
+    /// [`reserve_seq`]: EventQueue::reserve_seq
+    pub fn push_at_seq(&mut self, at: Time, seq: u64, event: E) {
+        debug_assert!(at >= self.now, "event scheduled in the past: {} < {}", at, self.now);
+        debug_assert!(seq < self.seq, "seq {} was never reserved", seq);
+        let at = at.max(self.now);
+        self.pushed += 1;
+        self.insert(Entry { at, seq, event });
+    }
+
     /// Place an entry in the ring or the overflow heap.
     fn insert(&mut self, entry: Entry<E>) {
         let slot = Self::slot_of(entry.at);
@@ -346,6 +375,35 @@ mod tests {
         assert_eq!(q.popped(), 1);
         assert_eq!(q.len(), 1);
         assert!(!q.is_empty());
+    }
+
+    #[test]
+    fn reserved_seq_keeps_deferred_push_in_original_tie_position() {
+        // a reserves its slot, b pushes after it, both at the same time:
+        // a must still pop first, exactly as if it had pushed eagerly.
+        let mut q = EventQueue::new();
+        let seq_a = q.reserve_seq();
+        q.push_at(5, "b");
+        q.push_at_seq(5, seq_a, "a");
+        assert_eq!(q.pop(), Some((5, "a")));
+        assert_eq!(q.pop(), Some((5, "b")));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pushed(), 2);
+        assert_eq!(q.popped(), 2);
+    }
+
+    #[test]
+    fn reserved_seq_interleaves_with_plain_pushes() {
+        let mut q = EventQueue::new();
+        q.push_at(10, 0u32); // seq 0
+        let s1 = q.reserve_seq(); // seq 1
+        q.push_at(10, 2u32); // seq 2
+        let s3 = q.reserve_seq(); // seq 3
+        q.push_at_seq(10, s3, 3u32);
+        q.push_at_seq(10, s1, 1u32);
+        for want in 0..4u32 {
+            assert_eq!(q.pop(), Some((10, want)));
+        }
     }
 
     /// One bucket width in ps (for horizon-crossing tests).

@@ -13,82 +13,11 @@ use cxl_gpu::workloads::table1b::{spec, ALL_WORKLOADS};
 
 /// Everything deterministic about a run (wall-clock excluded, of course).
 /// Latency summaries are compared through their exact f64 bits: the same
-/// event order must produce the same accumulator states.
+/// event order must produce the same accumulator states. The field list
+/// lives on `RunMetrics` itself now (the sharded-pool equivalence layer
+/// compares through it too); this wrapper keeps the test bodies short.
 fn fingerprint(m: &RunMetrics) -> Vec<u64> {
-    vec![
-        m.exec_time,
-        m.events,
-        m.expander_loads,
-        m.expander_stores,
-        m.ds_intercepts,
-        m.ep_cache_hits,
-        m.media_reads,
-        m.faults,
-        m.gc_episodes,
-        m.sr_issued,
-        m.llc.hits,
-        m.llc.misses,
-        m.llc.merged,
-        m.llc.writebacks,
-        m.load_latency.count(),
-        m.load_latency.mean().to_bits(),
-        m.load_latency.max().to_bits(),
-        m.store_latency.count(),
-        m.store_latency.mean().to_bits(),
-        // Tiering counters: migration decisions are part of the
-        // deterministic surface (zero for untiered configs).
-        m.tier_promotions,
-        m.tier_demotions,
-        m.tier_migrated_bytes,
-        m.tier_fast_accesses,
-        m.tier_slow_accesses,
-        m.tier_epochs,
-        // Fabric counters: queue high-water marks, QoS throttling and
-        // per-tenant backpressure are deterministic too (zero for
-        // direct topologies and passthrough pools).
-        m.port_queue_hwm,
-        m.ingress_hwm,
-        m.qos_throttle_waits,
-        m.fabric_backpressure,
-        // Expander device-cache counters (DESIGN.md §14): admission
-        // decisions, eviction/writeback traffic and the drain-queue
-        // high-water mark are part of the deterministic surface (zero
-        // for uncached configs — which is exactly what makes the
-        // zero-capacity identity test below meaningful).
-        m.cache_hits,
-        m.cache_misses,
-        m.cache_writebacks,
-        m.cache_bypasses,
-        m.cache_wb_hwm,
-        // RAS counters (DESIGN.md §15): every fault draw comes from a
-        // forked per-port sub-stream, so retry/poison/timeout counts are
-        // part of the deterministic surface (zero for fault-free configs
-        // — which is what makes the zero-rate identity tests below
-        // meaningful).
-        m.ras_retries,
-        m.ras_replays,
-        m.ras_poisons,
-        m.ras_timeouts,
-        m.ras_failovers,
-        m.ras_dirty_rescued_bytes,
-        // Serving front-door counters (DESIGN.md §16): arrivals, the
-        // admission verdicts and the request-latency accumulator are part
-        // of the deterministic surface (zero for closed-loop configs —
-        // which is what makes the zero-rate identity test below
-        // meaningful).
-        m.serve_arrivals,
-        m.serve_admitted,
-        m.serve_rejected,
-        m.serve_shed,
-        m.serve_timed_out,
-        m.serve_retried,
-        m.serve_completed,
-        m.serve_completed_in_slo,
-        m.serve_queue_hwm,
-        m.req_latency.count(),
-        m.req_latency.mean().to_bits(),
-        m.req_latency.max().to_bits(),
-    ]
+    m.fingerprint()
 }
 
 fn small(name: &str, media: MediaKind) -> SystemConfig {
@@ -362,6 +291,86 @@ fn pool_runs_are_bit_reproducible() {
     // And the pool genuinely interleaved: every tenant transited the
     // switch.
     assert!(a.tenants.iter().all(|t| t.metrics.ingress_hwm >= 1));
+}
+
+/// The shard identity at its degenerate point (DESIGN.md §17): a
+/// `cxl-pool-shard` pool collapsed to one shard takes the serial
+/// coordinator verbatim, and the config differs from `cxl-pool` only in
+/// name — so the sharded entry point must reproduce `run_pool` over the
+/// plain `cxl-pool` config bit-for-bit: tenants, pool sums, event count.
+#[test]
+fn one_shard_pool_shard_reproduces_cxl_pool_bit_identically() {
+    use cxl_gpu::fabric::{run_pool, run_pool_sharded, Tenant};
+    let tenants = |name: &str| -> Vec<Tenant> {
+        [("bfs", 8usize, 4usize), ("vadd", 16, 2), ("sort", 4, 8)]
+            .iter()
+            .map(|&(wl, warps, mlp)| {
+                let mut cfg = SystemConfig::named(name, MediaKind::Ddr5);
+                cfg.total_ops = 6_000;
+                cfg.warps = warps;
+                cfg.mlp = mlp;
+                cfg.footprint = 4 << 20;
+                cfg.local_bytes = 256 << 10;
+                Tenant { workload: spec(wl), cfg }
+            })
+            .collect()
+    };
+    let serial = run_pool(&tenants("cxl-pool")).expect("serial pool");
+    let sharded = run_pool_sharded(&tenants("cxl-pool-shard"), 1, None).expect("sharded pool");
+    assert_eq!(serial.events, sharded.events, "merged event count diverged");
+    assert_eq!(format!("{:?}", serial.pool), format!("{:?}", sharded.pool));
+    for (ta, tb) in serial.tenants.iter().zip(&sharded.tenants) {
+        assert_eq!(
+            fingerprint(&ta.metrics),
+            fingerprint(&tb.metrics),
+            "tenant {} diverged between cxl-pool and 1-shard cxl-pool-shard",
+            ta.workload
+        );
+    }
+    assert!(serial.tenants.iter().all(|t| t.metrics.expander_loads > 0));
+}
+
+/// Worker-count independence: repeated sharded runs must be
+/// bit-identical to each other at 1 worker thread and at 4 — the thread
+/// count is pure wall-clock, never semantics. The explicit `Some(n)`
+/// pins the knob that `CXL_GPU_THREADS` feeds through `thread_count()`
+/// when callers pass `None` (mutating the env var in-process would race
+/// other tests, so the override path is exercised by value here).
+#[test]
+fn sharded_pool_runs_are_bit_reproducible_across_thread_counts() {
+    use cxl_gpu::fabric::{run_pool_sharded, Tenant};
+    let tenants = || -> Vec<Tenant> {
+        [("path", 4usize, 2usize), ("sort", 16, 8), ("bfs", 8, 4), ("vadd", 8, 2)]
+            .iter()
+            .map(|&(wl, warps, mlp)| {
+                let mut cfg = SystemConfig::named("cxl-pool-shard", MediaKind::Ddr5);
+                cfg.total_ops = 6_000;
+                cfg.warps = warps;
+                cfg.mlp = mlp;
+                cfg.footprint = 4 << 20;
+                cfg.local_bytes = 256 << 10;
+                Tenant { workload: spec(wl), cfg }
+            })
+            .collect()
+    };
+    let runs: Vec<_> = [1usize, 1, 4, 4]
+        .iter()
+        .map(|&threads| run_pool_sharded(&tenants(), 4, Some(threads)).expect("sharded pool"))
+        .collect();
+    let first = &runs[0];
+    assert!(first.tenants.iter().all(|t| t.metrics.expander_loads > 0));
+    for (i, r) in runs.iter().enumerate().skip(1) {
+        assert_eq!(first.events, r.events, "run {i}: merged event count diverged");
+        assert_eq!(format!("{:?}", first.pool), format!("{:?}", r.pool), "run {i}");
+        for (ta, tb) in first.tenants.iter().zip(&r.tenants) {
+            assert_eq!(
+                fingerprint(&ta.metrics),
+                fingerprint(&tb.metrics),
+                "run {i}: tenant {} diverged across thread counts",
+                ta.workload
+            );
+        }
+    }
 }
 
 #[test]

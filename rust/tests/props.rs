@@ -974,6 +974,68 @@ fn prop_poisson_empirical_mean_matches_rate() {
     });
 }
 
+/// Sharded-pool equivalence (DESIGN.md §17), the tentpole contract as a
+/// property: for random tenant mixes (workload, warps, MLP, WRR weight,
+/// seed), random tenant counts {2, 4, 8} and shard counts {1, 2, 3, 4}
+/// — 3 never divides the tenant count, so shard widths are uneven —
+/// the conservative-lookahead coordinator must reproduce the serial
+/// `run_pool` bit-for-bit: every tenant's metrics fingerprint, the
+/// shared pool sums, and the merged event count.
+#[test]
+fn prop_sharded_pool_matches_serial_bit_for_bit() {
+    use cxl_gpu::coordinator::config::SystemConfig;
+    use cxl_gpu::fabric::{run_pool, run_pool_sharded, Tenant};
+    use cxl_gpu::media::MediaKind;
+    use cxl_gpu::workloads::table1b::spec;
+    check("sharded-pool-identity", 0x54A2D, 6, |g| {
+        let cfg_name = *g.choose("config", &["cxl-pool-shard", "cxl-pool-qos"]);
+        let n = *g.choose("tenants", &[2usize, 4, 8]);
+        let tenants: Vec<Tenant> = (0..n)
+            .map(|i| {
+                let wl = g.choose(&format!("wl{i}"), &["vadd", "bfs", "sort", "path"]);
+                let mut cfg = SystemConfig::named(cfg_name, MediaKind::Ddr5);
+                cfg.total_ops = 3_000;
+                cfg.warps = g.usize(&format!("warps{i}"), 2, 16);
+                cfg.mlp = g.usize(&format!("mlp{i}"), 1, 8);
+                cfg.seed = g.u64(&format!("seed{i}"), 0, 1 << 40);
+                cfg.fabric.weight = g.u64(&format!("weight{i}"), 1, 4) as u32;
+                cfg.footprint = 4 << 20;
+                cfg.local_bytes = 64 << 10; // mostly-expander: heavy coupling
+                Tenant { workload: spec(wl), cfg }
+            })
+            .collect();
+        let serial = run_pool(&tenants).map_err(|e| e.to_string())?;
+        if serial.tenants.iter().all(|t| t.metrics.expander_loads == 0) {
+            return Err("mix never crossed the fabric: the identity would be vacuous".into());
+        }
+        let serial_fps: Vec<Vec<u64>> =
+            serial.tenants.iter().map(|t| t.metrics.fingerprint()).collect();
+        for shards in [1usize, 2, 3, 4] {
+            let threads = g.usize(&format!("threads{shards}"), 1, 4);
+            let sharded =
+                run_pool_sharded(&tenants, shards, Some(threads)).map_err(|e| e.to_string())?;
+            if sharded.events != serial.events {
+                return Err(format!(
+                    "{n} tenants / {shards} shards: events {} != serial {}",
+                    sharded.events, serial.events
+                ));
+            }
+            if format!("{:?}", sharded.pool) != format!("{:?}", serial.pool) {
+                return Err(format!("{n} tenants / {shards} shards: pool sums diverged"));
+            }
+            for (i, t) in sharded.tenants.iter().enumerate() {
+                if t.metrics.fingerprint() != serial_fps[i] {
+                    return Err(format!(
+                        "{n} tenants / {shards} shards: tenant {i} ({}) diverged from serial",
+                        t.workload
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 /// Front-door conservation under arbitrary overload, end to end through
 /// the simulator: every arrival is admitted or rejected, and every
 /// admitted request exits exactly once — completed, shed, or timed out
