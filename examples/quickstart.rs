@@ -7,6 +7,7 @@
 use cxl_gpu::coordinator::config::SystemConfig;
 use cxl_gpu::coordinator::runner::run_with;
 use cxl_gpu::media::MediaKind;
+use cxl_gpu::obs::Stage;
 use cxl_gpu::util::bench::Table;
 use cxl_gpu::workloads::table1b::spec;
 
@@ -47,5 +48,35 @@ fn main() {
         ]);
     }
     t.print();
+
+    // Where the nanoseconds go: re-run the plain expander with the §18
+    // span tracer armed (tracing adds no latency and draws no RNG, so
+    // the run itself is bit-identical) and print the per-stage ledger.
+    let mut cfg = SystemConfig::named("cxl", MediaKind::Znand);
+    cfg.ssd_scale();
+    cfg.obs.enabled = true;
+    cfg.obs.sample_shift = 0;
+    let m = run_with(spec("vadd"), &cfg).metrics;
+    let mut b = Table::new(
+        "cxl on vadd — mean ns per sampled span, by path stage (sums to e2e)",
+        &["stage", "ns/span", "share"],
+    );
+    for &s in Stage::ALL.iter() {
+        let ns = m.obs_stage_per_span_ns(s);
+        if ns == 0.0 {
+            continue;
+        }
+        b.rowv(vec![
+            s.name().into(),
+            format!("{ns:.1}"),
+            format!("{:.1}%", m.obs_stage_share(s) * 100.0),
+        ]);
+    }
+    b.print();
+    println!(
+        "{} spans traced, {} conservation violations",
+        m.obs_spans(),
+        m.obs_violations()
+    );
     println!("\nSee `cxl-gpu experiments` for the full figure reproductions.");
 }

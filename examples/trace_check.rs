@@ -1,0 +1,46 @@
+//! Validate a `--trace-out` file (docs/TRACING.md): parse it through the
+//! in-tree JSON parser and check the trace-event shape CI relies on —
+//! a `traceEvents` array with process-name metadata, complete (`X`)
+//! span events, and nonnegative ts/dur on every event. Exits nonzero
+//! with a message on any violation; prints a one-line census on success.
+//!
+//!     cargo run --release --example trace_check -- run.json
+
+use cxl_gpu::util::json::{parse, Json};
+
+fn main() {
+    let path = std::env::args().nth(1).unwrap_or_else(|| "run.json".into());
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{path}: {e}"));
+    let doc = parse(&text).unwrap_or_else(|e| panic!("{path}: invalid JSON: {e}"));
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|| panic!("{path}: no traceEvents array"));
+    assert!(!events.is_empty(), "{path}: empty traceEvents");
+    let (mut meta, mut spans) = (0usize, 0usize);
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(Json::as_str)
+            .unwrap_or_else(|| panic!("{path}: event {i} has no ph"));
+        match ph {
+            "M" => meta += 1,
+            "X" => {
+                spans += 1;
+                let ts = ev.get("ts").and_then(Json::as_f64);
+                let dur = ev.get("dur").and_then(Json::as_f64);
+                match (ts, dur) {
+                    (Some(ts), Some(dur)) if ts >= 0.0 && dur >= 0.0 => {}
+                    _ => panic!("{path}: event {i} has bad ts/dur"),
+                }
+                assert!(ev.get("pid").is_some(), "{path}: event {i} has no pid");
+                assert!(ev.get("name").is_some(), "{path}: event {i} has no name");
+            }
+            other => panic!("{path}: event {i} has unexpected ph `{other}`"),
+        }
+    }
+    assert!(meta > 0, "{path}: no process_name metadata events");
+    assert!(spans > 0, "{path}: no span events");
+    println!("{path}: OK ({} events: {meta} metadata, {spans} spans)", events.len());
+}

@@ -1,0 +1,118 @@
+//! §18 — span-tracing overhead: armed tracing at 1/64 sampling must be
+//! a rounding error on the simulator hot path.
+//!
+//! Runs the same (config, workload) cells with tracing disabled and with
+//! tracing armed at `sample_shift = 6`, five repeats each, and compares
+//! median wall-clocks. Emits `BENCH_obs_overhead.json` (schema:
+//! docs/BENCH_SCHEMA.md) before asserting, then enforces two floors:
+//! armed throughput stays above the engine's 2M events/s floor, and the
+//! armed median wall-clock stays within 1.10x of the disabled one.
+use std::collections::BTreeMap;
+
+use cxl_gpu::coordinator::config::SystemConfig;
+use cxl_gpu::coordinator::system::System;
+use cxl_gpu::media::MediaKind;
+use cxl_gpu::util::bench::Table;
+use cxl_gpu::util::json::Json;
+use cxl_gpu::workloads::table1b::spec;
+
+/// Same floor as sim_throughput: tracing must not cost the engine its
+/// events-per-second budget.
+const FLOOR_EVENTS_PER_SEC: f64 = 2.0e6;
+/// Armed-over-disabled wall-clock ceiling at 1/64 sampling.
+const MAX_WALL_RATIO: f64 = 1.10;
+const REPEATS: usize = 5;
+
+/// Median wall-clock (ns) and the last run's metrics-derived event rate.
+fn median_wall(cfg: &SystemConfig, wl: &str) -> (f64, f64) {
+    let mut walls: Vec<f64> = Vec::with_capacity(REPEATS);
+    let mut eps = 0.0;
+    for _ in 0..REPEATS {
+        let m = System::new(spec(wl), cfg).run();
+        walls.push(m.wall_ns as f64);
+        eps = m.events_per_sec();
+    }
+    walls.sort_by(|a, b| a.partial_cmp(b).expect("wall-clock is finite"));
+    (walls[REPEATS / 2], eps)
+}
+
+fn main() {
+    let mut t = Table::new(
+        "obs overhead — armed (1/64 sampling) vs disabled, median of 5",
+        &["config", "workload", "off (ms)", "on (ms)", "ratio", "on M events/s", "spans"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut worst_ratio = 0.0f64;
+    let mut worst_eps = f64::INFINITY;
+    for (cfg_name, media, wl) in [
+        ("cxl", MediaKind::Ddr5, "vadd"),
+        ("cxl-cache", MediaKind::Znand, "hot90"),
+    ] {
+        let mut off = SystemConfig::named(cfg_name, media);
+        off.total_ops = 2_000_000;
+        if media.is_ssd() {
+            off.ssd_scale();
+        }
+        let mut on = off.clone();
+        on.obs.enabled = true;
+        on.obs.sample_shift = 6;
+
+        let (off_wall, _) = median_wall(&off, wl);
+        let (on_wall, on_eps) = median_wall(&on, wl);
+        let spans = System::new(spec(wl), &on).run().obs_spans();
+        let ratio = on_wall / off_wall;
+        worst_ratio = worst_ratio.max(ratio);
+        worst_eps = worst_eps.min(on_eps);
+
+        t.rowv(vec![
+            cfg_name.into(),
+            wl.into(),
+            format!("{:.1}", off_wall / 1e6),
+            format!("{:.1}", on_wall / 1e6),
+            format!("{ratio:.3}"),
+            format!("{:.2}", on_eps / 1e6),
+            spans.to_string(),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("config".into(), Json::Str(cfg_name.into()));
+        row.insert("media".into(), Json::Str(media.name().into()));
+        row.insert("workload".into(), Json::Str(wl.into()));
+        row.insert("off_wall_ns".into(), Json::Num(off_wall));
+        row.insert("on_wall_ns".into(), Json::Num(on_wall));
+        row.insert("wall_ratio".into(), Json::Num(ratio));
+        row.insert("on_events_per_sec".into(), Json::Num(on_eps));
+        row.insert("spans".into(), Json::Num(spans as f64));
+        rows.push(Json::Obj(row));
+    }
+    t.print();
+
+    // Write the report before asserting so a floor regression still
+    // leaves the numbers on disk for diagnosis.
+    let mut top = BTreeMap::new();
+    top.insert("bench".into(), Json::Str("obs_overhead".into()));
+    top.insert("schema".into(), Json::Str("docs/BENCH_SCHEMA.md".into()));
+    top.insert("floor_events_per_sec".into(), Json::Num(FLOOR_EVENTS_PER_SEC));
+    top.insert("max_wall_ratio".into(), Json::Num(MAX_WALL_RATIO));
+    top.insert("worst_wall_ratio".into(), Json::Num(worst_ratio));
+    top.insert("worst_on_events_per_sec".into(), Json::Num(worst_eps));
+    top.insert("results".into(), Json::Arr(rows));
+    let path = "BENCH_obs_overhead.json";
+    match std::fs::write(path, Json::Obj(top).to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+
+    assert!(
+        worst_eps > FLOOR_EVENTS_PER_SEC,
+        "armed tracing drops the simulator below {:.0}M events/s: {worst_eps}",
+        FLOOR_EVENTS_PER_SEC / 1e6
+    );
+    assert!(
+        worst_ratio < MAX_WALL_RATIO,
+        "armed tracing costs more than {MAX_WALL_RATIO}x wall-clock: {worst_ratio:.3}x"
+    );
+    println!(
+        "obs_overhead bench OK (worst ratio {worst_ratio:.3}x, worst armed {:.1} M events/s)",
+        worst_eps / 1e6
+    );
+}

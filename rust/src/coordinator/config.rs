@@ -8,6 +8,7 @@ use crate::expander::CacheSpec;
 use crate::fabric::FabricSpec;
 use crate::gpu::LlcConfig;
 use crate::media::{DramModel, DramTimings, MediaKind, SsdModel, SsdParams};
+use crate::obs::ObsSpec;
 use crate::ras::FaultSpec;
 use crate::rootcomplex::{EpBackend, RootPort, SrPolicy, TierConfig};
 use crate::serve::ServeSpec;
@@ -91,6 +92,11 @@ pub struct SystemConfig {
     /// inert spec (disabled or zero rate) builds no front door — the run
     /// is bit-identical to the same config without serving.
     pub serve: ServeSpec,
+    /// Span tracing + latency-attribution ledger (DESIGN.md §18,
+    /// `rust/src/obs/`). Disabled by default and structurally inert —
+    /// no named config arms it; the `obs` experiment (and the
+    /// `sim.obs` TOML key) do.
+    pub obs: ObsSpec,
 }
 
 impl SystemConfig {
@@ -124,6 +130,7 @@ impl SystemConfig {
             cache: CacheSpec::default(),
             ras: FaultSpec::default(),
             serve: ServeSpec::default(),
+            obs: ObsSpec::default(),
         }
     }
 
@@ -416,6 +423,9 @@ impl SystemConfig {
         self.serve.enabled = doc.bool_or("sim.serve", self.serve.enabled);
         self.serve.rate_rps =
             doc.int_or("sim.serve_rps", self.serve.rate_rps as i64) as f64;
+        self.obs.enabled = doc.bool_or("sim.obs", self.obs.enabled);
+        self.obs.sample_shift =
+            doc.int_or("sim.obs_shift", self.obs.sample_shift as i64) as u32;
     }
 }
 
@@ -548,6 +558,16 @@ mod tests {
         assert!(zeroed.serve.is_inert());
         assert!(!SystemConfig::named("cxl", MediaKind::Ddr5).serve.enabled);
         assert!(!SystemConfig::named("cxl-pool-qos", MediaKind::Ddr5).serve.enabled);
+    }
+
+    #[test]
+    fn obs_toml_overrides_apply() {
+        let doc = crate::util::toml::parse("[sim]\nobs = true\nobs_shift = 0").unwrap();
+        let mut c = SystemConfig::base();
+        assert!(!c.obs.enabled, "tracing is off by default (structural inertness)");
+        c.apply_toml(&doc);
+        assert!(c.obs.enabled);
+        assert_eq!(c.obs.sample_shift, 0);
     }
 
     #[test]

@@ -1631,3 +1631,116 @@ pub fn pool_scale(scale: Scale, print: bool) -> PoolScaleSweep {
     }
     res
 }
+
+// ---------------------------------------------------------------------------
+// Obs — span-ledger latency attribution breakdown (§18)
+// ---------------------------------------------------------------------------
+
+/// One configuration's stacked per-stage breakdown.
+#[derive(Debug, Clone)]
+pub struct ObsRow {
+    pub name: &'static str,
+    /// Sampled spans.
+    pub spans: u64,
+    /// Ledger conservation violations (must be 0).
+    pub violations: u64,
+    /// Mean ns per sampled span attributed to each stage, in
+    /// `Stage::ALL` order — the stacked-bar column heights; they
+    /// reassemble `mean_e2e_ns` exactly.
+    pub per_span_ns: Vec<f64>,
+    /// Mean sampled end-to-end latency, ns.
+    pub mean_e2e_ns: f64,
+    /// The full report (the `--trace-out` exporter reads its span ring).
+    pub report: crate::obs::ObsReport,
+}
+
+/// Aggregate result of [`obs`].
+#[derive(Debug, Clone)]
+pub struct ObsSweep {
+    pub rows: Vec<ObsRow>,
+    /// Every row had zero violations and its stacked stages reassembled
+    /// its mean end-to-end latency (within f64 division rounding).
+    pub conserved: bool,
+}
+
+/// The `--fig obs` stacked latency-attribution breakdown: the same
+/// workload through five configurations that exercise disjoint path
+/// legs — plain `cxl` (queue + links + media), `cxl-cache` (expander
+/// cache hits and drains), `cxl-pool-qos` (switch arbitration + hops),
+/// `cxl-ras` (retry legs), `cxl-serve` (the serving mix) — with
+/// tracing armed at 1/16 sampling. Where the nanoseconds went, per
+/// stage, with the conservation invariant checked on every row.
+pub fn obs(scale: Scale, print: bool) -> ObsSweep {
+    use crate::obs::Stage;
+    const CONFIGS: [&str; 5] = ["cxl", "cxl-cache", "cxl-pool-qos", "cxl-ras", "cxl-serve"];
+    let jobs: Vec<SweepJob> = CONFIGS
+        .iter()
+        .map(|&name| {
+            let mut cfg = SystemConfig::named(name, MediaKind::Znand);
+            cfg.total_ops = scale.ssd_ops;
+            cfg.ssd_scale();
+            cfg.obs.enabled = true;
+            cfg.obs.sample_shift = 4;
+            (spec("bfs"), cfg)
+        })
+        .collect();
+    let results = run_jobs(&jobs);
+
+    let rows: Vec<ObsRow> = CONFIGS
+        .iter()
+        .zip(&results)
+        .map(|(&name, r)| {
+            let rep = r.metrics.obs.clone().expect("armed obs config must report");
+            ObsRow {
+                name,
+                spans: rep.spans,
+                violations: rep.violations,
+                per_span_ns: Stage::ALL.iter().map(|&s| rep.stage_per_span_ns(s)).collect(),
+                mean_e2e_ns: rep.e2e.mean() / 1_000.0,
+                report: rep,
+            }
+        })
+        .collect();
+    let conserved = rows.iter().all(|r| {
+        let stacked: f64 = r.per_span_ns.iter().sum();
+        r.violations == 0
+            && r.spans > 0
+            && (stacked - r.mean_e2e_ns).abs() <= 1e-6 * r.mean_e2e_ns.max(1.0)
+    });
+    let res = ObsSweep { rows, conserved };
+    if print {
+        let mut cols: Vec<&str> = vec!["stage"];
+        cols.extend(CONFIGS);
+        let mut t = Table::new(
+            "Obs — per-stage latency attribution, mean ns per sampled span (bfs, Z-NAND)",
+            &cols,
+        );
+        for (si, &stage) in Stage::ALL.iter().enumerate() {
+            if res.rows.iter().all(|r| r.per_span_ns[si] == 0.0) {
+                continue; // stage never traversed by any config
+            }
+            let mut row = vec![stage.name().to_string()];
+            for r in &res.rows {
+                row.push(format!("{:.1}", r.per_span_ns[si]));
+            }
+            t.rowv(row);
+        }
+        let mut total = vec!["= e2e mean".to_string()];
+        for r in &res.rows {
+            total.push(format!("{:.1}", r.mean_e2e_ns));
+        }
+        t.rowv(total);
+        let mut spans = vec!["spans".to_string()];
+        for r in &res.rows {
+            spans.push(r.spans.to_string());
+        }
+        t.rowv(spans);
+        t.print();
+        println!(
+            "conservation: stages sum to end-to-end on every row ({} violations) — {}",
+            res.rows.iter().map(|r| r.violations).sum::<u64>(),
+            if res.conserved { "ok" } else { "VIOLATED" }
+        );
+    }
+    res
+}

@@ -17,6 +17,7 @@ use crate::baselines::{GdsManager, UvmManager};
 use crate::fabric::{CxlSwitch, FabricLink};
 use crate::gpu::{line_of, AccessResult, Llc, MemMap, Op, OpSource, Region, Warp, LINE};
 use crate::media::{DramModel, DramTimings, MediaKind, SsdModel, SsdParams};
+use crate::obs::{ObsState, SpanKind, Stage};
 use crate::rootcomplex::{EpBackend, LoadPath, RootComplex};
 use crate::serve::FrontDoor;
 use crate::sim::{EventQueue, Lookahead, Steppable, Time, US};
@@ -117,6 +118,11 @@ pub struct System {
     defer_fabric: bool,
     /// Pending recorded fabric interactions, in program order.
     deferred: VecDeque<FabricOp>,
+    /// Span tracer (§18); `None` unless `cfg.obs` is armed, so disabled
+    /// configs never even consult it (structural inertness). Tracing
+    /// reads timestamps the simulation computes anyway and draws no RNG,
+    /// so even an armed tracer leaves the fingerprint bit-identical.
+    obs: Option<ObsState>,
     pub metrics: RunMetrics,
 }
 
@@ -298,6 +304,7 @@ impl System {
             started: std::time::Instant::now(),
             defer_fabric: false,
             deferred: VecDeque::new(),
+            obs: ObsState::new(&cfg.obs),
             metrics,
         })
     }
@@ -510,6 +517,9 @@ impl System {
             self.metrics.serve_completed_in_slo = s.completed_in_slo;
             self.metrics.serve_queue_hwm = s.queue_hwm;
         }
+        if let Some(o) = &self.obs {
+            self.metrics.obs = Some(o.report());
+        }
         self.metrics.wall_ns = self.started.elapsed().as_nanos();
         self.metrics
     }
@@ -621,6 +631,13 @@ impl System {
                         AccessResult::Hit { done } => {
                             self.warps[w].pop();
                             self.warps[w].issue_load();
+                            if let Some(o) = &mut self.obs {
+                                if o.sample(SpanKind::LlcHit) {
+                                    o.scratch.reset();
+                                    o.scratch.add(Stage::Llc, done - now);
+                                    o.finish(SpanKind::LlcHit, now, done);
+                                }
+                            }
                             self.q.push_at(done, Ev::LoadDone { warp: w, issued: now });
                         }
                         AccessResult::MergedMiss => {
@@ -699,7 +716,17 @@ impl System {
     fn fill(&mut self, now: Time, addr: u64, for_store: bool) -> Time {
         let _ = for_store;
         match self.memmap.region(addr) {
-            Region::Local => self.local.access(now, addr, LINE, false),
+            Region::Local => {
+                let done = self.local.access(now, addr, LINE, false);
+                if let Some(o) = &mut self.obs {
+                    if o.sample(SpanKind::LocalFill) {
+                        o.scratch.reset();
+                        o.scratch.add(Stage::Media, done - now);
+                        o.finish(SpanKind::LocalFill, now, done);
+                    }
+                }
+                done
+            }
             Region::Expander | Region::Host => self.expander_load(now, addr),
         }
     }
@@ -714,11 +741,28 @@ impl System {
                 return self.local.access(now, addr, LINE, false);
             }
             Backend::Cxl(rc) => {
-                let out = rc.load(now, off, LINE);
+                // The full-path span: the ledger rides the traced call
+                // chain (root complex → switch → port → media/RAS) and
+                // telescopes back to exactly `out.done - now`.
+                let sampled = self.obs.as_mut().map_or(false, |o| o.sample(SpanKind::Load));
+                let trace = if sampled {
+                    self.obs.as_mut().map(|o| {
+                        o.scratch.reset();
+                        &mut o.scratch
+                    })
+                } else {
+                    None
+                };
+                let out = rc.load_traced(now, off, LINE, trace);
                 match out.path {
                     LoadPath::DsIntercept => self.metrics.ds_intercepts += 1,
                     LoadPath::EpCacheHit => self.metrics.ep_cache_hits += 1,
                     LoadPath::Media => self.metrics.media_reads += 1,
+                }
+                if sampled {
+                    if let Some(o) = &mut self.obs {
+                        o.finish(SpanKind::Load, now, out.done);
+                    }
                 }
                 out.done
             }
@@ -790,8 +834,22 @@ impl System {
                 now
             }
             Backend::Cxl(rc) => {
-                let out = rc.store(now, off, LINE, &mut self.rng);
+                let sampled = self.obs.as_mut().map_or(false, |o| o.sample(SpanKind::Store));
+                let trace = if sampled {
+                    self.obs.as_mut().map(|o| {
+                        o.scratch.reset();
+                        &mut o.scratch
+                    })
+                } else {
+                    None
+                };
+                let out = rc.store_traced(now, off, LINE, &mut self.rng, trace);
                 self.metrics.store_latency.add((out.ack - now) as f64);
+                if sampled {
+                    if let Some(o) = &mut self.obs {
+                        o.finish(SpanKind::Store, now, out.ack);
+                    }
+                }
                 out.ack
             }
             Backend::Uvm(u) => {

@@ -24,6 +24,7 @@
 
 use crate::cxl::DevLoad;
 use crate::media::MediaKind;
+use crate::obs::{Stage, StageTrace};
 use crate::rootcomplex::rootport::{EpBackend, LoadOutcome, RootPort, StoreOutcome};
 use crate::rootcomplex::spec_read::MEM_QUEUE_CAP;
 use crate::sim::Time;
@@ -424,8 +425,25 @@ impl CxlSwitch {
     /// Route a demand load from upstream `up` to downstream endpoint
     /// `down` at device address `addr`.
     pub fn load(&mut self, up: usize, down: usize, now: Time, addr: u64, len: u64) -> LoadOutcome {
+        self.load_traced(up, down, now, addr, len, None)
+    }
+
+    /// [`load`](CxlSwitch::load) with an optional span ledger: the
+    /// admission wait (token bucket + ingress + WRR) is attributed to
+    /// `SwitchArb`, both hops to `SwitchHop`, and the ledger is threaded
+    /// on to the endpoint. Passthrough mode forwards the ledger
+    /// untouched — bit-transparency includes attributing nothing.
+    pub fn load_traced(
+        &mut self,
+        up: usize,
+        down: usize,
+        now: Time,
+        addr: u64,
+        len: u64,
+        mut trace: Option<&mut StageTrace>,
+    ) -> LoadOutcome {
         if self.passthrough {
-            return self.downstream[down].load(now, addr, len);
+            return self.downstream[down].load_traced(now, addr, len, trace);
         }
         self.demote_if_degraded(down);
         let CxlSwitch { spec, downstream, up: ups, unloaded, .. } = self;
@@ -433,6 +451,10 @@ impl CxlSwitch {
         u.stats.loads += 1;
         let (islot, wslot, start) = Self::admit(u, spec.qos, down, now, len);
         let at_port = start + spec.hop_lat;
+        if let Some(t) = trace.as_deref_mut() {
+            t.add(Stage::SwitchArb, start - now);
+            t.add(Stage::SwitchHop, 2 * spec.hop_lat);
+        }
         // The endpoint's DevLoad as this tenant's request arrives: the
         // backpressure channel, attributed to the originating tenant
         // only.
@@ -443,7 +465,7 @@ impl CxlSwitch {
                 u.stats.backpressure_severe += 1;
             }
         }
-        let out = downstream[down].load(at_port, addr, len);
+        let out = downstream[down].load_traced(at_port, addr, len, trace);
         let done = out.done + spec.hop_lat;
         u.slots[islot] = done;
         u.share[down][wslot] = done;
@@ -478,8 +500,23 @@ impl CxlSwitch {
         len: u64,
         rng: &mut Pcg32,
     ) -> StoreOutcome {
+        self.store_traced(up, down, now, addr, len, rng, None)
+    }
+
+    /// [`store`](CxlSwitch::store) with an optional span ledger (same
+    /// attribution as [`load_traced`](CxlSwitch::load_traced)).
+    pub fn store_traced(
+        &mut self,
+        up: usize,
+        down: usize,
+        now: Time,
+        addr: u64,
+        len: u64,
+        rng: &mut Pcg32,
+        mut trace: Option<&mut StageTrace>,
+    ) -> StoreOutcome {
         if self.passthrough {
-            return self.downstream[down].store(now, addr, len, rng);
+            return self.downstream[down].store_traced(now, addr, len, rng, trace);
         }
         self.demote_if_degraded(down);
         let CxlSwitch { spec, downstream, up: ups, .. } = self;
@@ -487,6 +524,10 @@ impl CxlSwitch {
         u.stats.stores += 1;
         let (islot, wslot, start) = Self::admit(u, spec.qos, down, now, len);
         let at_port = start + spec.hop_lat;
+        if let Some(t) = trace.as_deref_mut() {
+            t.add(Stage::SwitchArb, start - now);
+            t.add(Stage::SwitchHop, 2 * spec.hop_lat);
+        }
         let dl = downstream[down].devload(at_port);
         if dl.overloaded() {
             u.stats.backpressure += 1;
@@ -494,7 +535,7 @@ impl CxlSwitch {
                 u.stats.backpressure_severe += 1;
             }
         }
-        let out = downstream[down].store(at_port, addr, len, rng);
+        let out = downstream[down].store_traced(at_port, addr, len, rng, trace);
         let ack = out.ack + spec.hop_lat;
         u.slots[islot] = ack;
         u.share[down][wslot] = ack;

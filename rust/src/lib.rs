@@ -27,6 +27,7 @@ pub mod expander;
 pub mod fabric;
 pub mod gpu;
 pub mod media;
+pub mod obs;
 pub mod ras;
 pub mod rootcomplex;
 /// PJRT artifact execution. Needs the vendored `xla` closure (plus

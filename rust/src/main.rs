@@ -20,7 +20,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match cli::parse(
         &argv,
-        &["workload", "config", "media", "ops", "fig", "toml", "artifacts", "seed", "json"],
+        &["workload", "config", "media", "ops", "fig", "toml", "artifacts", "seed", "json", "trace-out"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -60,7 +60,7 @@ fn usage() -> String {
         &[
             ("run", "simulate one workload under one configuration"),
             ("suite", "simulate all 13 workloads under one configuration"),
-            ("experiments", "reproduce the paper's figures (--fig 3b|9a|9b|9c|9d|9e|table1b|headline|tier|mt|cache|ras|serve|pool-scale)"),
+            ("experiments", "reproduce the paper's figures (--fig 3b|9a|9b|9c|9d|9e|table1b|headline|tier|mt|cache|ras|serve|pool-scale|obs)"),
             ("latency", "Fig. 3b controller round-trip comparison"),
             ("execute", "run an AOT workload artifact via PJRT (real compute)"),
             ("list", "show workloads, configurations and media"),
@@ -73,6 +73,7 @@ fn usage() -> String {
             OptSpec { name: "fig", help: "figure selector for `experiments`", takes_value: true },
             OptSpec { name: "toml", help: "TOML config file with [sim] overrides", takes_value: true },
             OptSpec { name: "artifacts", help: "artifacts dir for `execute` (default artifacts/)", takes_value: true },
+            OptSpec { name: "trace-out", help: "with --fig obs: write a Chrome/Perfetto trace JSON here", takes_value: true },
             OptSpec { name: "quick", help: "smaller sweeps for experiments", takes_value: false },
         ],
     )
@@ -178,6 +179,19 @@ fn cmd_experiments(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
             "pool-scale" => {
                 experiments::pool_scale(scale, true);
             }
+            "obs" => {
+                let sweep = experiments::obs(scale, true);
+                if let Some(path) = args.get("trace-out") {
+                    let reports: Vec<(String, cxl_gpu::obs::ObsReport)> = sweep
+                        .rows
+                        .iter()
+                        .map(|r| (r.name.to_string(), r.report.clone()))
+                        .collect();
+                    let json = cxl_gpu::obs::chrome_trace(&reports);
+                    std::fs::write(path, json.to_string()).map_err(|e| format!("{path}: {e}"))?;
+                    println!("wrote {path} (chrome://tracing / Perfetto trace-event JSON)");
+                }
+            }
             other => return Err(format!("unknown figure `{other}`")),
         }
         Ok(())
@@ -185,7 +199,7 @@ fn cmd_experiments(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
     if which == "all" {
         for f in [
             "3b", "table1b", "9a", "9b", "9c", "9d", "9e", "headline", "tier", "mt", "cache",
-            "ras", "serve", "pool-scale",
+            "ras", "serve", "pool-scale", "obs",
         ] {
             run_one(f)?;
         }

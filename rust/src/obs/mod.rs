@@ -1,0 +1,546 @@
+//! §18 Observability: causal span tracing + a latency-attribution ledger
+//! across the full CXL memory path.
+//!
+//! Every demand op's journey — warp issue → LLC → host bridge → fabric
+//! switch ingress/WRR → root-port queue → controller legs → SR/DS →
+//! expander cache → media → RAS retry legs — is decomposable into
+//! *stages*: each [`Stage`] duration is a difference of two successive
+//! path timestamps, so the per-op [`StageTrace`] ledger telescopes and
+//! its stages sum **bit-exactly** to the end-to-end latency the metrics
+//! already record. That conservation invariant is the whole design: a
+//! breakdown that cannot drift from the numbers it explains
+//! (property-tested in `tests/props.rs`).
+//!
+//! Determinism: sampling draws no randomness and never touches a
+//! timestamp. Each span kind keeps its own op counter and samples the
+//! ops whose sequence number has the low `sample_shift` bits clear, so
+//! the same config produces the same spans on every run — and because
+//! tracing only *reads* the timestamps the simulation computes anyway,
+//! an armed tracer leaves `RunMetrics::fingerprint()` bit-identical to
+//! a disabled one (guarded in `tests/determinism.rs`). The aggregated
+//! [`ObsReport`] itself is fingerprint-exempt, like the percentile
+//! reservoirs.
+//!
+//! Sampled spans land in a compact fixed-size binary ring buffer
+//! ([`SpanRec`]: 8 words + the stage array) that overwrites oldest;
+//! [`chrome_trace`] exports the ring as Chrome/Perfetto trace-event
+//! JSON (`--trace-out run.json`, see `docs/TRACING.md`).
+
+use crate::sim::Time;
+use crate::util::json::Json;
+use crate::util::stats::{Percentiles, Summary};
+use std::collections::BTreeMap;
+
+/// One attributable leg of an op's path. Durations are picosecond
+/// differences of successive path timestamps, so a trace's stages
+/// telescope to the end-to-end latency (the conservation invariant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// GPU LLC lookup (hit latency; the on-package leg of a miss is
+    /// folded into the expander path below).
+    Llc = 0,
+    /// Host bridge / root complex traversal (both directions).
+    HostBridge = 1,
+    /// Fabric switch admission: token-bucket pacing, ingress-slot and
+    /// WRR share-slot waits (multi-tenant pools only).
+    SwitchArb = 2,
+    /// Fabric switch hop latency (both directions).
+    SwitchHop = 3,
+    /// Root-port memory-queue slot wait (MSHR-style occupancy).
+    PortQueue = 4,
+    /// Request-direction controller + link leg (flit SER/DES, PHY).
+    ReqLink = 5,
+    /// RAS retry/replay extra charged on the request leg.
+    RasReq = 6,
+    /// Deterministic-store buffering or read-intercept served from the
+    /// DS buffer (the op never reaches media).
+    DsLocal = 7,
+    /// Expander device-cache hit service (DRAM-class, media bypassed).
+    CacheHit = 8,
+    /// Backend media access (DRAM or Z-NAND, including cache fetch+drain
+    /// and GC interference).
+    Media = 9,
+    /// Response-direction controller + link leg.
+    RespLink = 10,
+    /// RAS retry/replay extra charged on the response leg.
+    RasResp = 11,
+}
+
+/// Number of ledger stages (the fixed width of every trace array).
+pub const N_STAGES: usize = 12;
+
+impl Stage {
+    /// Every stage, in canonical path order (also the exporter's layout
+    /// order).
+    pub const ALL: [Stage; N_STAGES] = [
+        Stage::Llc,
+        Stage::HostBridge,
+        Stage::SwitchArb,
+        Stage::SwitchHop,
+        Stage::PortQueue,
+        Stage::ReqLink,
+        Stage::RasReq,
+        Stage::DsLocal,
+        Stage::CacheHit,
+        Stage::Media,
+        Stage::RespLink,
+        Stage::RasResp,
+    ];
+
+    /// Short display name (table columns, trace-event names).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Llc => "llc",
+            Stage::HostBridge => "host-bridge",
+            Stage::SwitchArb => "switch-arb",
+            Stage::SwitchHop => "switch-hop",
+            Stage::PortQueue => "port-queue",
+            Stage::ReqLink => "req-link",
+            Stage::RasReq => "ras-req",
+            Stage::DsLocal => "ds-local",
+            Stage::CacheHit => "cache-hit",
+            Stage::Media => "media",
+            Stage::RespLink => "resp-link",
+            Stage::RasResp => "ras-resp",
+        }
+    }
+}
+
+/// What kind of op a span covers (one deterministic sampling counter
+/// per kind, so e.g. rare writebacks still get sampled).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// GPU LLC hit (never leaves the package).
+    LlcHit = 0,
+    /// Demand load serviced by the CXL expander path.
+    Load = 1,
+    /// Writeback store to the CXL expander path.
+    Store = 2,
+    /// Demand fill from local on-package HBM/DRAM.
+    LocalFill = 3,
+}
+
+/// Number of span kinds.
+pub const N_KINDS: usize = 4;
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::LlcHit => "llc-hit",
+            SpanKind::Load => "load",
+            SpanKind::Store => "store",
+            SpanKind::LocalFill => "local-fill",
+        }
+    }
+}
+
+/// Per-op scratch ledger: one duration slot per [`Stage`]. The path
+/// code adds each leg as it is computed; [`total`](StageTrace::total)
+/// must equal the op's end-to-end latency (conservation).
+#[derive(Debug, Clone, Default)]
+pub struct StageTrace {
+    pub stages: [Time; N_STAGES],
+}
+
+impl StageTrace {
+    pub fn reset(&mut self) {
+        self.stages = [0; N_STAGES];
+    }
+
+    /// Attribute `dt` picoseconds to `stage` (accumulates: a stage may
+    /// be charged from both path directions).
+    pub fn add(&mut self, stage: Stage, dt: Time) {
+        self.stages[stage as usize] += dt;
+    }
+
+    /// Duration attributed to one stage.
+    pub fn get(&self, stage: Stage) -> Time {
+        self.stages[stage as usize]
+    }
+
+    /// Sum of every stage — bit-exactly the end-to-end latency when the
+    /// path threading is correct.
+    pub fn total(&self) -> Time {
+        self.stages.iter().sum()
+    }
+}
+
+/// Tracing configuration. Disabled by default and structurally inert:
+/// `ObsState::new` returns `None` for a disabled spec, so no armed
+/// config path even exists unless requested.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ObsSpec {
+    pub enabled: bool,
+    /// Sample 1 of every `2^sample_shift` ops per span kind (0 = trace
+    /// every op; 6 = 1/64, the bench's overhead point).
+    pub sample_shift: u32,
+    /// Span ring-buffer capacity (overwrites oldest beyond this).
+    pub ring_cap: usize,
+}
+
+impl Default for ObsSpec {
+    fn default() -> Self {
+        ObsSpec { enabled: false, sample_shift: 6, ring_cap: 4096 }
+    }
+}
+
+/// One sampled span: a compact fixed-size binary record in the ring.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanRec {
+    /// Monotonic span id (allocation order across all kinds).
+    pub id: u64,
+    pub kind: SpanKind,
+    /// Issue timestamp (ps).
+    pub start: Time,
+    /// Completion timestamp (ps).
+    pub end: Time,
+    /// The ledger: per-stage durations summing to `end - start`.
+    pub stages: [Time; N_STAGES],
+}
+
+/// Live tracer state carried by a `System` when the spec is armed.
+#[derive(Debug, Clone)]
+pub struct ObsState {
+    /// `2^shift - 1`: an op is sampled iff its kind counter has these
+    /// bits clear.
+    mask: u64,
+    ring_cap: usize,
+    /// Per-kind op counters (deterministic sampling clock — no RNG).
+    seq: [u64; N_KINDS],
+    /// Reusable per-op ledger, reset before each sampled op.
+    pub scratch: StageTrace,
+    stage: [Summary; N_STAGES],
+    stage_pctl: [Percentiles; N_STAGES],
+    e2e: Summary,
+    spans: u64,
+    violations: u64,
+    next_id: u64,
+    ring: Vec<SpanRec>,
+    ring_next: usize,
+    dropped: u64,
+}
+
+impl ObsState {
+    /// Build a tracer for an armed spec; `None` when disabled (the
+    /// structural-inertness contract: nothing exists to consult).
+    pub fn new(spec: &ObsSpec) -> Option<ObsState> {
+        if !spec.enabled {
+            return None;
+        }
+        Some(ObsState {
+            mask: (1u64 << spec.sample_shift.min(63)) - 1,
+            ring_cap: spec.ring_cap,
+            seq: [0; N_KINDS],
+            scratch: StageTrace::default(),
+            stage: Default::default(),
+            stage_pctl: Default::default(),
+            e2e: Summary::new(),
+            spans: 0,
+            violations: 0,
+            next_id: 0,
+            ring: Vec::new(),
+            ring_next: 0,
+            dropped: 0,
+        })
+    }
+
+    /// Tick the kind's op counter; true iff this op is sampled. When it
+    /// is, the caller resets `scratch`, threads it through the path,
+    /// then calls [`finish`](ObsState::finish).
+    pub fn sample(&mut self, kind: SpanKind) -> bool {
+        let s = &mut self.seq[kind as usize];
+        let hit = *s & self.mask == 0;
+        *s += 1;
+        hit
+    }
+
+    /// Close a sampled span: verify conservation, fold the ledger into
+    /// the per-stage aggregates, and push the record into the ring.
+    pub fn finish(&mut self, kind: SpanKind, start: Time, end: Time) {
+        let e2e = end - start;
+        if self.scratch.total() != e2e {
+            // Counted, not asserted: the property suite pins this at
+            // zero; a release run reports instead of aborting.
+            self.violations += 1;
+        }
+        self.spans += 1;
+        self.e2e.add(e2e as f64);
+        for (i, &d) in self.scratch.stages.iter().enumerate() {
+            if d > 0 {
+                self.stage[i].add(d as f64);
+                self.stage_pctl[i].add(d as f64);
+            }
+        }
+        let rec = SpanRec { id: self.next_id, kind, start, end, stages: self.scratch.stages };
+        self.next_id += 1;
+        if self.ring.len() < self.ring_cap {
+            self.ring.push(rec);
+        } else if self.ring_cap > 0 {
+            self.ring[self.ring_next] = rec;
+            self.ring_next = (self.ring_next + 1) % self.ring_cap;
+            self.dropped += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Spans whose ledger failed conservation (must stay 0).
+    pub fn violations(&self) -> u64 {
+        self.violations
+    }
+
+    /// Snapshot the aggregates + ring (oldest span first) for
+    /// `RunMetrics`.
+    pub fn report(&self) -> ObsReport {
+        let mut ring = Vec::with_capacity(self.ring.len());
+        ring.extend_from_slice(&self.ring[self.ring_next..]);
+        ring.extend_from_slice(&self.ring[..self.ring_next]);
+        ObsReport {
+            stage: self.stage.clone(),
+            stage_pctl: self.stage_pctl.clone(),
+            e2e: self.e2e.clone(),
+            spans: self.spans,
+            ops_seen: self.seq.iter().sum(),
+            violations: self.violations,
+            dropped: self.dropped,
+            ring,
+        }
+    }
+}
+
+/// Aggregated span ledgers, harvested into `RunMetrics::obs`.
+/// Deterministic for a fixed config but **fingerprint-exempt** (like
+/// the percentile reservoirs): the breakdown explains the fingerprinted
+/// numbers, it is not one of them.
+#[derive(Debug, Clone, Default)]
+pub struct ObsReport {
+    /// Per-stage duration summaries over sampled spans where the stage
+    /// was present (zero-duration stages are not folded in, so `mean`
+    /// reads "mean when traversed" and `sum` is total attributed ps).
+    pub stage: [Summary; N_STAGES],
+    /// Per-stage percentile reservoirs (same presence rule).
+    pub stage_pctl: [Percentiles; N_STAGES],
+    /// End-to-end latency summary over sampled spans.
+    pub e2e: Summary,
+    /// Sampled span count.
+    pub spans: u64,
+    /// Total ops the sampler clocked (sampled + skipped).
+    pub ops_seen: u64,
+    /// Conservation violations (stages ≠ end-to-end; must be 0).
+    pub violations: u64,
+    /// Spans evicted from the ring after it filled.
+    pub dropped: u64,
+    /// The span ring, oldest first.
+    pub ring: Vec<SpanRec>,
+}
+
+impl ObsReport {
+    /// Total picoseconds attributed to one stage across sampled spans.
+    pub fn stage_sum_ps(&self, s: Stage) -> f64 {
+        self.stage[s as usize].sum()
+    }
+
+    /// Total attributed picoseconds across every stage.
+    pub fn attributed_ps(&self) -> f64 {
+        self.stage.iter().map(|s| s.sum()).sum()
+    }
+
+    /// One stage's share of the total attributed time, in [0, 1].
+    pub fn stage_share(&self, s: Stage) -> f64 {
+        let total = self.attributed_ps();
+        if total == 0.0 { 0.0 } else { self.stage_sum_ps(s) / total }
+    }
+
+    /// Mean duration of one stage when traversed, in ns.
+    pub fn stage_mean_ns(&self, s: Stage) -> f64 {
+        self.stage[s as usize].mean() / 1_000.0
+    }
+
+    /// p99 duration of one stage when traversed, in ns.
+    pub fn stage_p99_ns(&self, s: Stage) -> f64 {
+        self.stage_pctl[s as usize].percentile(99.0) / 1_000.0
+    }
+
+    /// Mean attributed time per span, in ns — the stacked-breakdown
+    /// column: over all sampled spans these sum to the mean end-to-end
+    /// latency.
+    pub fn stage_per_span_ns(&self, s: Stage) -> f64 {
+        if self.spans == 0 {
+            return 0.0;
+        }
+        self.stage_sum_ps(s) / self.spans as f64 / 1_000.0
+    }
+}
+
+/// Export span rings as a Chrome/Perfetto trace-event document: one
+/// `pid` per named report, one `tid` per span kind, an enclosing `X`
+/// event per span and its ledger stages laid out sequentially inside it
+/// in canonical [`Stage::ALL`] order (an *attribution* layout — stage
+/// offsets within a span are the ledger telescoped, not re-simulated
+/// wall-clock positions; see `docs/TRACING.md`). Timestamps are µs as
+/// the format requires.
+pub fn chrome_trace(reports: &[(String, ObsReport)]) -> Json {
+    const PS_PER_US: f64 = 1e6;
+    let mut events = Vec::new();
+    for (pid, (name, rep)) in reports.iter().enumerate() {
+        let mut meta = BTreeMap::new();
+        meta.insert("ph".to_string(), Json::Str("M".to_string()));
+        meta.insert("name".to_string(), Json::Str("process_name".to_string()));
+        meta.insert("pid".to_string(), Json::Num(pid as f64));
+        let mut args = BTreeMap::new();
+        args.insert("name".to_string(), Json::Str(name.clone()));
+        meta.insert("args".to_string(), Json::Obj(args));
+        events.push(Json::Obj(meta));
+        for span in &rep.ring {
+            let mut ev = BTreeMap::new();
+            ev.insert("ph".to_string(), Json::Str("X".to_string()));
+            ev.insert("name".to_string(), Json::Str(span.kind.name().to_string()));
+            ev.insert("cat".to_string(), Json::Str("span".to_string()));
+            ev.insert("ts".to_string(), Json::Num(span.start as f64 / PS_PER_US));
+            ev.insert("dur".to_string(), Json::Num((span.end - span.start) as f64 / PS_PER_US));
+            ev.insert("pid".to_string(), Json::Num(pid as f64));
+            ev.insert("tid".to_string(), Json::Num(span.kind as usize as f64));
+            events.push(Json::Obj(ev));
+            let mut cursor = span.start;
+            for stage in Stage::ALL {
+                let d = span.stages[stage as usize];
+                if d == 0 {
+                    continue;
+                }
+                let mut ev = BTreeMap::new();
+                ev.insert("ph".to_string(), Json::Str("X".to_string()));
+                ev.insert("name".to_string(), Json::Str(stage.name().to_string()));
+                ev.insert("cat".to_string(), Json::Str("stage".to_string()));
+                ev.insert("ts".to_string(), Json::Num(cursor as f64 / PS_PER_US));
+                ev.insert("dur".to_string(), Json::Num(d as f64 / PS_PER_US));
+                ev.insert("pid".to_string(), Json::Num(pid as f64));
+                ev.insert("tid".to_string(), Json::Num(span.kind as usize as f64));
+                events.push(Json::Obj(ev));
+                cursor += d;
+            }
+        }
+    }
+    let mut top = BTreeMap::new();
+    top.insert("displayTimeUnit".to_string(), Json::Str("ns".to_string()));
+    top.insert("traceEvents".to_string(), Json::Arr(events));
+    Json::Obj(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn armed(shift: u32, ring_cap: usize) -> ObsState {
+        ObsState::new(&ObsSpec { enabled: true, sample_shift: shift, ring_cap })
+            .expect("armed spec builds a state")
+    }
+
+    #[test]
+    fn disabled_spec_builds_nothing() {
+        assert!(ObsState::new(&ObsSpec::default()).is_none());
+    }
+
+    #[test]
+    fn trace_telescopes_and_resets() {
+        let mut t = StageTrace::default();
+        t.add(Stage::PortQueue, 5);
+        t.add(Stage::Media, 100);
+        t.add(Stage::HostBridge, 2);
+        t.add(Stage::HostBridge, 2);
+        assert_eq!(t.get(Stage::HostBridge), 4, "stages accumulate across directions");
+        assert_eq!(t.total(), 109);
+        t.reset();
+        assert_eq!(t.total(), 0);
+    }
+
+    #[test]
+    fn sampling_is_a_deterministic_per_kind_clock() {
+        let mut o = armed(2, 16);
+        let hits: Vec<bool> = (0..8).map(|_| o.sample(SpanKind::Load)).collect();
+        assert_eq!(hits, [true, false, false, false, true, false, false, false]);
+        // A different kind has its own counter, so its first op samples.
+        assert!(o.sample(SpanKind::Store));
+        // Shift 0 samples everything.
+        let mut all = armed(0, 16);
+        assert!((0..5).all(|_| all.sample(SpanKind::Load)));
+    }
+
+    #[test]
+    fn finish_checks_conservation_and_aggregates() {
+        let mut o = armed(0, 16);
+        o.scratch.reset();
+        o.scratch.add(Stage::PortQueue, 30);
+        o.scratch.add(Stage::Media, 70);
+        o.finish(SpanKind::Load, 1_000, 1_100);
+        assert_eq!(o.violations(), 0);
+        o.scratch.reset();
+        o.scratch.add(Stage::Media, 60);
+        o.finish(SpanKind::Load, 0, 100);
+        assert_eq!(o.violations(), 1, "a 40 ps leak must be counted");
+        let rep = o.report();
+        assert_eq!(rep.spans, 2);
+        assert_eq!(rep.violations, 1);
+        assert_eq!(rep.stage[Stage::Media as usize].count(), 2);
+        assert_eq!(rep.stage[Stage::PortQueue as usize].count(), 1);
+        assert_eq!(rep.stage_sum_ps(Stage::Media), 130.0);
+        assert_eq!(rep.attributed_ps(), 160.0);
+        assert!((rep.stage_share(Stage::Media) - 130.0 / 160.0).abs() < 1e-12);
+        assert_eq!(rep.e2e.mean(), 100.0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_reports_in_order() {
+        let mut o = armed(0, 2);
+        for i in 0..5u64 {
+            o.scratch.reset();
+            o.scratch.add(Stage::Media, 10);
+            o.finish(SpanKind::Load, i * 100, i * 100 + 10);
+        }
+        let rep = o.report();
+        assert_eq!(rep.spans, 5);
+        assert_eq!(rep.dropped, 3);
+        let ids: Vec<u64> = rep.ring.iter().map(|s| s.id).collect();
+        assert_eq!(ids, [3, 4], "ring keeps the newest spans, oldest first");
+    }
+
+    #[test]
+    fn per_span_columns_sum_to_mean_e2e() {
+        let mut o = armed(0, 16);
+        for (q, m) in [(30u64, 70u64), (10, 110), (20, 100)] {
+            o.scratch.reset();
+            o.scratch.add(Stage::PortQueue, q);
+            o.scratch.add(Stage::Media, m);
+            o.finish(SpanKind::Load, 0, q + m);
+        }
+        let rep = o.report();
+        let stacked: f64 = Stage::ALL.iter().map(|&s| rep.stage_per_span_ns(s)).sum();
+        assert!(
+            (stacked - rep.e2e.mean() / 1_000.0).abs() < 1e-9,
+            "stacked columns must reassemble the mean end-to-end latency"
+        );
+    }
+
+    #[test]
+    fn chrome_trace_emits_parseable_nested_events() {
+        let mut o = armed(0, 16);
+        o.scratch.reset();
+        o.scratch.add(Stage::PortQueue, 2_000_000);
+        o.scratch.add(Stage::Media, 3_000_000);
+        o.finish(SpanKind::Load, 1_000_000, 6_000_000);
+        let doc = chrome_trace(&[("cxl".to_string(), o.report())]);
+        let parsed = crate::util::json::parse(&doc.to_string()).expect("exporter emits JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // Metadata + enclosing span + two stage events.
+        assert_eq!(events.len(), 4);
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("M"));
+        let span = &events[1];
+        assert_eq!(span.get("name").unwrap().as_str(), Some("load"));
+        assert_eq!(span.get("ts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(span.get("dur").unwrap().as_f64(), Some(5.0));
+        // Stages tile the span back-to-back in path order.
+        assert_eq!(events[2].get("name").unwrap().as_str(), Some("port-queue"));
+        assert_eq!(events[2].get("ts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(events[3].get("name").unwrap().as_str(), Some("media"));
+        assert_eq!(events[3].get("ts").unwrap().as_f64(), Some(3.0));
+    }
+}

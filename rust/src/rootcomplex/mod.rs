@@ -24,6 +24,7 @@ pub use tiering::{TierConfig, TierStats, Tiering};
 
 use crate::fabric::{FabricLink, PoolSums, TenantFabricStats};
 use crate::media::MediaKind;
+use crate::obs::{Stage, StageTrace};
 use crate::sim::{Time, NS};
 use crate::util::prng::Pcg32;
 
@@ -286,6 +287,20 @@ impl RootComplex {
     /// Route a load at HDM-relative address `hpa_off` through the
     /// decode-target indirection (direct port or fabric endpoint).
     pub fn load(&mut self, now: Time, hpa_off: u64, len: u64) -> LoadOutcome {
+        self.load_traced(now, hpa_off, len, None)
+    }
+
+    /// [`load`](RootComplex::load) with an optional span ledger: both
+    /// bridge traversals are attributed to `HostBridge` and the ledger
+    /// is threaded through the switch (fabric) or port (direct), whose
+    /// stages telescope with this one to `done - now` exactly.
+    pub fn load_traced(
+        &mut self,
+        now: Time,
+        hpa_off: u64,
+        len: u64,
+        mut trace: Option<&mut StageTrace>,
+    ) -> LoadOutcome {
         let addr = match &mut self.tier {
             Some(t) => t.translate(hpa_off),
             None => hpa_off,
@@ -294,16 +309,22 @@ impl RootComplex {
             .hdm
             .decode(addr)
             .unwrap_or_else(|| panic!("HDM decode miss at {:#x}", addr));
+        if let Some(t) = trace.as_deref_mut() {
+            t.add(Stage::HostBridge, 2 * self.bridge_lat);
+        }
         let mut out = match self.targets[idx] {
-            PortTarget::Direct(p) => self.ports[p].load(now + self.bridge_lat, off, len),
+            PortTarget::Direct(p) => {
+                self.ports[p].load_traced(now + self.bridge_lat, off, len, trace)
+            }
             PortTarget::Fabric(d) => {
                 let att = self.fabric.as_ref().expect("fabric target without attachment");
-                att.link.lock().expect("fabric mutex poisoned").load(
+                att.link.lock().expect("fabric mutex poisoned").load_traced(
                     att.upstream,
                     d,
                     now + self.bridge_lat,
                     off,
                     len,
+                    trace,
                 )
             }
         };
@@ -314,6 +335,19 @@ impl RootComplex {
     /// Route a store at HDM-relative address `hpa_off` through the
     /// decode-target indirection.
     pub fn store(&mut self, now: Time, hpa_off: u64, len: u64, rng: &mut Pcg32) -> StoreOutcome {
+        self.store_traced(now, hpa_off, len, rng, None)
+    }
+
+    /// [`store`](RootComplex::store) with an optional span ledger (same
+    /// attribution as [`load_traced`](RootComplex::load_traced)).
+    pub fn store_traced(
+        &mut self,
+        now: Time,
+        hpa_off: u64,
+        len: u64,
+        rng: &mut Pcg32,
+        mut trace: Option<&mut StageTrace>,
+    ) -> StoreOutcome {
         let addr = match &mut self.tier {
             Some(t) => t.translate(hpa_off),
             None => hpa_off,
@@ -322,17 +356,23 @@ impl RootComplex {
             .hdm
             .decode(addr)
             .unwrap_or_else(|| panic!("HDM decode miss at {:#x}", addr));
+        if let Some(t) = trace.as_deref_mut() {
+            t.add(Stage::HostBridge, 2 * self.bridge_lat);
+        }
         let mut out = match self.targets[idx] {
-            PortTarget::Direct(p) => self.ports[p].store(now + self.bridge_lat, off, len, rng),
+            PortTarget::Direct(p) => {
+                self.ports[p].store_traced(now + self.bridge_lat, off, len, rng, trace)
+            }
             PortTarget::Fabric(d) => {
                 let att = self.fabric.as_ref().expect("fabric target without attachment");
-                att.link.lock().expect("fabric mutex poisoned").store(
+                att.link.lock().expect("fabric mutex poisoned").store_traced(
                     att.upstream,
                     d,
                     now + self.bridge_lat,
                     off,
                     len,
                     rng,
+                    trace,
                 )
             }
         };

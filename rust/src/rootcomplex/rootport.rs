@@ -10,6 +10,7 @@ use std::collections::VecDeque;
 use crate::cxl::{ControllerKind, CxlController, DevLoad, Flit, MemOpcode};
 use crate::expander::{CacheSpec, DeviceCache, Lookup, DEV_DRAM_GBPS, WB_DRAIN_BATCH};
 use crate::media::{DramModel, MediaKind, SsdModel};
+use crate::obs::{Stage, StageTrace};
 use crate::ras::{FaultSpec, RasState};
 use crate::sim::{transfer_time, Time, NS};
 use crate::util::prng::Pcg32;
@@ -320,6 +321,21 @@ impl RootPort {
 
     /// Service a demand load of `len` bytes at EP-relative address `addr`.
     pub fn load(&mut self, now: Time, addr: u64, len: u64) -> LoadOutcome {
+        self.load_traced(now, addr, len, None)
+    }
+
+    /// [`RootPort::load`] with an optional latency-attribution ledger
+    /// (DESIGN.md §18). Every stage duration is a difference of the same
+    /// timestamps the untraced path already computes — tracing never
+    /// perturbs timing — and the stages telescope: their sum is exactly
+    /// `done - now`.
+    pub fn load_traced(
+        &mut self,
+        now: Time,
+        addr: u64,
+        len: u64,
+        mut trace: Option<&mut StageTrace>,
+    ) -> LoadOutcome {
         self.stats.loads += 1;
         self.ras_degrade_check(now);
 
@@ -328,6 +344,9 @@ impl RootPort {
         if self.ds.intercept_read(addr) {
             let done = now + self.local_ack;
             self.stats.load_latency.add((done - now) as f64);
+            if let Some(t) = trace.as_deref_mut() {
+                t.add(Stage::DsLocal, done - now);
+            }
             return LoadOutcome { done, path: LoadPath::DsIntercept };
         }
 
@@ -380,6 +399,11 @@ impl RootPort {
         let req_leg = self.ctrl.request_leg(&flit);
         // RAS, request side: the read command is a single link flit.
         let at_ep = start + req_leg + self.ras_request_extra(start, 1, req_leg);
+        if let Some(t) = trace.as_deref_mut() {
+            t.add(Stage::PortQueue, start - now);
+            t.add(Stage::ReqLink, req_leg);
+            t.add(Stage::RasReq, at_ep - start - req_leg);
+        }
         let RootPort { backend, cache, .. } = self;
         let (media_done, path) = match backend {
             EpBackend::Dram(d) => (d.access(at_ep, addr, len, false), LoadPath::Media),
@@ -425,6 +449,15 @@ impl RootPort {
         let done = media_done
             + resp_leg
             + self.ras_response_extra(media_done, flit.link_flits(), resp_leg, refetch);
+        if let Some(t) = trace.as_deref_mut() {
+            let dev = match path {
+                LoadPath::EpCacheHit => Stage::CacheHit,
+                _ => Stage::Media,
+            };
+            t.add(dev, media_done - at_ep);
+            t.add(Stage::RespLink, resp_leg);
+            t.add(Stage::RasResp, done - media_done - resp_leg);
+        }
         self.slots[slot] = done;
         self.remember(addr);
         self.stats.load_latency.add((done - now) as f64);
@@ -446,6 +479,22 @@ impl RootPort {
 
     /// Service a store (LLC writeback or streaming store).
     pub fn store(&mut self, now: Time, addr: u64, len: u64, rng: &mut Pcg32) -> StoreOutcome {
+        self.store_traced(now, addr, len, rng, None)
+    }
+
+    /// [`RootPort::store`] with an optional latency-attribution ledger
+    /// (DESIGN.md §18). Stage sums telescope to exactly `ack - now`; DS
+    /// and dual-write acks are one `DsLocal` stage (the background media
+    /// write is not part of the acked latency), and a blocked store's
+    /// device time — cache-absorbed or media — is charged to `Media`.
+    pub fn store_traced(
+        &mut self,
+        now: Time,
+        addr: u64,
+        len: u64,
+        rng: &mut Pcg32,
+        mut trace: Option<&mut StageTrace>,
+    ) -> StoreOutcome {
         self.stats.stores += 1;
         self.ras_degrade_check(now);
         let dl_now = self.devload(now);
@@ -460,6 +509,9 @@ impl RootPort {
                 // Absorbed into reserved GPU memory: deterministic ack.
                 let ack = now + self.local_ack;
                 self.stats.store_latency.add((ack - now) as f64);
+                if let Some(t) = trace.as_deref_mut() {
+                    t.add(Stage::DsLocal, ack - now);
+                }
                 StoreOutcome { ack, buffered: true }
             }
             StoreAction::DualWrite if self.backend.is_ssd() && self.ds.enabled => {
@@ -483,6 +535,9 @@ impl RootPort {
                 };
                 self.slots[slot] = done + self.ctrl.response_leg(&flit);
                 self.stats.store_latency.add((ack - now) as f64);
+                if let Some(t) = trace.as_deref_mut() {
+                    t.add(Stage::DsLocal, ack - now);
+                }
                 StoreOutcome { ack, buffered: false }
             }
             StoreAction::DualWrite | StoreAction::Block => {
@@ -519,7 +574,16 @@ impl RootPort {
                 // RAS, response side: the NDR completion is one flit
                 // with nothing to re-fetch — a poisoned ack just costs
                 // a timeout and a clean retransmit of the completion.
+                let ack0 = ack;
                 let ack = ack + self.ras_response_extra(ack, 1, resp_leg, 0);
+                if let Some(t) = trace.as_deref_mut() {
+                    t.add(Stage::PortQueue, start - now);
+                    t.add(Stage::ReqLink, req_leg);
+                    t.add(Stage::RasReq, at_ep - start - req_leg);
+                    t.add(Stage::Media, ack0 - resp_leg - at_ep);
+                    t.add(Stage::RespLink, resp_leg);
+                    t.add(Stage::RasResp, ack - ack0);
+                }
                 self.slots[slot] = ack;
                 self.stats.store_latency.add((ack - now) as f64);
                 StoreOutcome { ack, buffered: false }

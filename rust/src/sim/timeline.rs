@@ -3,6 +3,12 @@
 
 use super::Time;
 
+/// Hard ceiling on a timeline's bucket count: samples past
+/// `MAX_BUCKETS x bucket` saturate into the last bucket instead of
+/// growing the vectors, so a multi-day diurnal serve run cannot inflate
+/// a timeline unbounded (memory stays O(MAX_BUCKETS) per series).
+pub const MAX_BUCKETS: usize = 1 << 16;
+
 /// Fixed-interval time series: samples are bucketed into `bucket` wide
 //  windows and averaged within each bucket.
 #[derive(Debug, Clone)]
@@ -27,9 +33,10 @@ impl Timeline {
         self.bucket
     }
 
-    /// Record `value` at simulation time `at`.
+    /// Record `value` at simulation time `at`. Samples beyond the
+    /// [`MAX_BUCKETS`] horizon saturate into the last bucket.
     pub fn record(&mut self, at: Time, value: f64) {
-        let idx = (at / self.bucket) as usize;
+        let idx = ((at / self.bucket) as usize).min(MAX_BUCKETS - 1);
         if idx >= self.sums.len() {
             self.sums.resize(idx + 1, 0.0);
             self.counts.resize(idx + 1, 0);
@@ -82,6 +89,22 @@ mod tests {
         let s = tl.series();
         assert_eq!(s.len(), 2);
         assert_eq!(s[1].0, 90);
+    }
+
+    #[test]
+    fn bucket_count_saturates_at_the_cap() {
+        let mut tl = Timeline::new("diurnal", 10);
+        // Far past the horizon: both land in the final bucket instead of
+        // resizing the vectors to the sample's own index.
+        let horizon = MAX_BUCKETS as Time * 10;
+        tl.record(horizon, 4.0);
+        tl.record(horizon * 1000, 8.0);
+        tl.record(5, 1.0);
+        let s = tl.series();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0], (0, 1.0));
+        assert_eq!(s[1], ((MAX_BUCKETS as Time - 1) * 10, 6.0));
+        assert_eq!(tl.max_mean(), 6.0);
     }
 
     #[test]

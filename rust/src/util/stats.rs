@@ -113,11 +113,16 @@ impl Percentiles {
         }
     }
 
-    /// p in [0, 100]; nearest-rank on the (sorted) reservoir.
+    /// Nearest-rank on the (sorted) reservoir. `p` outside [0, 100] is
+    /// clamped (negative `p` would otherwise round through a negative
+    /// float-to-usize cast; `p > 100` would index past the end), so a
+    /// single-sample reservoir answers that sample for every `p` and
+    /// `percentile(100.0)` is always the maximum.
     pub fn percentile(&self, p: f64) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
         }
+        let p = p.clamp(0.0, 100.0);
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let rank = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
@@ -179,6 +184,40 @@ mod tests {
         assert_eq!(p.percentile(0.0), 0.0);
         assert_eq!(p.percentile(50.0), 50.0);
         assert_eq!(p.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn percentiles_empty_reservoir_answers_zero_for_any_p() {
+        let p = Percentiles::new(16);
+        for q in [-10.0, 0.0, 50.0, 100.0, 250.0] {
+            assert_eq!(p.percentile(q), 0.0);
+        }
+    }
+
+    #[test]
+    fn percentiles_single_sample_clamps_every_query() {
+        let mut p = Percentiles::new(16);
+        p.add(42.0);
+        // One sample answers itself at every rank, including the former
+        // out-of-range casts (p=100 rounded to rank 1 of a len-1 vec
+        // before the clamp fix; negative p cast through f64→usize).
+        for q in [-5.0, 0.0, 50.0, 99.9, 100.0, 1000.0] {
+            assert_eq!(p.percentile(q), 42.0);
+        }
+    }
+
+    #[test]
+    fn percentiles_two_samples_split_at_the_median() {
+        let mut p = Percentiles::new(16);
+        p.add(10.0);
+        p.add(20.0);
+        assert_eq!(p.percentile(0.0), 10.0);
+        assert_eq!(p.percentile(100.0), 20.0);
+        assert_eq!(p.percentile(-1.0), 10.0);
+        assert_eq!(p.percentile(101.0), 20.0);
+        // Nearest-rank: 50% of (len-1) rounds to rank 1.
+        assert_eq!(p.percentile(50.0), 20.0);
+        assert_eq!(p.percentile(49.0), 10.0);
     }
 
     #[test]

@@ -1096,3 +1096,65 @@ fn prop_front_door_conserves_requests_under_overload() {
         Ok(())
     });
 }
+
+/// Ledger conservation end to end through the simulator (DESIGN.md §18):
+/// under randomized configs spanning every instrumented family — direct,
+/// device-cache (admission + drains), pooled fabric with QoS arbitration,
+/// RAS with armed CRC/timeout rates — tracing every op must attribute
+/// each span's full end-to-end latency: the per-stage ledger sums
+/// *bit-exactly* (u64 picoseconds, no epsilon) to `end - start` on every
+/// retained span, and the tracer's violation counter stays at zero
+/// across the whole run.
+#[test]
+fn prop_span_ledger_conserves_end_to_end_latency() {
+    use cxl_gpu::coordinator::config::SystemConfig;
+    use cxl_gpu::coordinator::system::System;
+    use cxl_gpu::media::MediaKind;
+    use cxl_gpu::sim::US;
+    use cxl_gpu::workloads::table1b::spec;
+    check("obs-ledger-conservation", 0x0B5E, 8, |g| {
+        const FAMILIES: [&str; 4] = ["cxl", "cxl-cache", "cxl-pool-qos", "cxl-ras"];
+        let name = FAMILIES[g.usize("family", 0, FAMILIES.len() - 1)];
+        let media = if g.bool("znand", 0.7) { MediaKind::Znand } else { MediaKind::Ddr5 };
+        let wl = if g.bool("hot", 0.5) { "hot75" } else { "bfs" };
+        let mut cfg = SystemConfig::named(name, media);
+        cfg.total_ops = 6_000;
+        cfg.ssd_scale();
+        cfg.seed = g.u64("seed", 0, 1 << 30);
+        cfg.warps = g.usize("warps", 1, 8);
+        cfg.mlp = g.usize("mlp", 1, 8);
+        if name == "cxl-ras" {
+            // Hot enough that retry legs actually fire in 6k ops.
+            cfg.ras.crc_error_rate = g.u64("crc_ppm", 100, 2_000) as f64 * 1e-6;
+            cfg.ras.timeout_rate = g.u64("to_ppm", 0, 1_000) as f64 * 1e-6;
+            cfg.ras.timeout = 2 * US;
+        }
+        cfg.obs.enabled = true;
+        cfg.obs.sample_shift = 0; // every op of every kind
+        let m = System::new(spec(wl), &cfg).run();
+        let rep = m.obs.as_ref().ok_or("armed run produced no obs report")?;
+        if rep.spans == 0 {
+            return Err(format!("{name}/{wl}: no spans traced"));
+        }
+        if rep.violations != 0 {
+            return Err(format!(
+                "{name}/{wl}: {} of {} spans violated ledger conservation",
+                rep.violations, rep.spans
+            ));
+        }
+        // Re-verify the retained ring independently of the counter:
+        // stage picoseconds must telescope to the span bounds exactly.
+        for s in &rep.ring {
+            let attributed: u64 = s.stages.iter().sum();
+            if attributed != s.end - s.start {
+                return Err(format!(
+                    "{name}/{wl}: span {} attributes {} ps of {} ps e2e",
+                    s.id,
+                    attributed,
+                    s.end - s.start
+                ));
+            }
+        }
+        Ok(())
+    });
+}
