@@ -1,0 +1,87 @@
+//! Validate a `--telemetry-out` Prometheus exposition file
+//! (docs/TELEMETRY.md): every line must be a `# HELP`/`# TYPE` comment
+//! or a `name{labels} value` sample with a finite value, every sample's
+//! family must have been declared by a preceding `# TYPE`, and label
+//! values must be properly quoted. Exits nonzero with a message on any
+//! violation; prints a one-line census on success.
+//!
+//!     cargo run --release --example prom_check -- telemetry.jsonl.prom
+
+use std::collections::BTreeSet;
+
+/// Split a sample line into (family, labels, value), panicking with a
+/// location on any shape violation.
+fn split_sample<'a>(path: &str, i: usize, line: &'a str) -> (&'a str, &'a str, &'a str) {
+    let (name_labels, value) = line
+        .rsplit_once(' ')
+        .unwrap_or_else(|| panic!("{path}:{}: sample has no value: {line}", i + 1));
+    match name_labels.split_once('{') {
+        Some((name, rest)) => {
+            let labels = rest
+                .strip_suffix('}')
+                .unwrap_or_else(|| panic!("{path}:{}: unterminated label set", i + 1));
+            (name, labels, value)
+        }
+        None => (name_labels, "", value),
+    }
+}
+
+fn main() {
+    let path = std::env::args().nth(1).unwrap_or_else(|| "telemetry.jsonl.prom".into());
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    let mut typed: BTreeSet<String> = BTreeSet::new();
+    let (mut comments, mut samples) = (0usize, 0usize);
+    for (i, line) in text.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(c) = line.strip_prefix("# ") {
+            let mut parts = c.splitn(3, ' ');
+            let keyword = parts.next().unwrap_or("");
+            let family = parts.next().unwrap_or_else(|| {
+                panic!("{path}:{}: comment names no metric family", i + 1)
+            });
+            match keyword {
+                "HELP" => {}
+                "TYPE" => {
+                    typed.insert(family.to_string());
+                }
+                other => panic!("{path}:{}: unexpected comment keyword `{other}`", i + 1),
+            }
+            comments += 1;
+            continue;
+        }
+        let (name, labels, value) = split_sample(&path, i, line);
+        assert!(
+            typed.contains(name),
+            "{path}:{}: sample `{name}` precedes its # TYPE declaration",
+            i + 1
+        );
+        assert!(
+            name.starts_with("cxlgpu_"),
+            "{path}:{}: family `{name}` misses the cxlgpu_ namespace",
+            i + 1
+        );
+        for pair in labels.split(',').filter(|p| !p.is_empty()) {
+            let (_, v) = pair
+                .split_once('=')
+                .unwrap_or_else(|| panic!("{path}:{}: malformed label `{pair}`", i + 1));
+            assert!(
+                v.len() >= 2 && v.starts_with('"') && v.ends_with('"'),
+                "{path}:{}: unquoted label value `{v}`",
+                i + 1
+            );
+        }
+        let v: f64 = value
+            .parse()
+            .unwrap_or_else(|e| panic!("{path}:{}: bad sample value `{value}`: {e}", i + 1));
+        assert!(v.is_finite(), "{path}:{}: non-finite sample value", i + 1);
+        samples += 1;
+    }
+    assert!(samples > 0, "{path}: no samples");
+    assert!(!typed.is_empty(), "{path}: no # TYPE declarations");
+    println!(
+        "{path}: OK ({samples} samples across {} families, {comments} comment lines)",
+        typed.len()
+    );
+}

@@ -1,12 +1,13 @@
-//! §18 — span-tracing overhead: armed tracing at 1/64 sampling must be
-//! a rounding error on the simulator hot path.
+//! §19 — flight-recorder overhead: an armed recorder at the default
+//! 50 µs cadence must be a rounding error on the simulator hot path.
 //!
-//! Runs the same (config, workload) cells with tracing disabled and with
-//! tracing armed at `sample_shift = 6`, five repeats each, and compares
-//! median wall-clocks. Emits `BENCH_obs_overhead.json` (schema:
-//! docs/BENCH_SCHEMA.md) before asserting, then enforces two floors:
-//! armed throughput stays above the engine's 2M events/s floor, and the
-//! armed median wall-clock stays within 1.10x of the disabled one.
+//! Runs the same (config, workload) cells with telemetry disabled and
+//! with the recorder armed at the default cadence, five repeats each,
+//! and compares median wall-clocks. Emits `BENCH_telemetry_overhead.json`
+//! (schema: docs/BENCH_SCHEMA.md) before asserting, then enforces two
+//! floors: armed throughput stays above the engine's 2M events/s floor,
+//! and the armed median wall-clock stays within 1.10x of the disabled
+//! one.
 use cxl_gpu::coordinator::config::SystemConfig;
 use cxl_gpu::coordinator::system::System;
 use cxl_gpu::media::MediaKind;
@@ -14,10 +15,10 @@ use cxl_gpu::util::bench::Table;
 use cxl_gpu::util::json::{write_file, Json, JsonObj};
 use cxl_gpu::workloads::table1b::spec;
 
-/// Same floor as sim_throughput: tracing must not cost the engine its
+/// Same floor as sim_throughput: sampling must not cost the engine its
 /// events-per-second budget.
 const FLOOR_EVENTS_PER_SEC: f64 = 2.0e6;
-/// Armed-over-disabled wall-clock ceiling at 1/64 sampling.
+/// Armed-over-disabled wall-clock ceiling at the default cadence.
 const MAX_WALL_RATIO: f64 = 1.10;
 const REPEATS: usize = 5;
 
@@ -36,8 +37,8 @@ fn median_wall(cfg: &SystemConfig, wl: &str) -> (f64, f64) {
 
 fn main() {
     let mut t = Table::new(
-        "obs overhead — armed (1/64 sampling) vs disabled, median of 5",
-        &["config", "workload", "off (ms)", "on (ms)", "ratio", "on M events/s", "spans"],
+        "telemetry overhead — armed (default cadence) vs disabled, median of 5",
+        &["config", "workload", "off (ms)", "on (ms)", "ratio", "on M events/s", "frames"],
     );
     let mut rows: Vec<Json> = Vec::new();
     let mut worst_ratio = 0.0f64;
@@ -52,12 +53,11 @@ fn main() {
             off.ssd_scale();
         }
         let mut on = off.clone();
-        on.obs.enabled = true;
-        on.obs.sample_shift = 6;
+        on.telemetry.enabled = true;
 
         let (off_wall, _) = median_wall(&off, wl);
         let (on_wall, on_eps) = median_wall(&on, wl);
-        let spans = System::new(spec(wl), &on).run().obs_spans();
+        let frames = System::new(spec(wl), &on).run().telemetry_frames();
         let ratio = on_wall / off_wall;
         worst_ratio = worst_ratio.max(ratio);
         worst_eps = worst_eps.min(on_eps);
@@ -69,7 +69,7 @@ fn main() {
             format!("{:.1}", on_wall / 1e6),
             format!("{ratio:.3}"),
             format!("{:.2}", on_eps / 1e6),
-            spans.to_string(),
+            frames.to_string(),
         ]);
         rows.push(
             JsonObj::new()
@@ -80,7 +80,7 @@ fn main() {
                 .set("on_wall_ns", on_wall)
                 .set("wall_ratio", ratio)
                 .set("on_events_per_sec", on_eps)
-                .set("spans", spans)
+                .set("frames", frames)
                 .build(),
         );
     }
@@ -89,7 +89,7 @@ fn main() {
     // Write the report before asserting so a floor regression still
     // leaves the numbers on disk for diagnosis.
     let doc = JsonObj::new()
-        .set("bench", "obs_overhead")
+        .set("bench", "telemetry_overhead")
         .set("schema", "docs/BENCH_SCHEMA.md")
         .set("floor_events_per_sec", FLOOR_EVENTS_PER_SEC)
         .set("max_wall_ratio", MAX_WALL_RATIO)
@@ -97,7 +97,7 @@ fn main() {
         .set("worst_on_events_per_sec", worst_eps)
         .set("results", rows)
         .build();
-    let path = "BENCH_obs_overhead.json";
+    let path = "BENCH_telemetry_overhead.json";
     match write_file(path, &doc) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("warning: could not write {e}"),
@@ -105,15 +105,15 @@ fn main() {
 
     assert!(
         worst_eps > FLOOR_EVENTS_PER_SEC,
-        "armed tracing drops the simulator below {:.0}M events/s: {worst_eps}",
+        "armed telemetry drops the simulator below {:.0}M events/s: {worst_eps}",
         FLOOR_EVENTS_PER_SEC / 1e6
     );
     assert!(
         worst_ratio < MAX_WALL_RATIO,
-        "armed tracing costs more than {MAX_WALL_RATIO}x wall-clock: {worst_ratio:.3}x"
+        "armed telemetry costs more than {MAX_WALL_RATIO}x wall-clock: {worst_ratio:.3}x"
     );
     println!(
-        "obs_overhead bench OK (worst ratio {worst_ratio:.3}x, worst armed {:.1} M events/s)",
+        "telemetry_overhead bench OK (worst ratio {worst_ratio:.3}x, worst armed {:.1} M events/s)",
         worst_eps / 1e6
     );
 }

@@ -9,6 +9,7 @@ use crate::fabric::FabricSpec;
 use crate::gpu::LlcConfig;
 use crate::media::{DramModel, DramTimings, MediaKind, SsdModel, SsdParams};
 use crate::obs::ObsSpec;
+use crate::telemetry::TelemetrySpec;
 use crate::ras::FaultSpec;
 use crate::rootcomplex::{EpBackend, RootPort, SrPolicy, TierConfig};
 use crate::serve::ServeSpec;
@@ -97,6 +98,11 @@ pub struct SystemConfig {
     /// no named config arms it; the `obs` experiment (and the
     /// `sim.obs` TOML key) do.
     pub obs: ObsSpec,
+    /// Flight recorder (DESIGN.md §19, `rust/src/telemetry/`): epoch
+    /// time-series frames + health monitors. Disabled by default and
+    /// structurally inert — no named config arms it; the `telemetry`
+    /// experiment (and the `sim.telemetry` TOML key) do.
+    pub telemetry: TelemetrySpec,
 }
 
 impl SystemConfig {
@@ -131,6 +137,7 @@ impl SystemConfig {
             ras: FaultSpec::default(),
             serve: ServeSpec::default(),
             obs: ObsSpec::default(),
+            telemetry: TelemetrySpec::default(),
         }
     }
 
@@ -426,6 +433,9 @@ impl SystemConfig {
         self.obs.enabled = doc.bool_or("sim.obs", self.obs.enabled);
         self.obs.sample_shift =
             doc.int_or("sim.obs_shift", self.obs.sample_shift as i64) as u32;
+        self.telemetry.enabled = doc.bool_or("sim.telemetry", self.telemetry.enabled);
+        self.telemetry.epoch =
+            doc.int_or("sim.telemetry_epoch", self.telemetry.epoch as i64) as u64;
     }
 }
 
@@ -568,6 +578,18 @@ mod tests {
         c.apply_toml(&doc);
         assert!(c.obs.enabled);
         assert_eq!(c.obs.sample_shift, 0);
+    }
+
+    #[test]
+    fn telemetry_toml_overrides_apply() {
+        let doc =
+            crate::util::toml::parse("[sim]\ntelemetry = true\ntelemetry_epoch = 25000000")
+                .unwrap();
+        let mut c = SystemConfig::base();
+        assert!(!c.telemetry.enabled, "recorder is off by default (structural inertness)");
+        c.apply_toml(&doc);
+        assert!(c.telemetry.enabled);
+        assert_eq!(c.telemetry.epoch, 25 * crate::sim::US);
     }
 
     #[test]

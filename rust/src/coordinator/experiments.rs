@@ -1744,3 +1744,178 @@ pub fn obs(scale: Scale, print: bool) -> ObsSweep {
     }
     res
 }
+
+// ---------------------------------------------------------------------------
+// Telemetry — flight-recorder replay with SLO burn-rate alerts (§19)
+// ---------------------------------------------------------------------------
+
+/// One replayed incident: the scenario's run plus its recorded frame
+/// stream and fired alerts.
+#[derive(Debug, Clone)]
+pub struct TelemetryScenario {
+    pub name: &'static str,
+    /// The flight recorder's report for the run (frames + alerts).
+    pub report: crate::telemetry::TelemetryReport,
+}
+
+/// Aggregate result of [`telemetry`].
+#[derive(Debug, Clone)]
+pub struct TelemetrySweep {
+    /// Scenario A: a Z-NAND endpoint hard-degrades mid-run; the RAS
+    /// latch monitor must fire when the `ras_degraded` gauge steps.
+    pub ras: TelemetryScenario,
+    /// Scenario B: open-loop serve overload far past the DDR5 knee; the
+    /// multi-window burn-rate monitors must fire on deadline misses.
+    pub overload: TelemetryScenario,
+    /// First `ras-degraded` alert timestamp (ps); 0 = never fired.
+    pub ras_latch_ps: crate::sim::Time,
+    /// First `slo-fast-burn`/`slo-slow-burn` alert timestamp (ps);
+    /// 0 = never fired.
+    pub burn_ps: crate::sim::Time,
+}
+
+impl TelemetrySweep {
+    /// Named (run, report) pairs for the exporters (`--telemetry-out`).
+    pub fn runs(&self) -> Vec<(String, crate::telemetry::TelemetryReport)> {
+        vec![
+            (self.ras.name.to_string(), self.ras.report.clone()),
+            (self.overload.name.to_string(), self.overload.report.clone()),
+        ]
+    }
+}
+
+/// The `--fig telemetry` incident replay: two canonical failure
+/// scenarios re-run with the flight recorder armed, printing the frame
+/// timeline and the health monitors' alerts. Scenario A reuses the RAS
+/// sweep's scheduled endpoint degradation (the latch alert pinpoints
+/// the degradation epoch); scenario B reuses the serving sweep's
+/// 2x-knee overload (the burn-rate alerts fire on the shed/timeout
+/// stream while goodput holds). Alert timestamps are deterministic —
+/// pinned by `tests/figures.rs`.
+pub fn telemetry(scale: Scale, print: bool) -> TelemetrySweep {
+    use crate::sim::US;
+    use crate::telemetry::AlertKind;
+
+    // Scenario A: one scheduled endpoint failure (the RAS sweep's
+    // degraded-pool schedule, on the direct config so the recorder's
+    // port gauges see the latch). Cadence = a tenth of the lead time:
+    // ~10 healthy frames, then the step.
+    let degrade_at = if scale.ssd_ops >= 100_000 { crate::sim::MS } else { 100 * US };
+    let ras_cfg = {
+        let mut cfg = SystemConfig::named("cxl-ras", MediaKind::Znand);
+        cfg.total_ops = scale.ssd_ops;
+        cfg.ssd_scale();
+        cfg.ras = crate::ras::FaultSpec {
+            enabled: true,
+            degrade_at,
+            degrade_port: 0,
+            degrade_penalty: 10 * US,
+            ..Default::default()
+        };
+        cfg.telemetry.enabled = true;
+        cfg.telemetry.epoch = degrade_at / 10;
+        cfg
+    };
+
+    // Scenario B: open-loop arrivals at 2.56M rps — past every DDR5
+    // serve knee — with no admission bucket; the bounded queue sheds
+    // and the deadline reaper times out, so the miss stream is dense
+    // from the first frame.
+    let overload_cfg = {
+        let mut cfg = SystemConfig::named("cxl-serve", MediaKind::Ddr5);
+        cfg.total_ops = (scale.ssd_ops / 4).max(4_000);
+        cfg.ssd_scale();
+        cfg.serve = crate::serve::ServeSpec {
+            enabled: true,
+            rate_rps: 2.56e6,
+            slo: SERVE_SLO,
+            queue_cap: 32,
+            bucket_rps: 0.0,
+            ..Default::default()
+        };
+        cfg.telemetry.enabled = true;
+        cfg.telemetry.epoch = 50 * US;
+        cfg
+    };
+
+    let jobs: Vec<SweepJob> =
+        vec![(spec("bfs"), ras_cfg), (spec("vadd"), overload_cfg)];
+    let results = run_jobs(&jobs);
+    let [ras_run, overload_run] = take_exact(results, "telemetry scenarios");
+    let report = |r: &RunResult| {
+        r.metrics.telemetry.clone().expect("armed telemetry config must report")
+    };
+    let res = {
+        let ras = TelemetryScenario { name: "ras-degrade", report: report(&ras_run) };
+        let overload =
+            TelemetryScenario { name: "serve-overload", report: report(&overload_run) };
+        let first = |rep: &crate::telemetry::TelemetryReport, kinds: &[AlertKind]| {
+            rep.alerts
+                .iter()
+                .find(|a| kinds.contains(&a.kind))
+                .map_or(0, |a| a.at)
+        };
+        let ras_latch_ps = first(&ras.report, &[AlertKind::RasDegraded]);
+        let burn_ps = first(
+            &overload.report,
+            &[AlertKind::SloFastBurn, AlertKind::SloSlowBurn],
+        );
+        TelemetrySweep { ras, overload, ras_latch_ps, burn_ps }
+    };
+
+    if print {
+        let timeline = |scen: &TelemetryScenario, cols: &[(&str, fn(&crate::telemetry::Frame) -> String)]| {
+            println!("\n-- {} — frame timeline (first 24 epochs) --", scen.name);
+            print!("{:>12}", "t (µs)");
+            for (name, _) in cols {
+                print!(" {name:>10}");
+            }
+            println!();
+            for f in scen.report.frames.iter().take(24) {
+                print!("{:>12.1}", f.at as f64 / US as f64);
+                for (_, get) in cols {
+                    print!(" {:>10}", get(f));
+                }
+                println!();
+            }
+            if scen.report.frames.len() > 24 {
+                println!("  ... {} more frames", scen.report.frames.len() - 24);
+            }
+            for a in &scen.report.alerts {
+                println!("  ALERT {}", a.describe());
+            }
+            if scen.report.alerts.is_empty() {
+                println!("  (no alerts fired)");
+            }
+        };
+        println!("\n== Telemetry — flight-recorder incident replay ==");
+        timeline(
+            &res.ras,
+            &[
+                ("load ns", |f| format!("{:.0}", f.load_mean_ns())),
+                ("queue", |f| f.port_queue.to_string()),
+                ("devload", |f| f.devload.to_string()),
+                ("retries", |f| f.d_ras_retries.to_string()),
+                ("failovers", |f| f.d_ras_failovers.to_string()),
+                ("degraded", |f| f.ras_degraded.to_string()),
+            ],
+        );
+        timeline(
+            &res.overload,
+            &[
+                ("arrivals", |f| f.d_serve_arrivals.to_string()),
+                ("done", |f| f.d_serve_completed.to_string()),
+                ("in-slo", |f| f.d_serve_in_slo.to_string()),
+                ("shed", |f| f.d_serve_shed.to_string()),
+                ("timeout", |f| f.d_serve_timed_out.to_string()),
+                ("queue", |f| f.serve_queue.to_string()),
+            ],
+        );
+        println!(
+            "first RAS latch alert: {:.3} ms; first burn-rate alert: {:.3} ms",
+            res.ras_latch_ps as f64 / crate::sim::MS as f64,
+            res.burn_ps as f64 / crate::sim::MS as f64
+        );
+    }
+    res
+}

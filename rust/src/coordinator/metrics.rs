@@ -4,9 +4,13 @@ use crate::gpu::cache::LlcStats;
 use crate::obs::{ObsReport, Stage};
 use crate::sim::{ps_to_ns, Time, US};
 use crate::sim::Timeline;
+use crate::telemetry::TelemetryReport;
 use crate::util::stats::{Percentiles, Summary};
 
-/// Fig. 9e's three time series.
+/// Fig. 9e's three time series, carried on the shared
+/// `telemetry::Series` type (`Timeline` is its historical re-export) —
+/// per-*op* samples recorded inline on the load/store path, as opposed
+/// to the flight recorder's per-*epoch* frames.
 #[derive(Debug, Clone)]
 pub struct Fig9eSeries {
     pub load_latency: Timeline,
@@ -155,6 +159,13 @@ pub struct RunMetrics {
     /// the fingerprinted latencies, it is not one of them — and its
     /// conservation invariant ties it to them bit-exactly anyway.
     pub obs: Option<ObsReport>,
+    /// Flight-recorder report (§19); `None` unless the run armed
+    /// `cfg.telemetry`. Deterministic for a fixed config (calendar-tick
+    /// sampling of values the run computes anyway, no RNG), but not
+    /// fingerprinted: frames *explain* the fingerprinted totals — their
+    /// conservation invariant (deltas sum to the totals exactly) ties
+    /// them to the fingerprint bit-exactly anyway.
+    pub telemetry: Option<TelemetryReport>,
 }
 
 impl RunMetrics {
@@ -331,6 +342,30 @@ impl RunMetrics {
         self.obs.as_ref().map_or(0, |o| o.violations)
     }
 
+    /// Telemetry frames recorded (0 when the run armed no recorder).
+    pub fn telemetry_frames(&self) -> usize {
+        self.telemetry.as_ref().map_or(0, |t| t.frames.len())
+    }
+
+    /// Health-monitor alerts fired (0 when unarmed).
+    pub fn telemetry_alerts(&self) -> usize {
+        self.telemetry.as_ref().map_or(0, |t| t.alerts.len())
+    }
+
+    /// Frames dropped past the recorder's `max_frames` cap (0 when
+    /// unarmed; nonzero means the conservation sum is intentionally
+    /// short by the dropped windows).
+    pub fn telemetry_dropped(&self) -> u64 {
+        self.telemetry.as_ref().map_or(0, |t| t.dropped)
+    }
+
+    /// Sum a per-frame counter delta across the recorded stream (0 when
+    /// unarmed). For conserved counters this equals the run-final total
+    /// — property-tested in `tests/props.rs`.
+    pub fn telemetry_total(&self, field: impl Fn(&crate::telemetry::Frame) -> u64) -> u64 {
+        self.telemetry.as_ref().map_or(0, |t| t.total(field))
+    }
+
     /// Events per wall second (simulator throughput).
     pub fn events_per_sec(&self) -> f64 {
         if self.wall_ns == 0 {
@@ -428,6 +463,15 @@ mod tests {
             assert_eq!(m.obs_stage_p99_ns(s), 0.0);
             assert_eq!(m.obs_stage_share(s), 0.0);
         }
+    }
+
+    #[test]
+    fn telemetry_accessors_read_zero_when_unarmed() {
+        let m = RunMetrics::default();
+        assert_eq!(m.telemetry_frames(), 0);
+        assert_eq!(m.telemetry_alerts(), 0);
+        assert_eq!(m.telemetry_dropped(), 0);
+        assert_eq!(m.telemetry_total(|f| f.d_loads), 0);
     }
 
     #[test]

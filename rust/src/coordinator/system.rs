@@ -18,9 +18,10 @@ use crate::fabric::{CxlSwitch, FabricLink};
 use crate::gpu::{line_of, AccessResult, Llc, MemMap, Op, OpSource, Region, Warp, LINE};
 use crate::media::{DramModel, DramTimings, MediaKind, SsdModel, SsdParams};
 use crate::obs::{ObsState, SpanKind, Stage};
-use crate::rootcomplex::{EpBackend, LoadPath, RootComplex};
+use crate::rootcomplex::{EpBackend, FabricTelemetry, LoadPath, RootComplex};
 use crate::serve::FrontDoor;
 use crate::sim::{EventQueue, Lookahead, Steppable, Time, US};
+use crate::telemetry::{FabricSample, LocalSample, TelemetryState};
 use crate::util::prng::Pcg32;
 use crate::workloads::{OpStream, TraceParams, WorkloadSpec};
 
@@ -42,6 +43,11 @@ enum Ev {
     TierTick,
     /// One open-loop serving request lands at the front door.
     RequestArrival,
+    /// Flight-recorder epoch boundary: sample one telemetry frame
+    /// (§19). Read-only and RNG-free; the executed-tick count is
+    /// subtracted from `metrics.events` at harvest so armed runs stay
+    /// fingerprint-identical to disabled runs.
+    TelemetryTick,
 }
 
 /// One fabric interaction recorded instead of executed during a sharded
@@ -61,12 +67,21 @@ enum FabricOp {
     Store { at: Time, line: u64 },
     /// A DS background flush tick forwarded to the pooled endpoints.
     Flush { at: Time },
+    /// The fabric half of a telemetry frame (§19). The local half was
+    /// captured at the tick; replaying the fabric read at the global
+    /// (at, tenant, record-order) slot samples the shared switch in
+    /// exactly the state the serial schedule would have shown it, so
+    /// sharded runs record frame-identical telemetry.
+    Telemetry { at: Time },
 }
 
 impl FabricOp {
     fn at(&self) -> Time {
         match *self {
-            FabricOp::Load { at, .. } | FabricOp::Store { at, .. } | FabricOp::Flush { at } => at,
+            FabricOp::Load { at, .. }
+            | FabricOp::Store { at, .. }
+            | FabricOp::Flush { at }
+            | FabricOp::Telemetry { at } => at,
         }
     }
 }
@@ -123,6 +138,11 @@ pub struct System {
     /// reads timestamps the simulation computes anyway and draws no RNG,
     /// so even an armed tracer leaves the fingerprint bit-identical.
     obs: Option<ObsState>,
+    /// Flight recorder (§19); `None` unless `cfg.telemetry` is armed —
+    /// the same structural-inertness lever as `obs`. Frame capture is
+    /// split local/fabric so sharded pool runs record identical frames
+    /// to serial (see [`FabricOp::Telemetry`]).
+    telemetry: Option<TelemetryState>,
     pub metrics: RunMetrics,
 }
 
@@ -305,6 +325,7 @@ impl System {
             defer_fabric: false,
             deferred: VecDeque::new(),
             obs: ObsState::new(&cfg.obs),
+            telemetry: TelemetryState::new(&cfg.telemetry),
             metrics,
         })
     }
@@ -330,6 +351,9 @@ impl System {
             && matches!(self.backend, Backend::Cxl(_))
         {
             self.q.push_at(self.cfg.tier.epoch, Ev::TierTick);
+        }
+        if let Some(t) = &self.telemetry {
+            self.q.push_at(t.epoch(), Ev::TelemetryTick);
         }
     }
 
@@ -406,8 +430,117 @@ impl System {
                     }
                 }
                 Ev::RequestArrival => self.serve_arrival(now),
+                Ev::TelemetryTick => {
+                    // Local half now; fabric half now too, unless a
+                    // sharded parallel phase defers it to the barrier
+                    // replay (same split as FlushTick).
+                    let l = self.local_sample(now);
+                    if let Some(t) = &mut self.telemetry {
+                        t.on_tick();
+                        t.push_local(l);
+                    }
+                    if self.defer_fabric && matches!(self.backend, Backend::Cxl(_)) {
+                        self.deferred.push_back(FabricOp::Telemetry { at: now });
+                    } else {
+                        let f = self.fabric_sample(now);
+                        if let Some(t) = &mut self.telemetry {
+                            t.complete_fabric(f);
+                        }
+                    }
+                    if self.active_warps > 0 {
+                        if let Some(t) = &self.telemetry {
+                            self.q.push_in(t.epoch(), Ev::TelemetryTick);
+                        }
+                    }
+                }
         }
         true
+    }
+
+    /// Tenant-local telemetry sample: LLC/MSHR and front-door state,
+    /// safe to read even mid-parallel-phase (bit-identical local
+    /// evolution — see the telemetry module docs).
+    fn local_sample(&self, now: Time) -> LocalSample {
+        let mut s = LocalSample {
+            at: now,
+            mshr: self.llc.inflight() as u64,
+            llc_hits: self.llc.stats.hits,
+            llc_misses: self.llc.stats.misses,
+            mshr_stalls: self.llc.stats.mshr_stalls,
+            ..Default::default()
+        };
+        if let Some(fd) = &self.serve {
+            s.serve_queue = fd.queued() as u64;
+            s.serve_inflight = fd.in_flight() as u64;
+            s.serve_arrivals = fd.stats.arrivals;
+            s.serve_admitted = fd.stats.admitted;
+            s.serve_completed = fd.stats.completed;
+            s.serve_in_slo = fd.stats.completed_in_slo;
+            s.serve_timed_out = fd.stats.timed_out;
+            s.serve_shed = fd.stats.shed;
+            s.serve_rejected = fd.stats.rejected;
+        }
+        s
+    }
+
+    /// Expander/fabric telemetry sample. Counter sourcing mirrors
+    /// [`Self::harvest`] exactly (direct ports always, pooled endpoints
+    /// only for a sole upstream) so frame deltas sum to the run-final
+    /// totals; the one switch lock happens inside `telemetry_snapshot`.
+    fn fabric_sample(&self, at: Time) -> FabricSample {
+        let (snap, tier, faults, extra_gc) = match &self.backend {
+            Backend::Cxl(rc) => (
+                rc.telemetry_snapshot(at),
+                rc.tier.as_ref().map_or((0, 0), |t| (t.stats.promotions, t.stats.demotions)),
+                0,
+                0,
+            ),
+            Backend::Uvm(u) => (FabricTelemetry::default(), (0, 0), u.stats.faults, 0),
+            Backend::Gds(g) => (
+                FabricTelemetry::default(),
+                (0, 0),
+                g.stats().faults,
+                g.ssd.stats.gc_episodes,
+            ),
+            Backend::None => (FabricTelemetry::default(), (0, 0), 0, 0),
+        };
+        let (load_count, load_ps) =
+            self.telemetry.as_ref().map_or((0, 0.0), |t| t.load_acc());
+        let (store_count, store_ps) =
+            self.telemetry.as_ref().map_or((0, 0.0), |t| t.store_acc());
+        FabricSample {
+            port_queue: snap.port_queue,
+            devload: snap.devload,
+            ds_buffered: snap.ds_buffered,
+            cache_lines: snap.cache_lines,
+            cache_dirty: snap.cache_dirty,
+            cache_wb_pending: snap.cache_wb_pending,
+            ras_degraded: snap.ras_degraded,
+            qos_rate: snap.qos_rate,
+            ingress: snap.ingress,
+            loads: self.metrics.expander_loads,
+            stores: self.metrics.expander_stores,
+            ds_intercepts: self.metrics.ds_intercepts + snap.ds_intercepts,
+            ep_cache_hits: self.metrics.ep_cache_hits,
+            media_reads: self.metrics.media_reads,
+            faults,
+            gc_episodes: snap.gc_episodes + extra_gc,
+            sr_issued: snap.sr_issued,
+            sr_suppressed: snap.sr_suppressed,
+            cache_hits: snap.cache_hits,
+            cache_misses: snap.cache_misses,
+            cache_writebacks: snap.cache_writebacks,
+            ras_retries: snap.ras_retries,
+            ras_failovers: snap.ras_failovers,
+            tier_promotions: tier.0,
+            tier_demotions: tier.1,
+            throttle_waits: snap.throttle_waits,
+            backpressure: snap.backpressure,
+            load_count,
+            load_ps,
+            store_count,
+            store_ps,
+        }
     }
 
     /// Run to completion; returns the collected metrics. Equivalent to
@@ -424,7 +557,21 @@ impl System {
         self.metrics.exec_time =
             self.warps.iter().map(|w| w.stats.finish).max().unwrap_or(self.q.now());
         self.metrics.llc = self.llc.stats.clone();
-        self.metrics.events = self.q.popped();
+        // Tick events are the recorder's only calendar footprint;
+        // subtracting them keeps the fingerprinted event count identical
+        // to a telemetry-disabled run (pinned in tests/determinism.rs).
+        self.metrics.events =
+            self.q.popped() - self.telemetry.as_ref().map_or(0, |t| t.ticks());
+        // Run-final residual frame: whatever moved since the last tick,
+        // so frame deltas sum exactly to the totals harvested below.
+        if self.telemetry.is_some() {
+            let at = self.metrics.exec_time.max(self.q.now());
+            let l = self.local_sample(at);
+            let f = self.fabric_sample(at);
+            if let Some(t) = &mut self.telemetry {
+                self.metrics.telemetry = Some(t.finalize(l, f));
+            }
+        }
         match &self.backend {
             Backend::Cxl(rc) => {
                 for p in &rc.ports {
@@ -790,6 +937,9 @@ impl System {
         // Tail reservoir: the multi-tenant experiments' p99 victim
         // metric is the expander path only (LLC hits would drown it).
         self.metrics.load_pctl.add((done - now) as f64);
+        if let Some(t) = &mut self.telemetry {
+            t.note_load(done - now);
+        }
         if let Some(series) = &mut self.metrics.series {
             series.load_latency.record(now, (done - now) as f64 / 1000.0);
             if let Backend::Cxl(rc) = &self.backend {
@@ -880,6 +1030,9 @@ impl System {
         if let Some(series) = &mut self.metrics.series {
             series.store_latency.record(now, (ack - now) as f64 / 1000.0);
         }
+        if let Some(t) = &mut self.telemetry {
+            t.note_store(ack - now);
+        }
     }
 
     // -----------------------------------------------------------------
@@ -946,6 +1099,12 @@ impl System {
             FabricOp::Flush { at } => {
                 if let Backend::Cxl(rc) = &mut self.backend {
                     rc.flush_tick(at, &mut self.rng);
+                }
+            }
+            FabricOp::Telemetry { at } => {
+                let f = self.fabric_sample(at);
+                if let Some(t) = &mut self.telemetry {
+                    t.complete_fabric(f);
                 }
             }
         }
@@ -1276,5 +1435,68 @@ mod tests {
         let m = System::new(spec("bfs"), &c).run();
         let s = m.series.expect("series requested");
         assert!(!s.load_latency.is_empty());
+    }
+
+    #[test]
+    fn telemetry_records_frames_that_sum_to_the_run_totals() {
+        let mut c = tiny("cxl-sr", MediaKind::Znand);
+        c.telemetry.enabled = true;
+        c.telemetry.epoch = 10 * crate::sim::US;
+        let m = System::new(spec("vadd"), &c).run();
+        let rep = m.telemetry.as_ref().expect("recorder armed");
+        assert!(rep.frames.len() > 1, "expected multiple epochs: {}", rep.frames.len());
+        assert_eq!(rep.dropped, 0);
+        // Counter deltas partition the run-final totals exactly.
+        assert_eq!(rep.total(|f| f.d_loads), m.expander_loads);
+        assert_eq!(rep.total(|f| f.d_stores), m.expander_stores);
+        assert_eq!(rep.total(|f| f.d_llc_hits), m.llc.hits);
+        assert_eq!(rep.total(|f| f.d_llc_misses), m.llc.misses);
+        assert_eq!(rep.total(|f| f.d_sr_issued), m.sr_issued);
+        assert_eq!(rep.total(|f| f.d_ep_cache_hits), m.ep_cache_hits);
+        assert_eq!(rep.total(|f| f.d_media_reads), m.media_reads);
+        assert_eq!(rep.total(|f| f.d_load_count), m.expander_loads);
+    }
+
+    #[test]
+    fn telemetry_arming_is_fingerprint_inert() {
+        for cadence in [5 * crate::sim::US, 50 * crate::sim::US, crate::sim::MS] {
+            let off = tiny("cxl-cache", MediaKind::Znand);
+            let mut on = off.clone();
+            on.telemetry.enabled = true;
+            on.telemetry.epoch = cadence;
+            let a = System::new(spec("hot90"), &off).run();
+            let b = System::new(spec("hot90"), &on).run();
+            assert_eq!(
+                a.fingerprint(),
+                b.fingerprint(),
+                "telemetry at {cadence} ps must be read-only"
+            );
+            assert!(b.telemetry.is_some());
+        }
+    }
+
+    #[test]
+    fn telemetry_frames_carry_serve_counters() {
+        let mut c = tiny("cxl-serve", MediaKind::Ddr5);
+        c.telemetry.enabled = true;
+        c.telemetry.epoch = 10 * crate::sim::US;
+        let m = System::new(spec("vadd"), &c).run();
+        let rep = m.telemetry.as_ref().expect("recorder armed");
+        assert_eq!(rep.total(|f| f.d_serve_arrivals), m.serve_arrivals);
+        assert_eq!(rep.total(|f| f.d_serve_completed), m.serve_completed);
+        assert_eq!(rep.total(|f| f.d_serve_in_slo), m.serve_completed_in_slo);
+        assert_eq!(
+            rep.total(|f| f.d_serve_shed) + rep.total(|f| f.d_serve_timed_out),
+            m.serve_shed + m.serve_timed_out
+        );
+    }
+
+    #[test]
+    fn telemetry_zero_epoch_disarms_the_recorder() {
+        let mut c = tiny("cxl", MediaKind::Ddr5);
+        c.telemetry.enabled = true;
+        c.telemetry.epoch = 0;
+        let m = System::new(spec("vadd"), &c).run();
+        assert!(m.telemetry.is_none(), "epoch 0 must mean disabled");
     }
 }

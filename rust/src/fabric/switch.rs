@@ -371,6 +371,29 @@ impl CxlSwitch {
         self.downstream.iter().map(|p| p.ds.buffered_bytes()).sum()
     }
 
+    /// One tenant's QoS token-bucket refill rate, bytes/s (0 when the
+    /// pool runs without QoS shaping) — the telemetry `qos_rate` gauge,
+    /// which moves as AIMD feedback throttles or recovers the tenant.
+    pub fn qos_rate(&self, up: usize) -> u64 {
+        if self.spec.qos {
+            self.up[up].qos.rate()
+        } else {
+            0
+        }
+    }
+
+    /// Downstream endpoints currently latched degraded (RAS §15) — the
+    /// telemetry `ras_degraded` gauge in pooled runs.
+    pub fn degraded_endpoints(&self) -> u64 {
+        self.downstream.iter().filter(|p| p.is_degraded()).count() as u64
+    }
+
+    /// Worst DevLoad class across the pooled endpoints at `at`
+    /// (0=Light .. 3=Severe).
+    pub fn worst_devload(&self, at: Time) -> u8 {
+        self.downstream.iter().map(|p| p.devload(at).encode()).max().unwrap_or(0)
+    }
+
     /// Background DS flush across the pooled endpoints. *Every* tenant's
     /// `FlushTick` forwards here — gating on one fixed tenant would
     /// stall the pool's flush once that tenant retires — and the switch

@@ -37,5 +37,6 @@ pub mod rootcomplex;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod workloads;

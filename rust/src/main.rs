@@ -20,7 +20,10 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match cli::parse(
         &argv,
-        &["workload", "config", "media", "ops", "fig", "toml", "artifacts", "seed", "json", "trace-out"],
+        &[
+            "workload", "config", "media", "ops", "fig", "toml", "artifacts", "seed", "json",
+            "trace-out", "telemetry-out",
+        ],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -60,7 +63,7 @@ fn usage() -> String {
         &[
             ("run", "simulate one workload under one configuration"),
             ("suite", "simulate all 13 workloads under one configuration"),
-            ("experiments", "reproduce the paper's figures (--fig 3b|9a|9b|9c|9d|9e|table1b|headline|tier|mt|cache|ras|serve|pool-scale|obs)"),
+            ("experiments", "reproduce the paper's figures (--fig 3b|9a|9b|9c|9d|9e|table1b|headline|tier|mt|cache|ras|serve|pool-scale|obs|telemetry)"),
             ("latency", "Fig. 3b controller round-trip comparison"),
             ("execute", "run an AOT workload artifact via PJRT (real compute)"),
             ("list", "show workloads, configurations and media"),
@@ -74,6 +77,7 @@ fn usage() -> String {
             OptSpec { name: "toml", help: "TOML config file with [sim] overrides", takes_value: true },
             OptSpec { name: "artifacts", help: "artifacts dir for `execute` (default artifacts/)", takes_value: true },
             OptSpec { name: "trace-out", help: "with --fig obs: write a Chrome/Perfetto trace JSON here", takes_value: true },
+            OptSpec { name: "telemetry-out", help: "with --fig telemetry: write JSONL frames here (+ `.prom` Prometheus exposition)", takes_value: true },
             OptSpec { name: "quick", help: "smaller sweeps for experiments", takes_value: false },
         ],
     )
@@ -188,8 +192,23 @@ fn cmd_experiments(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
                         .map(|r| (r.name.to_string(), r.report.clone()))
                         .collect();
                     let json = cxl_gpu::obs::chrome_trace(&reports);
-                    std::fs::write(path, json.to_string()).map_err(|e| format!("{path}: {e}"))?;
+                    cxl_gpu::util::json::write_file(path, &json)?;
                     println!("wrote {path} (chrome://tracing / Perfetto trace-event JSON)");
+                }
+            }
+            "telemetry" => {
+                let sweep = experiments::telemetry(scale, true);
+                if let Some(path) = args.get("telemetry-out") {
+                    let runs = sweep.runs();
+                    let mut lines = String::new();
+                    for (name, rep) in &runs {
+                        lines.push_str(&cxl_gpu::telemetry::jsonl(name, rep));
+                    }
+                    std::fs::write(path, lines).map_err(|e| format!("{path}: {e}"))?;
+                    let prom = format!("{path}.prom");
+                    std::fs::write(&prom, cxl_gpu::telemetry::prometheus(&runs))
+                        .map_err(|e| format!("{prom}: {e}"))?;
+                    println!("wrote {path} (JSONL frames) and {prom} (Prometheus exposition)");
                 }
             }
             other => return Err(format!("unknown figure `{other}`")),
@@ -199,7 +218,7 @@ fn cmd_experiments(args: &cxl_gpu::util::cli::Args) -> Result<(), String> {
     if which == "all" {
         for f in [
             "3b", "table1b", "9a", "9b", "9c", "9d", "9e", "headline", "tier", "mt", "cache",
-            "ras", "serve", "pool-scale", "obs",
+            "ras", "serve", "pool-scale", "obs", "telemetry",
         ] {
             run_one(f)?;
         }
@@ -250,27 +269,24 @@ fn write_json_report(
     config: &str,
     results: &[cxl_gpu::coordinator::runner::RunResult],
 ) -> Result<(), String> {
-    use cxl_gpu::util::json::Json;
-    use std::collections::BTreeMap;
+    use cxl_gpu::util::json::{write_file, Json, JsonObj};
     let rows: Vec<Json> = results
         .iter()
         .map(|r| {
-            let mut m = BTreeMap::new();
-            m.insert("workload".into(), Json::Str(r.workload.into()));
-            m.insert("config".into(), Json::Str(r.config.clone()));
-            m.insert("media".into(), Json::Str(r.media.name().into()));
-            m.insert("exec_ms".into(), Json::Num(r.metrics.exec_ms()));
-            m.insert("load_lat_ns".into(), Json::Num(r.metrics.load_latency.mean() / 1e3));
-            m.insert("llc_hit".into(), Json::Num(r.metrics.llc.hit_rate()));
-            m.insert("ep_hit".into(), Json::Num(r.metrics.ep_hit_rate()));
-            m.insert("faults".into(), Json::Num(r.metrics.faults as f64));
-            m.insert("gc_episodes".into(), Json::Num(r.metrics.gc_episodes as f64));
-            m.insert("sr_issued".into(), Json::Num(r.metrics.sr_issued as f64));
-            Json::Obj(m)
+            JsonObj::new()
+                .set("workload", r.workload)
+                .set("config", r.config.clone())
+                .set("media", r.media.name())
+                .set("exec_ms", r.metrics.exec_ms())
+                .set("load_lat_ns", r.metrics.load_latency.mean() / 1e3)
+                .set("llc_hit", r.metrics.llc.hit_rate())
+                .set("ep_hit", r.metrics.ep_hit_rate())
+                .set("faults", r.metrics.faults)
+                .set("gc_episodes", r.metrics.gc_episodes)
+                .set("sr_issued", r.metrics.sr_issued)
+                .build()
         })
         .collect();
-    let mut top = BTreeMap::new();
-    top.insert("suite".into(), Json::Str(config.into()));
-    top.insert("results".into(), Json::Arr(rows));
-    std::fs::write(path, Json::Obj(top).to_string()).map_err(|e| e.to_string())
+    let doc = JsonObj::new().set("suite", config).set("results", rows).build();
+    write_file(path, &doc)
 }

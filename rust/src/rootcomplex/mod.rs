@@ -496,6 +496,104 @@ impl RootComplex {
             sole_pool: (sw.upstreams() == 1).then(|| sw.pool_sums()),
         })
     }
+
+    /// Expander-side snapshot for the telemetry flight recorder (§19):
+    /// gauges at `at` plus the cumulative counters the frame deltas are
+    /// computed from. Counter sourcing mirrors `System::harvest` exactly
+    /// — local ports always, pooled endpoints only when this tenant is
+    /// the pool's sole upstream — so frame deltas sum to the run-final
+    /// `RunMetrics` totals. One fabric lock per call.
+    pub fn telemetry_snapshot(&self, at: Time) -> FabricTelemetry {
+        let mut t = FabricTelemetry::default();
+        for p in &self.ports {
+            t.port_queue += p.occupancy(at) as u64;
+            t.devload = t.devload.max(p.devload(at).encode());
+            t.ds_buffered += p.ds.buffered_bytes();
+            t.ds_intercepts += p.ds.stats.read_intercepts;
+            t.ras_degraded += p.is_degraded() as u64;
+            t.sr_issued += p.sr.stats.sr_issued;
+            t.sr_suppressed += p.sr.stats.cache_suppressed;
+            if let Some(c) = &p.cache {
+                t.cache_lines += c.lines() as u64;
+                t.cache_dirty += c.dirty_lines() as u64;
+                t.cache_wb_pending += c.wb_pending() as u64;
+                t.cache_hits += c.stats.hits;
+                t.cache_misses += c.stats.misses;
+                t.cache_writebacks += c.stats.writebacks;
+            }
+            if let Some(r) = &p.ras {
+                t.ras_retries += r.stats.retries;
+                t.ras_failovers += r.stats.failovers;
+            }
+            if let EpBackend::Ssd(m) = &p.backend {
+                t.gc_episodes += m.stats.gc_episodes;
+            }
+        }
+        if let Some(att) = &self.fabric {
+            let sw = att.link.lock().expect("fabric mutex poisoned");
+            t.ingress = sw.ingress_occupancy(att.upstream, at) as u64;
+            t.port_queue = t.ingress;
+            t.devload = sw.worst_devload(at);
+            t.ds_buffered += sw.ds_backlog();
+            t.ras_degraded += sw.degraded_endpoints();
+            t.qos_rate = sw.qos_rate(att.upstream);
+            let st = sw.upstream_stats(att.upstream);
+            t.throttle_waits = st.throttle_waits;
+            t.backpressure = st.backpressure;
+            if sw.upstreams() == 1 {
+                let ps = sw.pool_sums();
+                t.sr_issued += ps.sr_issued;
+                t.ds_intercepts += ps.ds_intercepts;
+                t.gc_episodes += ps.gc_episodes;
+                t.cache_hits += ps.cache_hits;
+                t.cache_misses += ps.cache_misses;
+                t.cache_writebacks += ps.cache_writebacks;
+                t.ras_retries += ps.ras_retries;
+                t.ras_failovers += ps.ras_failovers;
+                for p in &sw.downstream {
+                    t.sr_suppressed += p.sr.stats.cache_suppressed;
+                    if let Some(c) = &p.cache {
+                        t.cache_lines += c.lines() as u64;
+                        t.cache_dirty += c.dirty_lines() as u64;
+                        t.cache_wb_pending += c.wb_pending() as u64;
+                    }
+                }
+            }
+        }
+        t
+    }
+}
+
+/// One root complex's expander-side telemetry snapshot — see
+/// [`RootComplex::telemetry_snapshot`]. Gauge fields are instantaneous;
+/// the rest are cumulative counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FabricTelemetry {
+    /// Summed local-port queue occupancy (direct) or this tenant's
+    /// switch ingress occupancy (pooled).
+    pub port_queue: u64,
+    /// Worst DevLoad class across endpoints (0=Light .. 3=Severe).
+    pub devload: u8,
+    pub ds_buffered: u64,
+    pub cache_lines: u64,
+    pub cache_dirty: u64,
+    pub cache_wb_pending: u64,
+    pub ras_degraded: u64,
+    pub qos_rate: u64,
+    pub ingress: u64,
+    pub sr_issued: u64,
+    pub sr_suppressed: u64,
+    /// Port/pool-side DS read-intercept count; `System` adds its own
+    /// per-load count on top, mirroring the two harvest sources.
+    pub ds_intercepts: u64,
+    pub gc_episodes: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_writebacks: u64,
+    pub ras_retries: u64,
+    pub ras_failovers: u64,
+    pub throttle_waits: u64,
+    pub backpressure: u64,
 }
 
 #[cfg(test)]

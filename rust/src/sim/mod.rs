@@ -10,12 +10,14 @@
 pub mod interleave;
 pub mod pdes;
 pub mod queue;
-pub mod timeline;
 
 pub use interleave::{interleave, Steppable};
 pub use pdes::{run_conservative, Lookahead};
 pub use queue::EventQueue;
-pub use timeline::Timeline;
+/// Historical name for the bucketed time series, which now lives with
+/// the flight recorder as [`crate::telemetry::Series`] (§19) — one
+/// time-series representation for Fig. 9e and telemetry alike.
+pub use crate::telemetry::Series as Timeline;
 
 /// Simulation time in **picoseconds**. CXL layer costs are single-digit
 /// nanoseconds and PCIe serialization is sub-nanosecond per lane-beat, so

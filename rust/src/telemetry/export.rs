@@ -1,0 +1,248 @@
+//! Telemetry exporters (§19): JSONL time series and Prometheus text
+//! exposition, both built on `util/json.rs` / plain text — no external
+//! dependencies, deterministic byte output for the same report.
+//!
+//! The `--telemetry-out PATH` CLI flag writes the JSONL stream at `PATH`
+//! and the Prometheus exposition at `PATH.prom`; CI parses both
+//! (`examples/prom_check.rs` validates the exposition grammar).
+
+use crate::util::json::{Json, JsonObj};
+
+use super::{Frame, TelemetryReport};
+
+/// Every counter-delta field exported, with its cumulative-total
+/// Prometheus family name. One list drives both exporters so the two
+/// outputs can never drift apart.
+const COUNTERS: &[(&str, &str, fn(&Frame) -> u64)] = &[
+    ("loads", "Expander loads routed", |f| f.d_loads),
+    ("stores", "Expander writebacks routed", |f| f.d_stores),
+    ("llc_hits", "GPU LLC hits", |f| f.d_llc_hits),
+    ("llc_misses", "GPU LLC misses", |f| f.d_llc_misses),
+    ("mshr_stalls", "Issue stalls on MSHR exhaustion", |f| f.d_mshr_stalls),
+    ("ds_intercepts", "Loads served from the DS write stack", |f| f.d_ds_intercepts),
+    ("ep_cache_hits", "Loads served by the expander cache", |f| f.d_ep_cache_hits),
+    ("media_reads", "Loads that reached backend media", |f| f.d_media_reads),
+    ("faults", "UVM/GDS fault-path transfers", |f| f.d_faults),
+    ("gc_episodes", "SSD garbage-collection episodes", |f| f.d_gc_episodes),
+    ("sr_issued", "Speculative reads issued", |f| f.d_sr_issued),
+    ("sr_suppressed", "Speculative reads suppressed by the EP cache", |f| {
+        f.d_sr_suppressed
+    }),
+    ("cache_hits", "Device-cache hits", |f| f.d_cache_hits),
+    ("cache_misses", "Device-cache misses", |f| f.d_cache_misses),
+    ("cache_writebacks", "Device-cache writebacks", |f| f.d_cache_writebacks),
+    ("ras_retries", "RAS link retries", |f| f.d_ras_retries),
+    ("ras_failovers", "RAS endpoint failovers", |f| f.d_ras_failovers),
+    ("tier_promotions", "Tiering promotions", |f| f.d_tier_promotions),
+    ("tier_demotions", "Tiering demotions", |f| f.d_tier_demotions),
+    ("throttle_waits", "QoS token-bucket throttle waits", |f| f.d_throttle_waits),
+    ("backpressure", "Switch ingress backpressure events", |f| f.d_backpressure),
+    ("serve_arrivals", "Serve requests arrived", |f| f.d_serve_arrivals),
+    ("serve_admitted", "Serve requests admitted", |f| f.d_serve_admitted),
+    ("serve_completed", "Serve requests completed", |f| f.d_serve_completed),
+    ("serve_in_slo", "Serve requests completed within SLO", |f| f.d_serve_in_slo),
+    ("serve_timed_out", "Serve requests past deadline", |f| f.d_serve_timed_out),
+    ("serve_shed", "Serve requests shed under overload", |f| f.d_serve_shed),
+    ("serve_rejected", "Serve requests rejected at admission", |f| f.d_serve_rejected),
+];
+
+/// Instantaneous gauges exported from the most recent frame.
+const GAUGES: &[(&str, &str, fn(&Frame) -> f64)] = &[
+    ("mshr_occupancy", "LLC MSHR entries in flight", |f| f.mshr as f64),
+    ("port_queue_depth", "Root-port queue occupancy", |f| f.port_queue as f64),
+    ("devload_class", "Worst DevLoad class (0=Light..3=Severe)", |f| f.devload as f64),
+    ("ds_buffered_bytes", "DS write-stack bytes buffered", |f| f.ds_buffered as f64),
+    ("cache_lines", "Device-cache resident lines", |f| f.cache_lines as f64),
+    ("cache_dirty_lines", "Device-cache dirty lines", |f| f.cache_dirty as f64),
+    ("cache_wb_pending", "Device-cache writeback backlog", |f| f.cache_wb_pending as f64),
+    ("ras_degraded", "Endpoints latched degraded", |f| f.ras_degraded as f64),
+    ("qos_rate_bytes", "QoS token refill rate", |f| f.qos_rate as f64),
+    ("ingress_occupancy", "Switch ingress occupancy", |f| f.ingress as f64),
+    ("serve_queue_depth", "Front-door admission queue depth", |f| f.serve_queue as f64),
+    ("serve_inflight", "Requests dispatched and not drained", |f| f.serve_inflight as f64),
+    ("load_latency_ns", "Mean expander load latency, last epoch", Frame::load_mean_ns),
+    ("store_latency_ns", "Mean expander store latency, last epoch", Frame::store_mean_ns),
+];
+
+fn frame_obj(f: &Frame) -> JsonObj {
+    let mut o =
+        JsonObj::new().set("type", "frame").set("seq", f.seq).set("at_us", f.at as f64 / 1e6);
+    for (name, _, get) in COUNTERS {
+        o = o.set(&format!("d_{name}"), get(f));
+    }
+    for (name, _, get) in GAUGES {
+        o = o.set(name, get(f));
+    }
+    o
+}
+
+/// JSONL time series: one `meta` line, one `frame` line per epoch, one
+/// `alert` line per fired monitor. Every line is a standalone JSON
+/// object — `jq`/pandas friendly.
+pub fn jsonl(name: &str, rep: &TelemetryReport) -> String {
+    let mut out = String::new();
+    let meta: Json = JsonObj::new()
+        .set("type", "meta")
+        .set("name", name)
+        .set("epoch_us", rep.epoch as f64 / 1e6)
+        .set("frames", rep.frames.len())
+        .set("ticks", rep.ticks)
+        .set("dropped", rep.dropped)
+        .set("alerts", rep.alerts.len())
+        .into();
+    out.push_str(&meta.to_string());
+    out.push('\n');
+    for f in &rep.frames {
+        out.push_str(&Json::from(frame_obj(f)).to_string());
+        out.push('\n');
+    }
+    for a in &rep.alerts {
+        let line: Json = JsonObj::new()
+            .set("type", "alert")
+            .set("at_us", a.at as f64 / 1e6)
+            .set("frame", a.frame)
+            .set("kind", a.kind.name())
+            .set("value", a.value)
+            .set("threshold", a.threshold)
+            .into();
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Escape a Prometheus label value (`\`, `"`, newline).
+fn label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Prometheus text exposition (format 0.0.4) over one or more named
+/// runs. Counter families export run totals (summed frame deltas) as
+/// `cxlgpu_<name>_total{run="..."}`; gauges export the last frame's
+/// value; alerts export a per-kind count. `# HELP`/`# TYPE` are emitted
+/// once per family, samples grouped under them, which is what the
+/// exposition grammar requires.
+pub fn prometheus(runs: &[(String, TelemetryReport)]) -> String {
+    let mut out = String::new();
+    for (fam, help, get) in COUNTERS {
+        out.push_str(&format!("# HELP cxlgpu_{fam}_total {help}\n"));
+        out.push_str(&format!("# TYPE cxlgpu_{fam}_total counter\n"));
+        for (name, rep) in runs {
+            let total: u64 = rep.frames.iter().map(|f| get(f)).sum();
+            out.push_str(&format!(
+                "cxlgpu_{fam}_total{{run=\"{}\"}} {total}\n",
+                label(name)
+            ));
+        }
+    }
+    for (fam, help, get) in GAUGES {
+        out.push_str(&format!("# HELP cxlgpu_{fam} {help}\n"));
+        out.push_str(&format!("# TYPE cxlgpu_{fam} gauge\n"));
+        for (name, rep) in runs {
+            let v = rep.frames.last().map(|f| get(f)).unwrap_or(0.0);
+            out.push_str(&format!("cxlgpu_{fam}{{run=\"{}\"}} {}\n", label(name), num(v)));
+        }
+    }
+    out.push_str("# HELP cxlgpu_alerts_total Health-monitor alerts fired\n");
+    out.push_str("# TYPE cxlgpu_alerts_total counter\n");
+    for (name, rep) in runs {
+        for kind in
+            ["slo-fast-burn", "slo-slow-burn", "latency-inflation", "ras-degraded", "cache-thrash"]
+        {
+            let n = rep.alerts.iter().filter(|a| a.kind.name() == kind).count();
+            out.push_str(&format!(
+                "cxlgpu_alerts_total{{run=\"{}\",kind=\"{kind}\"}} {n}\n",
+                label(name)
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::US;
+    use crate::telemetry::{Alert, AlertKind};
+    use crate::util::json::parse;
+
+    fn report() -> TelemetryReport {
+        let frames = vec![
+            Frame {
+                seq: 0,
+                at: 50 * US,
+                d_loads: 10,
+                d_load_count: 10,
+                d_load_ps: 10.0 * 2_000_000.0,
+                ingress: 3,
+                ..Default::default()
+            },
+            Frame { seq: 1, at: 100 * US, d_loads: 5, ras_degraded: 1, ..Default::default() },
+        ];
+        TelemetryReport {
+            epoch: 50 * US,
+            frames,
+            ticks: 2,
+            dropped: 0,
+            alerts: vec![Alert {
+                at: 100 * US,
+                frame: 1,
+                kind: AlertKind::RasDegraded,
+                value: 1.0,
+                threshold: 0.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn jsonl_lines_all_parse() {
+        let text = jsonl("cxl-ras", &report());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4, "meta + 2 frames + 1 alert");
+        let meta = parse(lines[0]).unwrap();
+        assert_eq!(meta.get("type").unwrap().as_str(), Some("meta"));
+        assert_eq!(meta.get("frames").unwrap().as_u64(), Some(2));
+        let f0 = parse(lines[1]).unwrap();
+        assert_eq!(f0.get("d_loads").unwrap().as_u64(), Some(10));
+        assert_eq!(f0.get("load_latency_ns").unwrap().as_u64(), Some(2000));
+        let alert = parse(lines[3]).unwrap();
+        assert_eq!(alert.get("kind").unwrap().as_str(), Some("ras-degraded"));
+    }
+
+    #[test]
+    fn prometheus_totals_and_last_gauges() {
+        let text = prometheus(&[("run-a".to_string(), report())]);
+        assert!(text.contains("# TYPE cxlgpu_loads_total counter\n"));
+        assert!(text.contains("cxlgpu_loads_total{run=\"run-a\"} 15\n"));
+        assert!(text.contains("cxlgpu_ras_degraded{run=\"run-a\"} 1\n"));
+        assert!(text.contains("cxlgpu_alerts_total{run=\"run-a\",kind=\"ras-degraded\"} 1\n"));
+        // HELP/TYPE precede their samples and appear exactly once.
+        assert_eq!(text.matches("# TYPE cxlgpu_loads_total").count(), 1);
+        let type_at = text.find("# TYPE cxlgpu_loads_total").unwrap();
+        let sample_at = text.find("cxlgpu_loads_total{").unwrap();
+        assert!(type_at < sample_at);
+    }
+
+    #[test]
+    fn prometheus_escapes_hostile_run_names() {
+        let text = prometheus(&[("we\"ird\\name".to_string(), report())]);
+        assert!(text.contains("run=\"we\\\"ird\\\\name\""));
+    }
+}

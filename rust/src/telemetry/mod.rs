@@ -1,0 +1,637 @@
+//! Flight recorder (DESIGN.md §19): deterministic epoch time-series
+//! telemetry over one simulation run.
+//!
+//! A `TelemetryTick` calendar event samples, every [`TelemetrySpec::epoch`]
+//! picoseconds, one fixed-width [`Frame`] of system-wide gauges and
+//! counter *deltas*: port/ingress queue depth, DevLoad class, MSHR
+//! occupancy, SR issue/suppression, DS buffer fill, expander-cache
+//! occupancy and writeback backlog, tiering migrations, RAS retry and
+//! degradation state, QoS token rate, and the serving front door's queue
+//! depth, goodput and deadline misses. On top of the frame stream sit
+//! the [`health`] SLO monitors (multi-window burn rate, latency
+//! inflation, RAS degradation latch, cache-thrash) and the [`export`]
+//! encoders (Prometheus text exposition, JSONL).
+//!
+//! # Determinism contract
+//!
+//! The same contract as the §18 span tracer, with one addition for the
+//! tick events themselves:
+//!
+//! * **Structural inertness.** A disabled spec builds no
+//!   [`TelemetryState`] (`new` returns `None`): nothing exists to
+//!   consult, no tick is ever scheduled, and the disabled run is
+//!   bit-identical to the pre-telemetry code path.
+//! * **Read-only arming.** An armed recorder samples only values the
+//!   simulation computes anyway and draws no RNG. Tick events do consume
+//!   calendar sequence numbers, but relative order among all other
+//!   events is preserved (sequence numbers are monotonic), and the
+//!   coordinator subtracts [`TelemetryState::ticks`] from the popped
+//!   count so the `events` fingerprint entry matches a disabled run
+//!   exactly — armed runs are fingerprint-identical at every cadence
+//!   (pinned in `tests/determinism.rs`).
+//! * **Shard safety.** In a sharded pool run (§17) a tick that fires
+//!   during a parallel phase may not read the shared switch — its state
+//!   lags the serial schedule until the barrier. Capture is therefore
+//!   split: the *local* half (LLC, MSHR, front door) is taken at the
+//!   tick, where tenant-local evolution is already bit-identical, and
+//!   the *fabric* half (expander counters, switch gauges, pool sums) is
+//!   recorded as a deferred fabric op and completed during the serial
+//!   replay phase, in exactly the global `(time, tenant, program-order)`
+//!   slot the serial run's tick would have occupied. Sharded runs
+//!   therefore record frame-for-frame identical telemetry to serial —
+//!   the capability the Fig. 9e timeline (per-op sampling inside the
+//!   load path) structurally cannot have.
+//!
+//! # Conservation contract
+//!
+//! Frames record counter deltas against the previous frame, and
+//! [`TelemetryState::finalize`] captures one residual frame at harvest,
+//! so for every recorded counter the sum of deltas across the frame
+//! stream equals the run-final `RunMetrics` total exactly (integer
+//! arithmetic, no sampling) — pinned by a property test over randomized
+//! configs in `tests/props.rs`. The only exception is a stream truncated
+//! by [`TelemetrySpec::max_frames`], which the `dropped` counter makes
+//! visible.
+
+pub mod export;
+pub mod health;
+pub mod series;
+
+pub use export::{jsonl, prometheus};
+pub use health::{scan, Alert, AlertKind, HealthSpec};
+pub use series::{Series, MAX_BUCKETS};
+
+use std::collections::VecDeque;
+
+use crate::sim::{Time, US};
+
+/// Flight-recorder configuration. `Default` is disabled and structurally
+/// inert: a config carrying it schedules no ticks and records nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TelemetrySpec {
+    /// Master switch; `false` (default) builds no recorder.
+    pub enabled: bool,
+    /// Sampling cadence in picoseconds. The default matches the Fig. 9e
+    /// bucket width (50 µs), so frame indices line up with the
+    /// historical timeline buckets.
+    pub epoch: Time,
+    /// Hard ceiling on retained frames; past it, new frames are dropped
+    /// (counted in [`TelemetryReport::dropped`]) instead of growing the
+    /// buffer unbounded on multi-second runs.
+    pub max_frames: usize,
+}
+
+impl Default for TelemetrySpec {
+    fn default() -> TelemetrySpec {
+        TelemetrySpec { enabled: false, epoch: 50 * US, max_frames: MAX_BUCKETS }
+    }
+}
+
+/// One telemetry epoch: gauges sampled at the tick plus counter deltas
+/// since the previous frame. `d_`-prefixed fields are deltas; everything
+/// else is an instantaneous gauge. Fixed width — every run records the
+/// same schema, with fields a topology lacks held at zero.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Frame {
+    /// Frame index (0-based).
+    pub seq: u64,
+    /// Capture timestamp (end of the epoch), picoseconds.
+    pub at: Time,
+
+    // --- tenant-local gauges (sampled at the tick) ---
+    /// LLC MSHR entries in flight.
+    pub mshr: u64,
+    /// Admission-queue depth at the serving front door.
+    pub serve_queue: u64,
+    /// Requests dispatched to warps and not yet drained.
+    pub serve_inflight: u64,
+
+    // --- tenant-local counter deltas ---
+    pub d_llc_hits: u64,
+    pub d_llc_misses: u64,
+    pub d_mshr_stalls: u64,
+    pub d_serve_arrivals: u64,
+    pub d_serve_admitted: u64,
+    pub d_serve_completed: u64,
+    pub d_serve_in_slo: u64,
+    pub d_serve_timed_out: u64,
+    pub d_serve_shed: u64,
+    pub d_serve_rejected: u64,
+
+    // --- expander/fabric gauges ---
+    /// Direct attach: summed root-port queue occupancy. Pooled: this
+    /// tenant's switch ingress occupancy.
+    pub port_queue: u64,
+    /// Worst DevLoad class across local ports (0=Light .. 3=Severe).
+    pub devload: u8,
+    /// DS write-stack bytes buffered (local and pooled endpoints).
+    pub ds_buffered: u64,
+    /// Expander device-cache resident lines.
+    pub cache_lines: u64,
+    /// ... of which dirty.
+    pub cache_dirty: u64,
+    /// Device-cache writeback queue backlog (lines).
+    pub cache_wb_pending: u64,
+    /// Endpoints currently latched degraded (RAS §15).
+    pub ras_degraded: u64,
+    /// QoS token-bucket refill rate, bytes/s (0 = no QoS shaping).
+    pub qos_rate: u64,
+    /// Switch ingress occupancy for this tenant (pooled runs).
+    pub ingress: u64,
+
+    // --- expander/fabric counter deltas ---
+    pub d_loads: u64,
+    pub d_stores: u64,
+    pub d_ds_intercepts: u64,
+    pub d_ep_cache_hits: u64,
+    pub d_media_reads: u64,
+    pub d_faults: u64,
+    pub d_gc_episodes: u64,
+    pub d_sr_issued: u64,
+    /// SR candidates suppressed because the EP cache already covered them.
+    pub d_sr_suppressed: u64,
+    pub d_cache_hits: u64,
+    pub d_cache_misses: u64,
+    pub d_cache_writebacks: u64,
+    pub d_ras_retries: u64,
+    pub d_ras_failovers: u64,
+    pub d_tier_promotions: u64,
+    pub d_tier_demotions: u64,
+    pub d_throttle_waits: u64,
+    pub d_backpressure: u64,
+
+    // --- expander-op latency accumulator deltas ---
+    /// Expander loads completed-routed this epoch (the latency pair's
+    /// denominator; equals `d_loads` on every current backend).
+    pub d_load_count: u64,
+    /// Summed expander load latency this epoch, picoseconds.
+    pub d_load_ps: f64,
+    pub d_store_count: u64,
+    pub d_store_ps: f64,
+}
+
+impl Frame {
+    /// Mean expander load latency this epoch, nanoseconds (0 when idle).
+    pub fn load_mean_ns(&self) -> f64 {
+        if self.d_load_count == 0 { 0.0 } else { self.d_load_ps / self.d_load_count as f64 / 1e3 }
+    }
+
+    /// Mean expander store latency this epoch, nanoseconds.
+    pub fn store_mean_ns(&self) -> f64 {
+        if self.d_store_count == 0 {
+            0.0
+        } else {
+            self.d_store_ps / self.d_store_count as f64 / 1e3
+        }
+    }
+
+    /// SR hit rate this epoch: loads served by the EP cache.
+    pub fn sr_hit_rate(&self) -> f64 {
+        if self.d_loads == 0 { 0.0 } else { self.d_ep_cache_hits as f64 / self.d_loads as f64 }
+    }
+
+    /// Device-cache hit rate this epoch.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.d_cache_hits + self.d_cache_misses;
+        if total == 0 { 0.0 } else { self.d_cache_hits as f64 / total as f64 }
+    }
+
+    /// Serve deadline misses this epoch (timed out + shed).
+    pub fn serve_missed(&self) -> u64 {
+        self.d_serve_timed_out + self.d_serve_shed
+    }
+}
+
+/// Cumulative tenant-local counters plus instantaneous local gauges,
+/// sampled at the tick event. The recorder turns consecutive samples
+/// into per-frame deltas.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LocalSample {
+    pub at: Time,
+    pub mshr: u64,
+    pub serve_queue: u64,
+    pub serve_inflight: u64,
+    pub llc_hits: u64,
+    pub llc_misses: u64,
+    pub mshr_stalls: u64,
+    pub serve_arrivals: u64,
+    pub serve_admitted: u64,
+    pub serve_completed: u64,
+    pub serve_in_slo: u64,
+    pub serve_timed_out: u64,
+    pub serve_shed: u64,
+    pub serve_rejected: u64,
+}
+
+/// Cumulative expander/fabric counters plus switch-side gauges, sampled
+/// either at the tick (direct attach, serial pool) or during the barrier
+/// replay (sharded pool — see the module docs).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FabricSample {
+    pub port_queue: u64,
+    pub devload: u8,
+    pub ds_buffered: u64,
+    pub cache_lines: u64,
+    pub cache_dirty: u64,
+    pub cache_wb_pending: u64,
+    pub ras_degraded: u64,
+    pub qos_rate: u64,
+    pub ingress: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub ds_intercepts: u64,
+    pub ep_cache_hits: u64,
+    pub media_reads: u64,
+    pub faults: u64,
+    pub gc_episodes: u64,
+    pub sr_issued: u64,
+    pub sr_suppressed: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_writebacks: u64,
+    pub ras_retries: u64,
+    pub ras_failovers: u64,
+    pub tier_promotions: u64,
+    pub tier_demotions: u64,
+    pub throttle_waits: u64,
+    pub backpressure: u64,
+    pub load_count: u64,
+    pub load_ps: f64,
+    pub store_count: u64,
+    pub store_ps: f64,
+}
+
+/// The armed flight recorder owned by one `System`.
+pub struct TelemetryState {
+    spec: TelemetrySpec,
+    frames: Vec<Frame>,
+    dropped: u64,
+    ticks: u64,
+    /// Local halves awaiting their fabric halves, in tick order. Depth 1
+    /// outside sharded parallel phases; bounded by pending deferred ops
+    /// inside them.
+    pending: VecDeque<LocalSample>,
+    prev_local: LocalSample,
+    prev_fabric: FabricSample,
+    /// Cumulative expander-op latency accumulators, fed from the fabric
+    /// side of the load/store paths so sharded replay reproduces them in
+    /// serial order.
+    load_count: u64,
+    load_ps: f64,
+    store_count: u64,
+    store_ps: f64,
+}
+
+impl TelemetryState {
+    /// Build the recorder, or `None` when the spec is inert (disabled or
+    /// zero cadence) — the structural-inertness lever.
+    pub fn new(spec: &TelemetrySpec) -> Option<TelemetryState> {
+        if !spec.enabled || spec.epoch == 0 {
+            return None;
+        }
+        Some(TelemetryState {
+            spec: *spec,
+            frames: Vec::new(),
+            dropped: 0,
+            ticks: 0,
+            pending: VecDeque::new(),
+            prev_local: LocalSample::default(),
+            prev_fabric: FabricSample::default(),
+            load_count: 0,
+            load_ps: 0.0,
+            store_count: 0,
+            store_ps: 0.0,
+        })
+    }
+
+    /// Sampling cadence (ps).
+    pub fn epoch(&self) -> Time {
+        self.spec.epoch
+    }
+
+    /// `TelemetryTick` calendar events executed so far. The coordinator
+    /// subtracts this from the popped-event count so `events` stays
+    /// fingerprint-identical to a disabled run.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Record one executed tick event.
+    pub fn on_tick(&mut self) {
+        self.ticks += 1;
+    }
+
+    /// Fabric-side latency feed: one expander load completed routing.
+    pub fn note_load(&mut self, lat_ps: Time) {
+        self.load_count += 1;
+        self.load_ps += lat_ps as f64;
+    }
+
+    /// Fabric-side latency feed: one expander writeback acked.
+    pub fn note_store(&mut self, lat_ps: Time) {
+        self.store_count += 1;
+        self.store_ps += lat_ps as f64;
+    }
+
+    /// Cumulative load-latency accumulator `(count, sum_ps)` — the
+    /// coordinator copies it into each [`FabricSample`].
+    pub fn load_acc(&self) -> (u64, f64) {
+        (self.load_count, self.load_ps)
+    }
+
+    /// Cumulative store-latency accumulator `(count, sum_ps)`.
+    pub fn store_acc(&self) -> (u64, f64) {
+        (self.store_count, self.store_ps)
+    }
+
+    /// Stage 1 of a capture: the tenant-local half, taken at the tick.
+    pub fn push_local(&mut self, s: LocalSample) {
+        self.pending.push_back(s);
+    }
+
+    /// Stage 2 of a capture: the fabric half. Completes the oldest
+    /// pending local half into a finished [`Frame`].
+    pub fn complete_fabric(&mut self, f: FabricSample) {
+        let Some(l) = self.pending.pop_front() else { return };
+        let frame = Frame {
+            seq: self.frames.len() as u64 + self.dropped,
+            at: l.at,
+            mshr: l.mshr,
+            serve_queue: l.serve_queue,
+            serve_inflight: l.serve_inflight,
+            d_llc_hits: l.llc_hits - self.prev_local.llc_hits,
+            d_llc_misses: l.llc_misses - self.prev_local.llc_misses,
+            d_mshr_stalls: l.mshr_stalls - self.prev_local.mshr_stalls,
+            d_serve_arrivals: l.serve_arrivals - self.prev_local.serve_arrivals,
+            d_serve_admitted: l.serve_admitted - self.prev_local.serve_admitted,
+            d_serve_completed: l.serve_completed - self.prev_local.serve_completed,
+            d_serve_in_slo: l.serve_in_slo - self.prev_local.serve_in_slo,
+            d_serve_timed_out: l.serve_timed_out - self.prev_local.serve_timed_out,
+            d_serve_shed: l.serve_shed - self.prev_local.serve_shed,
+            d_serve_rejected: l.serve_rejected - self.prev_local.serve_rejected,
+            port_queue: f.port_queue,
+            devload: f.devload,
+            ds_buffered: f.ds_buffered,
+            cache_lines: f.cache_lines,
+            cache_dirty: f.cache_dirty,
+            cache_wb_pending: f.cache_wb_pending,
+            ras_degraded: f.ras_degraded,
+            qos_rate: f.qos_rate,
+            ingress: f.ingress,
+            d_loads: f.loads - self.prev_fabric.loads,
+            d_stores: f.stores - self.prev_fabric.stores,
+            d_ds_intercepts: f.ds_intercepts - self.prev_fabric.ds_intercepts,
+            d_ep_cache_hits: f.ep_cache_hits - self.prev_fabric.ep_cache_hits,
+            d_media_reads: f.media_reads - self.prev_fabric.media_reads,
+            d_faults: f.faults - self.prev_fabric.faults,
+            d_gc_episodes: f.gc_episodes - self.prev_fabric.gc_episodes,
+            d_sr_issued: f.sr_issued - self.prev_fabric.sr_issued,
+            d_sr_suppressed: f.sr_suppressed - self.prev_fabric.sr_suppressed,
+            d_cache_hits: f.cache_hits - self.prev_fabric.cache_hits,
+            d_cache_misses: f.cache_misses - self.prev_fabric.cache_misses,
+            d_cache_writebacks: f.cache_writebacks - self.prev_fabric.cache_writebacks,
+            d_ras_retries: f.ras_retries - self.prev_fabric.ras_retries,
+            d_ras_failovers: f.ras_failovers - self.prev_fabric.ras_failovers,
+            d_tier_promotions: f.tier_promotions - self.prev_fabric.tier_promotions,
+            d_tier_demotions: f.tier_demotions - self.prev_fabric.tier_demotions,
+            d_throttle_waits: f.throttle_waits - self.prev_fabric.throttle_waits,
+            d_backpressure: f.backpressure - self.prev_fabric.backpressure,
+            d_load_count: f.load_count - self.prev_fabric.load_count,
+            d_load_ps: f.load_ps - self.prev_fabric.load_ps,
+            d_store_count: f.store_count - self.prev_fabric.store_count,
+            d_store_ps: f.store_ps - self.prev_fabric.store_ps,
+        };
+        // Snapshots advance even when the frame is dropped, so later
+        // frames stay correct deltas of their own windows.
+        self.prev_local = l;
+        self.prev_fabric = f;
+        if self.frames.len() < self.spec.max_frames {
+            self.frames.push(frame);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// True when a final residual frame would record nothing new — the
+    /// coordinator skips the capture entirely then (a run whose last
+    /// tick already drained everything).
+    pub fn residual_needed(&self, l: &LocalSample, f: &FabricSample) -> bool {
+        let mut probe = LocalSample { at: self.prev_local.at, ..*l };
+        probe.mshr = self.prev_local.mshr;
+        probe.serve_queue = self.prev_local.serve_queue;
+        probe.serve_inflight = self.prev_local.serve_inflight;
+        probe != self.prev_local || {
+            let mut pf = *f;
+            pf.port_queue = self.prev_fabric.port_queue;
+            pf.devload = self.prev_fabric.devload;
+            pf.ds_buffered = self.prev_fabric.ds_buffered;
+            pf.cache_lines = self.prev_fabric.cache_lines;
+            pf.cache_dirty = self.prev_fabric.cache_dirty;
+            pf.cache_wb_pending = self.prev_fabric.cache_wb_pending;
+            pf.ras_degraded = self.prev_fabric.ras_degraded;
+            pf.qos_rate = self.prev_fabric.qos_rate;
+            pf.ingress = self.prev_fabric.ingress;
+            pf != self.prev_fabric
+        }
+    }
+
+    /// Capture the run-final residual frame (conservation: deltas must
+    /// sum to the final totals) and emit the report. Called from
+    /// `System::harvest` with both halves sampled directly — deferral is
+    /// always off by then.
+    pub fn finalize(&mut self, l: LocalSample, f: FabricSample) -> TelemetryReport {
+        // A straggling pending half would shift the local/fabric pairing;
+        // complete it against the final fabric sample first (cannot
+        // happen on a drained run — purely defensive).
+        while !self.pending.is_empty() {
+            self.complete_fabric(f);
+        }
+        if self.residual_needed(&l, &f) {
+            self.push_local(l);
+            self.complete_fabric(f);
+        }
+        let frames = std::mem::take(&mut self.frames);
+        let alerts = health::scan(&frames, &HealthSpec::default());
+        TelemetryReport {
+            epoch: self.spec.epoch,
+            frames,
+            ticks: self.ticks,
+            dropped: self.dropped,
+            alerts,
+        }
+    }
+}
+
+/// The run-final telemetry payload carried (fingerprint-exempt) on
+/// `RunMetrics::telemetry`.
+#[derive(Debug, Clone, Default)]
+pub struct TelemetryReport {
+    /// Sampling cadence (ps).
+    pub epoch: Time,
+    /// The frame stream, oldest first; the final frame is the harvest
+    /// residual.
+    pub frames: Vec<Frame>,
+    /// Tick events executed (subtracted from the `events` metric).
+    pub ticks: u64,
+    /// Frames discarded past `max_frames`.
+    pub dropped: u64,
+    /// Health-monitor alerts over the frame stream, in frame order.
+    pub alerts: Vec<Alert>,
+}
+
+impl TelemetryReport {
+    /// Sum a counter delta across the frame stream (= the run total for
+    /// conserved counters).
+    pub fn total(&self, field: impl Fn(&Frame) -> u64) -> u64 {
+        self.frames.iter().map(field).sum()
+    }
+
+    /// Convert one frame metric into the shared [`Series`]
+    /// representation (bucket = the frame epoch; frames that recorded no
+    /// samples for the metric are skipped, matching `Series::series`'s
+    /// empty-bucket behaviour). Known metrics: `load-latency-ns`,
+    /// `store-latency-ns`, `ingress-occupancy`, `serve-queue`,
+    /// `serve-miss-rate`, `ds-buffered`. Unknown names yield an empty
+    /// series.
+    pub fn series(&self, metric: &str) -> Series {
+        let mut s = Series::new(metric, self.epoch.max(1));
+        let mut start = 0;
+        for fr in &self.frames {
+            match metric {
+                "load-latency-ns" if fr.d_load_count > 0 => s.record(start, fr.load_mean_ns()),
+                "store-latency-ns" if fr.d_store_count > 0 => {
+                    s.record(start, fr.store_mean_ns())
+                }
+                "ingress-occupancy" => s.record(start, fr.ingress as f64),
+                "serve-queue" => s.record(start, fr.serve_queue as f64),
+                "serve-miss-rate" if fr.d_serve_arrivals > 0 => {
+                    s.record(start, fr.serve_missed() as f64 / fr.d_serve_arrivals as f64)
+                }
+                "ds-buffered" => s.record(start, fr.ds_buffered as f64),
+                _ => {}
+            }
+            start = fr.at;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spec_builds_nothing() {
+        assert!(TelemetryState::new(&TelemetrySpec::default()).is_none());
+        let zero = TelemetrySpec { enabled: true, epoch: 0, ..Default::default() };
+        assert!(TelemetryState::new(&zero).is_none());
+        let armed = TelemetrySpec { enabled: true, ..Default::default() };
+        assert!(TelemetryState::new(&armed).is_some());
+    }
+
+    fn armed() -> TelemetryState {
+        TelemetryState::new(&TelemetrySpec { enabled: true, ..Default::default() }).unwrap()
+    }
+
+    #[test]
+    fn deltas_partition_the_cumulative_counters() {
+        let mut t = armed();
+        t.note_load(1000);
+        t.note_load(3000);
+        let (lc, lp) = t.load_acc();
+        t.push_local(LocalSample { at: 50 * US, llc_hits: 10, ..Default::default() });
+        t.complete_fabric(FabricSample {
+            loads: 2,
+            load_count: lc,
+            load_ps: lp,
+            ..Default::default()
+        });
+        t.note_load(5000);
+        let (lc, lp) = t.load_acc();
+        t.push_local(LocalSample { at: 100 * US, llc_hits: 25, ..Default::default() });
+        t.complete_fabric(FabricSample {
+            loads: 3,
+            load_count: lc,
+            load_ps: lp,
+            ..Default::default()
+        });
+        let rep = t.finalize(
+            LocalSample { at: 120 * US, llc_hits: 25, ..Default::default() },
+            FabricSample { loads: 3, load_count: 3, load_ps: 9000.0, ..Default::default() },
+        );
+        assert_eq!(rep.frames.len(), 2, "unchanged residual is skipped");
+        assert_eq!(rep.frames[0].d_llc_hits, 10);
+        assert_eq!(rep.frames[1].d_llc_hits, 15);
+        assert_eq!(rep.frames[0].d_loads, 2);
+        assert_eq!(rep.frames[1].d_loads, 1);
+        assert_eq!(rep.total(|f| f.d_llc_hits), 25);
+        assert_eq!(rep.total(|f| f.d_loads), 3);
+        assert_eq!(rep.frames[0].load_mean_ns(), 2.0);
+        assert_eq!(rep.frames[1].load_mean_ns(), 5.0);
+    }
+
+    #[test]
+    fn finalize_appends_the_residual_frame() {
+        let mut t = armed();
+        t.push_local(LocalSample { at: 50 * US, llc_hits: 4, ..Default::default() });
+        t.complete_fabric(FabricSample { loads: 1, ..Default::default() });
+        let rep = t.finalize(
+            LocalSample { at: 70 * US, llc_hits: 9, ..Default::default() },
+            FabricSample { loads: 6, ..Default::default() },
+        );
+        assert_eq!(rep.frames.len(), 2);
+        assert_eq!(rep.frames[1].at, 70 * US);
+        assert_eq!(rep.frames[1].d_llc_hits, 5);
+        assert_eq!(rep.total(|f| f.d_loads), 6);
+    }
+
+    #[test]
+    fn max_frames_drops_but_keeps_snapshots_consistent() {
+        let mut t = TelemetryState::new(&TelemetrySpec {
+            enabled: true,
+            max_frames: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        for i in 1..=3u64 {
+            t.push_local(LocalSample { at: i * 50 * US, llc_hits: i * 10, ..Default::default() });
+            t.complete_fabric(FabricSample::default());
+        }
+        let rep = t.finalize(
+            LocalSample { at: 200 * US, llc_hits: 30, ..Default::default() },
+            FabricSample::default(),
+        );
+        assert_eq!(rep.frames.len(), 1);
+        assert_eq!(rep.dropped, 2, "overflow frames are counted, not silently lost");
+        assert_eq!(rep.frames[0].d_llc_hits, 10);
+    }
+
+    #[test]
+    fn frame_rates_and_series_conversion() {
+        let mut frames = Vec::new();
+        frames.push(Frame {
+            at: 50 * US,
+            d_loads: 10,
+            d_ep_cache_hits: 4,
+            d_cache_hits: 3,
+            d_cache_misses: 1,
+            d_serve_arrivals: 8,
+            d_serve_timed_out: 1,
+            d_serve_shed: 1,
+            d_load_count: 10,
+            d_load_ps: 10_000.0,
+            ingress: 7,
+            ..Default::default()
+        });
+        let f = &frames[0];
+        assert_eq!(f.sr_hit_rate(), 0.4);
+        assert_eq!(f.cache_hit_rate(), 0.75);
+        assert_eq!(f.serve_missed(), 2);
+        let rep = TelemetryReport { epoch: 50 * US, frames, ..Default::default() };
+        let lat = rep.series("load-latency-ns");
+        assert_eq!(lat.series(), vec![(0, 1.0)]);
+        assert_eq!(rep.series("ingress-occupancy").series(), vec![(0, 7.0)]);
+        assert!(rep.series("no-such-metric").series().is_empty());
+        assert_eq!(rep.series("serve-miss-rate").series(), vec![(0, 0.25)]);
+    }
+}

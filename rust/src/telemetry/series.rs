@@ -1,28 +1,36 @@
-//! Time-series sampling for figures like Fig. 9e (latency + ingress-queue
-//! utilization around a garbage-collection episode).
+//! The one time-series representation (§19): fixed-interval bucketed
+//! samples with per-bucket means.
+//!
+//! [`Series`] started life as `sim::timeline::Timeline`, the ad-hoc
+//! Fig. 9e DS time series; the flight recorder adopted it as the common
+//! currency every telemetry consumer reads — `Fig9eSeries` carries three
+//! of them (bit-identically to the pre-telemetry figure), and
+//! [`super::TelemetryReport::series`] converts a frame stream into the
+//! same shape so one plotting/printing path serves both. `crate::sim`
+//! re-exports it under the historical `Timeline` name.
 
-use super::Time;
+use crate::sim::Time;
 
-/// Hard ceiling on a timeline's bucket count: samples past
+/// Hard ceiling on a series' bucket count: samples past
 /// `MAX_BUCKETS x bucket` saturate into the last bucket instead of
 /// growing the vectors, so a multi-day diurnal serve run cannot inflate
-/// a timeline unbounded (memory stays O(MAX_BUCKETS) per series).
+/// a series unbounded (memory stays O(MAX_BUCKETS) per series).
 pub const MAX_BUCKETS: usize = 1 << 16;
 
 /// Fixed-interval time series: samples are bucketed into `bucket` wide
-//  windows and averaged within each bucket.
+/// windows and averaged within each bucket.
 #[derive(Debug, Clone)]
-pub struct Timeline {
+pub struct Series {
     bucket: Time,
     sums: Vec<f64>,
     counts: Vec<u64>,
     label: String,
 }
 
-impl Timeline {
+impl Series {
     pub fn new(label: &str, bucket: Time) -> Self {
         assert!(bucket > 0);
-        Timeline { bucket, sums: Vec::new(), counts: Vec::new(), label: label.to_string() }
+        Series { bucket, sums: Vec::new(), counts: Vec::new(), label: label.to_string() }
     }
 
     pub fn label(&self) -> &str {
@@ -73,7 +81,7 @@ mod tests {
 
     #[test]
     fn buckets_and_averages() {
-        let mut tl = Timeline::new("lat", 100);
+        let mut tl = Series::new("lat", 100);
         tl.record(10, 2.0);
         tl.record(20, 4.0);
         tl.record(250, 10.0);
@@ -83,7 +91,7 @@ mod tests {
 
     #[test]
     fn skips_empty_buckets() {
-        let mut tl = Timeline::new("q", 10);
+        let mut tl = Series::new("q", 10);
         tl.record(5, 1.0);
         tl.record(95, 9.0);
         let s = tl.series();
@@ -93,7 +101,7 @@ mod tests {
 
     #[test]
     fn bucket_count_saturates_at_the_cap() {
-        let mut tl = Timeline::new("diurnal", 10);
+        let mut tl = Series::new("diurnal", 10);
         // Far past the horizon: both land in the final bucket instead of
         // resizing the vectors to the sample's own index.
         let horizon = MAX_BUCKETS as Time * 10;
@@ -109,7 +117,7 @@ mod tests {
 
     #[test]
     fn max_mean() {
-        let mut tl = Timeline::new("x", 10);
+        let mut tl = Series::new("x", 10);
         assert!(tl.is_empty());
         tl.record(0, 1.0);
         tl.record(11, 7.0);

@@ -96,6 +96,87 @@ impl fmt::Display for Json {
     }
 }
 
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+impl From<f64> for Json {
+    fn from(n: f64) -> Json {
+        Json::Num(n)
+    }
+}
+impl From<u64> for Json {
+    fn from(n: u64) -> Json {
+        Json::Num(n as f64)
+    }
+}
+impl From<u32> for Json {
+    fn from(n: u32) -> Json {
+        Json::Num(n as f64)
+    }
+}
+impl From<u8> for Json {
+    fn from(n: u8) -> Json {
+        Json::Num(n as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(n: usize) -> Json {
+        Json::Num(n as f64)
+    }
+}
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Json {
+        Json::Arr(v)
+    }
+}
+
+/// Chainable object builder — the one escaping-correct way to assemble
+/// report documents (bench reports, `--trace-out`, `--telemetry-out`),
+/// replacing the ad-hoc `format!` JSON emitters that broke on `"` or
+/// `\` in a config name.
+#[derive(Debug, Default)]
+pub struct JsonObj(BTreeMap<String, Json>);
+
+impl JsonObj {
+    pub fn new() -> JsonObj {
+        JsonObj(BTreeMap::new())
+    }
+
+    /// Insert a key (last write wins, keys render sorted).
+    pub fn set(mut self, key: &str, value: impl Into<Json>) -> JsonObj {
+        self.0.insert(key.to_string(), value.into());
+        self
+    }
+
+    pub fn build(self) -> Json {
+        Json::Obj(self.0)
+    }
+}
+
+impl From<JsonObj> for Json {
+    fn from(o: JsonObj) -> Json {
+        o.build()
+    }
+}
+
+/// Write a document to `path` with a trailing newline; errors carry the
+/// path. The single exit point for every JSON artifact the binaries emit.
+pub fn write_file(path: &str, doc: &Json) -> Result<(), String> {
+    std::fs::write(path, format!("{doc}\n")).map_err(|e| format!("{path}: {e}"))
+}
+
 fn quote(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
@@ -334,5 +415,27 @@ mod tests {
     fn empty_containers() {
         assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn builder_escapes_hostile_keys_and_values() {
+        let doc: Json = JsonObj::new()
+            .set("name", "cfg\"with\\quotes")
+            .set("ops", 12u64)
+            .set("ratio", 1.5)
+            .set("ok", true)
+            .set("rows", vec![Json::from(1u64), Json::from("x")])
+            .into();
+        let text = doc.to_string();
+        let back = parse(&text).unwrap();
+        assert_eq!(back.get("name").unwrap().as_str(), Some("cfg\"with\\quotes"));
+        assert_eq!(back.get("ops").unwrap().as_u64(), Some(12));
+        assert_eq!(back.get("rows").unwrap().idx(1).unwrap().as_str(), Some("x"));
+    }
+
+    #[test]
+    fn builder_last_write_wins() {
+        let doc = JsonObj::new().set("k", 1u64).set("k", 2u64).build();
+        assert_eq!(doc.get("k").unwrap().as_u64(), Some(2));
     }
 }

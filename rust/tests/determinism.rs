@@ -423,6 +423,109 @@ fn armed_tracing_is_fingerprint_identical_to_disabled() {
     }
 }
 
+/// The telemetry-inertness identity (DESIGN.md §19): arming the flight
+/// recorder changes *no bit* of any fingerprinted metric at any
+/// cadence. The recorder draws no RNG and adds no latency — its tick
+/// events only read state, and `harvest` subtracts them from the
+/// fingerprinted event count — so an armed run must be fingerprint-
+/// identical to the disabled run on every config family it samples.
+/// The telemetry report itself is fingerprint-exempt.
+#[test]
+fn armed_telemetry_is_fingerprint_identical_to_disabled() {
+    for (name, media, wl) in [
+        ("cxl", MediaKind::Ddr5, "gnn"),
+        ("cxl-cache", MediaKind::Znand, "hot75"),
+        ("cxl-pool-qos", MediaKind::Znand, "bfs"),
+        ("cxl-ras", MediaKind::Znand, "bfs"),
+        ("cxl-serve", MediaKind::Ddr5, "vadd"),
+    ] {
+        let off = System::new(spec(wl), &small(name, media)).run();
+        for epoch in [5 * cxl_gpu::sim::US, 50 * cxl_gpu::sim::US, cxl_gpu::sim::MS] {
+            let mut cfg = small(name, media);
+            cfg.telemetry.enabled = true;
+            cfg.telemetry.epoch = epoch;
+            let on = System::new(spec(wl), &cfg).run();
+            assert_eq!(
+                fingerprint(&off),
+                fingerprint(&on),
+                "{name}/{wl} on {media:?}: telemetry at {epoch} ps perturbed the run"
+            );
+            assert!(off.telemetry.is_none(), "disabled run must carry no report");
+            let rep = on.telemetry.as_ref().expect("armed run must carry a report");
+            assert!(!rep.frames.is_empty(), "{name}/{wl}: armed recorder saw no frames");
+        }
+    }
+}
+
+/// Armed telemetry itself replays bit-for-bit: same frames (every gauge,
+/// delta and f64 latency accumulator compared through `Frame`'s
+/// `PartialEq`), same alerts, across repeated runs — the report is
+/// fingerprint-exempt, so it gets its own reproducibility check.
+#[test]
+fn armed_telemetry_reports_replay_bit_for_bit() {
+    let mut cfg = small("cxl-ras", MediaKind::Znand);
+    cfg.ras.crc_error_rate = 1e-3;
+    cfg.telemetry.enabled = true;
+    cfg.telemetry.epoch = 10 * cxl_gpu::sim::US;
+    let a = System::new(spec("bfs"), &cfg).run();
+    let b = System::new(spec("bfs"), &cfg).run();
+    assert_eq!(fingerprint(&a), fingerprint(&b), "armed cxl-ras run diverged");
+    let (ra, rb) = (a.telemetry.as_ref().unwrap(), b.telemetry.as_ref().unwrap());
+    assert_eq!(ra.ticks, rb.ticks);
+    assert_eq!(ra.frames, rb.frames, "frame streams diverged");
+    assert_eq!(ra.alerts.len(), rb.alerts.len());
+    for (aa, ab) in ra.alerts.iter().zip(&rb.alerts) {
+        assert_eq!((aa.at, aa.frame, aa.kind), (ab.at, ab.frame, ab.kind));
+    }
+}
+
+/// Sharded-pool telemetry equivalence: the deferred fabric half of each
+/// frame replays at the same global (time, tenant) slot the serial
+/// interleave samples at, so every tenant's frame stream — gauges,
+/// deltas, f64 latency sums — must be bit-identical between the serial
+/// pool and the sharded runner at any thread count.
+#[test]
+fn sharded_pool_telemetry_frames_match_serial_bit_for_bit() {
+    use cxl_gpu::fabric::{run_pool, run_pool_sharded, Tenant};
+    let tenants = |name: &str| -> Vec<Tenant> {
+        [("bfs", 8usize, 4usize), ("vadd", 16, 2), ("sort", 4, 8)]
+            .iter()
+            .map(|&(wl, warps, mlp)| {
+                let mut cfg = SystemConfig::named(name, MediaKind::Ddr5);
+                cfg.total_ops = 6_000;
+                cfg.warps = warps;
+                cfg.mlp = mlp;
+                cfg.footprint = 4 << 20;
+                cfg.local_bytes = 256 << 10;
+                cfg.telemetry.enabled = true;
+                cfg.telemetry.epoch = 10 * cxl_gpu::sim::US;
+                Tenant { workload: spec(wl), cfg }
+            })
+            .collect()
+    };
+    let serial = run_pool(&tenants("cxl-pool")).expect("serial pool");
+    let sharded =
+        run_pool_sharded(&tenants("cxl-pool-shard"), 4, Some(4)).expect("sharded pool");
+    for (ta, tb) in serial.tenants.iter().zip(&sharded.tenants) {
+        assert_eq!(
+            fingerprint(&ta.metrics),
+            fingerprint(&tb.metrics),
+            "tenant {} metrics diverged",
+            ta.workload
+        );
+        let (ra, rb) = (
+            ta.metrics.telemetry.as_ref().expect("serial tenant report"),
+            tb.metrics.telemetry.as_ref().expect("sharded tenant report"),
+        );
+        assert!(!ra.frames.is_empty(), "tenant {} recorded no frames", ta.workload);
+        assert_eq!(
+            ra.frames, rb.frames,
+            "tenant {} frame streams diverged between serial and sharded",
+            ta.workload
+        );
+    }
+}
+
 /// Armed tracing itself replays bit-for-bit: same spans, same stage
 /// sums, same ring contents across repeated runs (the report is exempt
 /// from the fingerprint, so it gets its own reproducibility check).

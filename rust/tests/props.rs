@@ -1158,3 +1158,91 @@ fn prop_span_ledger_conserves_end_to_end_latency() {
         Ok(())
     });
 }
+
+/// Frame-delta conservation end to end through the simulator (DESIGN.md
+/// §19): under randomized configs spanning every instrumented family —
+/// direct, SR, device-cache, pooled fabric with QoS, RAS with armed
+/// fault rates, the serving front door, tiering, UVM — the flight
+/// recorder's per-frame counter deltas must sum *exactly* (u64, no
+/// epsilon) to the run-final `RunMetrics` totals for every sampled
+/// counter, with zero frames dropped. The residual frame appended at
+/// harvest is what closes the books; any double count or missed source
+/// breaks this for some config family.
+#[test]
+fn prop_telemetry_frame_deltas_sum_to_run_totals() {
+    use cxl_gpu::coordinator::config::SystemConfig;
+    use cxl_gpu::coordinator::system::System;
+    use cxl_gpu::media::MediaKind;
+    use cxl_gpu::sim::US;
+    use cxl_gpu::workloads::table1b::spec;
+    check("telemetry-conservation", 0x7E1E, 10, |g| {
+        const FAMILIES: [&str; 8] = [
+            "cxl", "cxl-sr", "cxl-cache", "cxl-pool-qos", "cxl-ras", "cxl-serve", "cxl-tier",
+            "uvm",
+        ];
+        let name = FAMILIES[g.usize("family", 0, FAMILIES.len() - 1)];
+        let media = if g.bool("znand", 0.7) { MediaKind::Znand } else { MediaKind::Ddr5 };
+        let wl = if g.bool("hot", 0.5) { "hot75" } else { "bfs" };
+        let mut cfg = SystemConfig::named(name, media);
+        cfg.total_ops = 6_000;
+        cfg.ssd_scale();
+        cfg.seed = g.u64("seed", 0, 1 << 30);
+        cfg.warps = g.usize("warps", 1, 8);
+        cfg.mlp = g.usize("mlp", 1, 8);
+        if name == "cxl-ras" {
+            // Hot enough that retries and failovers actually fire.
+            cfg.ras.crc_error_rate = g.u64("crc_ppm", 100, 2_000) as f64 * 1e-6;
+            cfg.ras.degrade_at = g.u64("degrade_us", 20, 500) * US;
+            cfg.ras.degrade_penalty = 10 * US;
+        }
+        cfg.telemetry.enabled = true;
+        cfg.telemetry.epoch = *g.choose("epoch_us", &[2u64, 10, 50]) * US;
+        let m = System::new(spec(wl), &cfg).run();
+        let rep = m.telemetry.as_ref().ok_or("armed run produced no telemetry report")?;
+        if rep.frames.is_empty() {
+            return Err(format!("{name}/{wl}: no frames recorded"));
+        }
+        if rep.dropped != 0 {
+            return Err(format!("{name}/{wl}: {} frames dropped", rep.dropped));
+        }
+        use cxl_gpu::telemetry::Frame;
+        let pairs: [(&str, fn(&Frame) -> u64, u64); 20] = [
+            ("loads", |f| f.d_loads, m.expander_loads),
+            ("stores", |f| f.d_stores, m.expander_stores),
+            ("llc_hits", |f| f.d_llc_hits, m.llc.hits),
+            ("llc_misses", |f| f.d_llc_misses, m.llc.misses),
+            ("mshr_stalls", |f| f.d_mshr_stalls, m.llc.mshr_stalls),
+            ("ds_intercepts", |f| f.d_ds_intercepts, m.ds_intercepts),
+            ("ep_cache_hits", |f| f.d_ep_cache_hits, m.ep_cache_hits),
+            ("media_reads", |f| f.d_media_reads, m.media_reads),
+            ("faults", |f| f.d_faults, m.faults),
+            ("gc_episodes", |f| f.d_gc_episodes, m.gc_episodes),
+            ("sr_issued", |f| f.d_sr_issued, m.sr_issued),
+            ("cache_hits", |f| f.d_cache_hits, m.cache_hits),
+            ("cache_misses", |f| f.d_cache_misses, m.cache_misses),
+            ("cache_writebacks", |f| f.d_cache_writebacks, m.cache_writebacks),
+            ("ras_retries", |f| f.d_ras_retries, m.ras_retries),
+            ("ras_failovers", |f| f.d_ras_failovers, m.ras_failovers),
+            ("tier_promotions", |f| f.d_tier_promotions, m.tier_promotions),
+            ("tier_demotions", |f| f.d_tier_demotions, m.tier_demotions),
+            ("serve_arrivals", |f| f.d_serve_arrivals, m.serve_arrivals),
+            ("serve_completed", |f| f.d_serve_completed, m.serve_completed),
+        ];
+        for (field, get, want) in pairs {
+            let got = rep.total(get);
+            if got != want {
+                return Err(format!(
+                    "{name}/{wl}/{media:?}: frame deltas for {field} sum to {got}, run total is {want}"
+                ));
+            }
+        }
+        // The latency sample counts ride the same path as the sums.
+        if rep.total(|f| f.d_load_count) != m.expander_loads {
+            return Err(format!("{name}/{wl}: load latency sample count diverged"));
+        }
+        if rep.total(|f| f.d_store_count) != m.expander_stores {
+            return Err(format!("{name}/{wl}: store latency sample count diverged"));
+        }
+        Ok(())
+    });
+}
